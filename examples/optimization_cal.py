@@ -1,0 +1,41 @@
+"""Full-core optimization demo (paper Fig. 3F): a 16x16 king's-move MaxCut
+whose ground state spells C-A-L, solved by the asynchronous PASS dynamics,
+with int8-quantized weights exactly like the silicon.
+
+    PYTHONPATH=src python examples/optimization_cal.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import annealing, ising, problems, samplers
+
+
+def show(s):
+    for row in np.asarray(s):
+        print("".join("#" if v > 0 else "." for v in row))
+
+
+def main():
+    lat = problems.cal_problem()
+    lat = ising.quantize_lattice(lat, bits=8)  # chip's int8 weight grid
+    template = problems.cal_template()
+
+    s0 = samplers.random_init(jax.random.key(0), lat.shape)
+    print("initial (random) state:")
+    show(s0)
+
+    # PASS asynchronous tau-leap dynamics with a gentle anneal (the paper's
+    # 'counter that uniformly decreases the weights' future-work mode)
+    betas = annealing.linear_schedule(0.4, 2.0, 1200)
+    s, e = annealing.annealed_tau_leap_lattice(lat, jax.random.key(1), s0, betas, n_steps=1200)
+
+    print("\nafter 1200 async steps:")
+    show(s)
+    agree = float(jnp.abs(jnp.mean(s * template)))
+    print(f"\nenergy: {float(e):.1f}  (ground state: {float(lat.energy(jnp.asarray(template))):.1f})")
+    print(f"template agreement |m|: {agree:.3f}  (1.0 = perfect C-A-L)")
+
+
+if __name__ == "__main__":
+    main()

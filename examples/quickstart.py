@@ -1,0 +1,40 @@
+"""Quickstart: sample a 4-node MaxCut problem with the PASS async sampler
+(paper Fig. 3A) and print the sampled distribution vs the exact one.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import ctmc, ising, samplers
+
+
+def main():
+    # the paper's 4-node MaxCut: a square ring, antiferromagnetic J=+1
+    J = np.zeros((4, 4))
+    for i, j in [(0, 1), (1, 2), (2, 3), (3, 0)]:
+        J[i, j] = J[j, i] = 1.0
+    prob = ising.DenseIsing(J=jnp.asarray(J, jnp.float32), b=jnp.zeros(4))
+
+    states, p_exact = ising.enumerate_boltzmann(prob)
+
+    # PASS asynchronous dynamics (exact event-driven CTMC)
+    s0 = samplers.random_init(jax.random.key(0), (4,))
+    run = ctmc.gillespie(prob, jax.random.key(1), s0, n_events=60_000, sample_every=1)
+    p_model = np.asarray(ctmc.time_weighted_distribution(run, 4))
+
+    print("state     exact   sampled")
+    for idx in np.argsort(-p_exact)[:6]:
+        bits = "".join("+" if b > 0 else "-" for b in states[idx])
+        print(f"{bits}      {p_exact[idx]:.3f}   {p_model[idx]:.3f}")
+    tv = 0.5 * np.abs(p_model - p_exact).sum()
+    print(f"\nTV distance: {tv:.4f}")
+    top2 = set(np.argsort(-p_model)[:2])
+    want = set(np.argsort(-p_exact)[:2])
+    print("ground states found:", "YES" if top2 == want else "NO",
+          "(the two antiphase cuts +-+- / -+-+)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.configs.base import ModelConfig, MoEConfig, ShapeConfig, SHAPES  # noqa: F401
+from repro.configs.registry import (  # noqa: F401
+    cell_skip_reason,
+    cells,
+    get_config,
+    get_shape,
+    list_archs,
+)

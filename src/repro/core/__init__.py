@@ -1,0 +1,26 @@
+"""repro.core — the PASS paper's contribution as a composable JAX library.
+
+Public API:
+  ising       — problem representations (DenseIsing, LatticeIsing), energies
+  glauber     — conditionals, flip rates, sigmoid trims
+  samplers    — sync Gibbs baseline, chromatic Gibbs, tau-leap async (PASS)
+  ctmc        — exact event-driven CTMC (Gillespie), first-hit TTS
+  problems    — MaxCut / SK / CAL-letters generators
+  boltzmann   — multiplier-free contrastive-divergence training
+  decision    — fly neural-decision ring-attractor model
+  observables — ACF / lambda0 extraction, TTS scaling fits + bootstrap
+  annealing   — beta-ramped PASS dynamics (the paper's future-work mode)
+  tempering   — replica exchange over the async sampler (beyond-paper)
+"""
+from repro.core import (  # noqa: F401
+    annealing,
+    boltzmann,
+    ctmc,
+    decision,
+    glauber,
+    ising,
+    observables,
+    problems,
+    samplers,
+    tempering,
+)

@@ -1,0 +1,147 @@
+"""Multiplier-free generative Boltzmann-machine training (paper Fig. 4).
+
+The chip trains a fully-visible Boltzmann machine on its 16x16 king's-move
+core: weights live only on lattice edges, data is a batch of ±1 images, and
+the contrastive-divergence update (Eq. 3) is
+
+    dw_ij = alpha * ( E[s_i s_j]_data - E[s_i s_j]_model )
+    db_i  = alpha * ( E[s_i]_data    - E[s_i]_model )
+
+All quantities are products of ±1 values and batch averages — on the chip:
+AND gates + popcount + shift (no multipliers). Here the same arithmetic is
+expressed as sign-agreement counts so the multiplier-free structure is
+explicit (and testable against the naive product form).
+
+Model expectations come from any `repro.core` sampler; the paper uses the
+PASS chip (async) — we default to the tau-leap PASS model and also support
+exact chromatic Gibbs.
+
+NOTE the sign: with E = +sum J s s, LOWERING the energy of data states means
+moving J OPPOSITE the data correlation, hence dJ = -alpha * (corr_data -
+corr_model). (Equivalently Eq. 3 written for E = -sum w s s with w = -J.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import samplers
+from repro.core.ising import LatticeIsing, KING_OFFSETS, shift2d, quantize_lattice
+
+
+def pair_correlations(batch: jax.Array, H: int, W: int) -> jax.Array:
+    """(8, H, W) E[s(y,x) * s((y,x)+o_k)] over the batch, multiplier-free.
+
+    s_i * s_j for ±1 spins == 1 - 2*XOR(bit_i, bit_j); the mean over the
+    batch is therefore 1 - 2*mean(xor) — AND/popcount arithmetic only.
+    """
+    bits = batch > 0
+    ones = jnp.ones((H, W))
+    corr = []
+    for k, (dy, dx) in enumerate(KING_OFFSETS):
+        shifted_bits = shift2d(batch, dy, dx) > 0
+        valid = shift2d(ones, dy, dx) > 0.5  # neighbor inside the lattice
+        xor = jnp.logical_xor(bits, shifted_bits)
+        c = 1.0 - 2.0 * jnp.mean(xor.astype(jnp.float32), axis=0)
+        corr.append(jnp.where(valid, c, 0.0))
+    return jnp.stack(corr)
+
+
+@dataclasses.dataclass
+class CDConfig:
+    lr: float = 0.05
+    n_model_steps: int = 64      # sampler steps per CD iteration
+    dt: float = 0.25             # tau-leap dt (units of 1/lambda0)
+    sampler: str = "pass"        # 'pass' (tau-leap async) | 'chromatic'
+    quantize_bits: Optional[int] = 8   # chip programs int8 weights
+    weight_clip: float = 2.0     # keep weights in the DAC's representable range
+    n_chains: int = 32           # persistent chains for the model expectation
+
+
+@dataclasses.dataclass
+class CDState:
+    problem: LatticeIsing
+    chains: jax.Array  # (n_chains, H, W) persistent model chains
+    step: int
+
+
+def init_cd(key: jax.Array, H: int = 16, W: int = 16, cfg: CDConfig = CDConfig()) -> CDState:
+    w = jnp.zeros((8, H, W), jnp.float32)
+    b = jnp.zeros((H, W), jnp.float32)
+    problem = LatticeIsing(
+        w=w,
+        b=b,
+        clamp_mask=jnp.zeros((H, W), bool),
+        clamp_value=-jnp.ones((H, W), jnp.float32),
+        dead_mask=jnp.zeros((H, W), bool),
+    )
+    chains = samplers.random_init(key, (cfg.n_chains, H, W))
+    return CDState(problem=problem, chains=chains, step=0)
+
+
+def _model_samples(problem: LatticeIsing, chains: jax.Array, key: jax.Array, cfg: CDConfig):
+    keys = jax.random.split(key, chains.shape[0])
+    if cfg.sampler == "pass":
+        run = jax.vmap(
+            lambda s0, k: samplers.tau_leap_lattice(
+                problem, k, s0, n_steps=cfg.n_model_steps, dt=cfg.dt
+            )
+        )(chains, keys)
+    else:
+        run = jax.vmap(
+            lambda s0, k: samplers.chromatic_gibbs(
+                problem, k, s0, n_sweeps=cfg.n_model_steps
+            )
+        )(chains, keys)
+    return run.s
+
+
+def cd_step(state: CDState, batch: jax.Array, key: jax.Array, cfg: CDConfig) -> CDState:
+    """One contrastive-divergence update on a (B, H, W) ±1 batch."""
+    H, W = state.problem.shape
+    model_s = _model_samples(state.problem, state.chains, key, cfg)
+
+    corr_data = pair_correlations(batch, H, W)
+    corr_model = pair_correlations(model_s, H, W)
+    mean_data = jnp.mean(batch, axis=0)
+    mean_model = jnp.mean(model_s, axis=0)
+
+    # E = +J s s convention => descend: J moves against the data correlation.
+    new_w = state.problem.w - cfg.lr * (corr_data - corr_model)
+    new_b = state.problem.b - cfg.lr * (mean_data - mean_model)
+    new_w = jnp.clip(new_w, -cfg.weight_clip, cfg.weight_clip)
+    new_b = jnp.clip(new_b, -cfg.weight_clip, cfg.weight_clip)
+
+    problem = dataclasses.replace(state.problem, w=new_w, b=new_b)
+    if cfg.quantize_bits:
+        problem = quantize_lattice(problem, cfg.quantize_bits)
+    return CDState(problem=problem, chains=model_s, step=state.step + 1)
+
+
+def reconstruct(
+    problem: LatticeIsing,
+    key: jax.Array,
+    partial_image: jax.Array,
+    known_mask: jax.Array,
+    n_steps: int = 256,
+    dt: float = 0.25,
+) -> jax.Array:
+    """Clamp `known_mask` pixels to `partial_image`, sample the rest (Fig 4C)."""
+    clamped = dataclasses.replace(
+        problem,
+        clamp_mask=known_mask,
+        clamp_value=partial_image.astype(problem.b.dtype),
+    )
+    k1, k2 = jax.random.split(key)
+    s0 = samplers.random_init(k1, problem.b.shape)
+    run = samplers.tau_leap_lattice(clamped, k2, s0, n_steps=n_steps, dt=dt)
+    return run.s
+
+
+def free_energy_proxy(problem: LatticeIsing, batch: jax.Array) -> jax.Array:
+    """Mean energy of the data under the model — a training progress proxy."""
+    return jnp.mean(jax.vmap(problem.energy)(batch))

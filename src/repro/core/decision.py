@@ -1,0 +1,115 @@
+"""Neural decision making on the PASS sampler (paper Fig. 5, Eqs. 12-15).
+
+An agent (fly) at position p navigates toward k targets. Each of N spins
+carries a goal vector pointing at its assigned target. The Hamiltonian is
+
+    H(s^t) = (-k/N) sum_{i!=j} J_ij s_i s_j + alpha_mem * sum_i s_i^{t-1} s_i^t
+    J_ij   = cos(pi * (|theta_ij| / pi)^eta)
+
+with theta_ij the angle between goal vectors i and j, and the second term the
+paper's memory-bias modification (the chip cannot seed state between runs, so
+the previous state enters as a bias field on the next run). After each
+sampling run the agent moves with velocity V = v0/N * sum_i p_hat_i s_i.
+
+We reuse DenseIsing by folding the (-k/N) prefactor and the memory bias into
+(J, b): E = sum_{i<j} J'_ij s_i s_j + b'.s with J'_ij = 2*(-k/N)*J_ij (the
+paper's sum over i!=j counts each pair twice) and b'_i = alpha_mem * s^{t-1}_i.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import samplers
+from repro.core.ising import DenseIsing
+
+
+@dataclasses.dataclass(frozen=True)
+class DecisionConfig:
+    n_neurons: int = 60
+    eta: float = 1.0           # geometry-encoding exponent
+    alpha_mem: float = -0.25   # memory bias (negative: E favors persistence)
+    v0: float = 12.0           # speed per outer step
+    n_sampler_steps: int = 48  # tau-leap steps per decision (~41us on chip)
+    dt: float = 0.25
+    max_steps: int = 220
+    arrive_radius: float = 40.0
+
+
+class Trajectory(NamedTuple):
+    positions: jax.Array  # (T+1, 2)
+    spins: jax.Array      # (T, N)
+    arrived: jax.Array    # ()
+
+
+def couplings(pos: jax.Array, targets: jax.Array, assign: jax.Array, eta: float):
+    """(J_ij cos-geometry, goal unit vectors) at agent position `pos`."""
+    goal_vec = targets[assign] - pos[None, :]           # (N, 2)
+    norm = jnp.linalg.norm(goal_vec, axis=-1, keepdims=True)
+    ghat = goal_vec / jnp.maximum(norm, 1e-9)
+    cosang = jnp.clip(ghat @ ghat.T, -1.0, 1.0)
+    theta = jnp.arccos(cosang)                           # |theta_ij| in [0, pi]
+    J = jnp.cos(jnp.pi * (theta / jnp.pi) ** eta)
+    return J, ghat
+
+
+def _dense_problem(J_cos: jax.Array, prev_s: jax.Array, k: int, n: int, alpha_mem: float) -> DenseIsing:
+    scale = 2.0 * (-k / n)  # paper's i!=j double count -> our i<j convention
+    J = scale * J_cos
+    J = J - jnp.diag(jnp.diag(J))
+    b = alpha_mem * prev_s
+    return DenseIsing(J=J, b=b)
+
+
+def simulate(key: jax.Array, targets: np.ndarray, cfg: DecisionConfig) -> Trajectory:
+    """Run one agent trajectory from the origin."""
+    targets = jnp.asarray(targets, jnp.float32)
+    k = targets.shape[0]
+    n = cfg.n_neurons
+    assign = jnp.arange(n) % k  # neurons evenly assigned to targets
+
+    def outer(carry, key):
+        pos, s_prev, arrived = carry
+        J_cos, ghat = couplings(pos, targets, assign, cfg.eta)
+        problem = _dense_problem(J_cos, s_prev, k, n, cfg.alpha_mem)
+        run = samplers.tau_leap_dense(
+            problem, key, s_prev, n_steps=cfg.n_sampler_steps, dt=cfg.dt
+        )
+        s = run.s
+        # Velocity (Eq. 14) with the Boltzmann spin mapped to neural firing:
+        # s=+1 -> the neuron votes for its goal vector, s=-1 -> it is silent
+        # (a silent neuron contributes nothing; the ±1 literal reading makes
+        # the losing population *repel* the agent from all targets, which is
+        # not the ring-attractor behavior of Sridhar et al.).
+        firing = 0.5 * (s + 1.0)
+        V = cfg.v0 / n * jnp.sum(ghat * firing[:, None], axis=0) * 2.0
+        new_pos = pos + jnp.where(arrived, 0.0, V)
+        dist = jnp.min(jnp.linalg.norm(targets - new_pos[None, :], axis=-1))
+        arrived = arrived | (dist < cfg.arrive_radius)
+        return (new_pos, s, arrived), (new_pos, s)
+
+    keys = jax.random.split(key, cfg.max_steps)
+    pos0 = jnp.zeros((2,), jnp.float32)
+    s0 = jnp.ones((n,), jnp.float32)  # seeded toward consensus
+    (pos, s, arrived), (positions, spins) = jax.lax.scan(outer, (pos0, s0, False), keys)
+    positions = jnp.concatenate([pos0[None], positions], axis=0)
+    return Trajectory(positions=positions, spins=spins, arrived=arrived)
+
+
+def bifurcation_distance(traj_positions: jax.Array, targets: np.ndarray, tol: float = 0.25) -> jax.Array:
+    """Distance from origin at which the trajectory commits to one target.
+
+    Commit point: first step where the normalized direction to the nearest
+    target dominates the second-nearest by `tol` of the inter-target angle —
+    a simple, deterministic proxy for the paper's bifurcation point.
+    """
+    targets = jnp.asarray(targets, jnp.float32)
+    d = jnp.linalg.norm(targets[None, :, :] - traj_positions[:, None, :], axis=-1)
+    sorted_d = jnp.sort(d, axis=-1)
+    committed = (sorted_d[:, 1] - sorted_d[:, 0]) / (sorted_d[:, 1] + 1e-9) > tol
+    idx = jnp.argmax(committed)  # first True (0 if none -> handled by caller)
+    return jnp.linalg.norm(traj_positions[idx])

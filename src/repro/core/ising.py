@@ -1,0 +1,263 @@
+"""Ising / Boltzmann-machine problem representations.
+
+The paper's energy convention (Eq. 2):
+
+    E(s) = sum_{i<j} J_ij s_i s_j + sum_i b_i s_i,   s in {-1, +1}
+    p(s) = exp(-E(s)) / Z
+
+We store J as a symmetric matrix with zero diagonal and count each pair once
+in the energy (the paper's double sum over a symmetric J is the same model up
+to a factor of 2 absorbed into J; tests pin OUR convention against exact
+enumeration, and all samplers derive their conditionals from THIS energy).
+
+The local field of spin i is
+
+    h_i = sum_j J_ij s_j + b_i        (using the full symmetric J row)
+
+and the conditional Boltzmann distribution is
+
+    P(s_i = +1 | s_{-i}) = sigma(-2 h_i)
+
+(the minus sign because LOWER energy is MORE probable under p ∝ e^{-E}).
+
+Two problem classes:
+  * DenseIsing  — explicit (n, n) J matrix (SK, MaxCut instances).
+  * LatticeIsing — the PASS chip topology: (H, W) king's-move lattice with 8
+    neighbor-weight planes, int8-quantizable weights, clamp masks and
+    dead-neuron masks, exactly like the silicon's configuration chain
+    (8x8-bit weights + 8-bit bias + 2 clamp bits per neuron).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# King's move neighbor offsets, fixed order: (dy, dx).
+# Order matters: weight plane k of neuron (y, x) couples to (y+dy_k, x+dx_k).
+KING_OFFSETS: tuple[tuple[int, int], ...] = (
+    (-1, -1), (-1, 0), (-1, 1),
+    (0, -1),           (0, 1),
+    (1, -1), (1, 0), (1, 1),
+)
+
+# 4-coloring of the king's-move graph: color = (y % 2) * 2 + (x % 2).
+# Any two same-color sites differ by an even offset in both coords, which is
+# never a king's move, so same-color conditionals are independent -> exact
+# parallel (chromatic) Gibbs.
+N_KING_COLORS = 4
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=("J", "b"), meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class DenseIsing:
+    """Fully-specified Ising problem with a dense coupling matrix.
+
+    Attributes:
+      J: (n, n) symmetric float array, zero diagonal. Energy counts each
+         pair once: E = s^T (triu(J)) s + b.s  (== 0.5 s^T J s + b.s).
+      b: (n,) biases.
+    """
+
+    J: jax.Array
+    b: jax.Array
+
+    @property
+    def n(self) -> int:
+        return self.J.shape[-1]
+
+    def energy(self, s: jax.Array) -> jax.Array:
+        """E(s) for s in {-1,+1}^n; batched over leading dims of s."""
+        Js = jnp.einsum("ij,...j->...i", self.J, s.astype(self.J.dtype))
+        pair = 0.5 * jnp.sum(s * Js, axis=-1)
+        field = jnp.sum(self.b * s, axis=-1)
+        return pair + field
+
+    def local_fields(self, s: jax.Array) -> jax.Array:
+        """h_i = sum_j J_ij s_j + b_i (batched)."""
+        return jnp.einsum("ij,...j->...i", self.J, s.astype(self.J.dtype)) + self.b
+
+    def validate(self) -> None:
+        J = np.asarray(self.J)
+        assert J.ndim == 2 and J.shape[0] == J.shape[1]
+        np.testing.assert_allclose(J, J.T, atol=1e-6)
+        np.testing.assert_allclose(np.diag(J), 0.0, atol=1e-6)
+
+
+def conditional_prob_up(h: jax.Array) -> jax.Array:
+    """P(s_i=+1 | rest) = sigma(-2 h_i) under p ∝ exp(-E)."""
+    return jax.nn.sigmoid(-2.0 * h)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("w", "b", "clamp_mask", "clamp_value", "dead_mask"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class LatticeIsing:
+    """PASS-chip lattice: (H, W) neurons, king's-move couplings.
+
+    Attributes:
+      w: (8, H, W) neighbor weight planes, w[k, y, x] couples site (y,x) with
+         site (y,x)+KING_OFFSETS[k]. Symmetry constraint: the plane for offset
+         o at (y,x) equals the plane for -o at (y,x)+o. Built via
+         `lattice_from_pairs` which enforces it.
+      b: (H, W) biases.
+      clamp_mask: (H, W) bool — True where the neuron output is clamped
+         (the chip's 2 clamp bits).
+      clamp_value: (H, W) in {-1,+1} — the clamped output value.
+      dead_mask: (H, W) bool — True where the neuron is dead (never flips,
+         reads as -1); models the paper's unprogrammable neurons.
+    """
+
+    w: jax.Array
+    b: jax.Array
+    clamp_mask: jax.Array
+    clamp_value: jax.Array
+    dead_mask: jax.Array
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.w.shape[-2], self.w.shape[-1]
+
+    @property
+    def n(self) -> int:
+        h, w = self.shape
+        return h * w
+
+    def neighbor_sum(self, s: jax.Array) -> jax.Array:
+        """sum_k w_k(y,x) * s((y,x)+o_k), zero beyond the boundary.
+
+        s: (..., H, W) in {-1,+1}. Returns (..., H, W) float.
+        """
+        s = s.astype(self.w.dtype)
+        acc = jnp.zeros_like(s)
+        for k, (dy, dx) in enumerate(KING_OFFSETS):
+            shifted = shift2d(s, dy, dx)
+            acc = acc + self.w[k] * shifted
+        return acc
+
+    def local_fields(self, s: jax.Array) -> jax.Array:
+        return self.neighbor_sum(s) + self.b
+
+    def energy(self, s: jax.Array) -> jax.Array:
+        """Each pair counted once: 0.5 * sum_i s_i * (neighbor_sum_i) + b.s."""
+        s = s.astype(self.w.dtype)
+        pair = 0.5 * jnp.sum(s * self.neighbor_sum(s), axis=(-2, -1))
+        field = jnp.sum(self.b * s, axis=(-2, -1))
+        return pair + field
+
+    def to_dense(self) -> DenseIsing:
+        """Flatten to a DenseIsing (row-major site order) for oracles."""
+        H, W = self.shape
+        n = H * W
+        J = np.zeros((n, n), dtype=np.float64)
+        w = np.asarray(self.w, dtype=np.float64)
+        for k, (dy, dx) in enumerate(KING_OFFSETS):
+            for y in range(H):
+                for x in range(W):
+                    yy, xx = y + dy, x + dx
+                    if 0 <= yy < H and 0 <= xx < W:
+                        J[y * W + x, yy * W + xx] += 0.5 * w[k, y, x]
+        J = J + J.T  # symmetrize: each directed edge contributed half
+        b = np.asarray(self.b, dtype=np.float64).reshape(-1)
+        return DenseIsing(J=jnp.asarray(J), b=jnp.asarray(b))
+
+    def apply_clamps(self, s: jax.Array) -> jax.Array:
+        s = jnp.where(self.clamp_mask, self.clamp_value.astype(s.dtype), s)
+        s = jnp.where(self.dead_mask, jnp.asarray(-1, s.dtype), s)
+        return s
+
+    @property
+    def frozen_mask(self) -> jax.Array:
+        """Sites that never update (clamped or dead)."""
+        return self.clamp_mask | self.dead_mask
+
+
+def shift2d(s: jax.Array, dy: int, dx: int) -> jax.Array:
+    """Shift the last two dims so out[y,x] = s[y+dy, x+dx], zero padded."""
+    out = jnp.roll(s, shift=(-dy, -dx), axis=(-2, -1))
+    H, W = s.shape[-2], s.shape[-1]
+    ys = jnp.arange(H) + dy
+    xs = jnp.arange(W) + dx
+    ymask = (ys >= 0) & (ys < H)
+    xmask = (xs >= 0) & (xs < W)
+    mask = ymask[:, None] & xmask[None, :]
+    return jnp.where(mask, out, jnp.zeros_like(out))
+
+
+def lattice_from_pairs(
+    H: int,
+    W: int,
+    pair_weights: dict[tuple[tuple[int, int], tuple[int, int]], float],
+    biases: Optional[np.ndarray] = None,
+    clamp_mask: Optional[np.ndarray] = None,
+    clamp_value: Optional[np.ndarray] = None,
+    dead_mask: Optional[np.ndarray] = None,
+    dtype=jnp.float32,
+) -> LatticeIsing:
+    """Build a symmetric LatticeIsing from {((y1,x1),(y2,x2)): J} pairs."""
+    w = np.zeros((8, H, W), dtype=np.float64)
+    off_index = {o: k for k, o in enumerate(KING_OFFSETS)}
+    for ((y1, x1), (y2, x2)), val in pair_weights.items():
+        o = (y2 - y1, x2 - x1)
+        assert o in off_index, f"not a king's move: {o}"
+        w[off_index[o], y1, x1] += val
+        w[off_index[(-o[0], -o[1])], y2, x2] += val
+    b = np.zeros((H, W)) if biases is None else np.asarray(biases, np.float64)
+    cm = np.zeros((H, W), bool) if clamp_mask is None else clamp_mask
+    cv = -np.ones((H, W)) if clamp_value is None else clamp_value
+    dm = np.zeros((H, W), bool) if dead_mask is None else dead_mask
+    return LatticeIsing(
+        w=jnp.asarray(w, dtype),
+        b=jnp.asarray(b, dtype),
+        clamp_mask=jnp.asarray(cm),
+        clamp_value=jnp.asarray(cv, dtype),
+        dead_mask=jnp.asarray(dm),
+    )
+
+
+def quantize_lattice(prob: LatticeIsing, bits: int = 8) -> LatticeIsing:
+    """Quantize weights/biases to the chip's signed fixed point grid.
+
+    The chip stores 8-bit weights and biases (codes -127..127 after removing
+    the redundant -128). We scale by the max-abs over (w, b), round to the
+    integer grid, and keep float values ON the grid (dequantized) so all
+    samplers remain float while matching silicon-representable problems.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(prob.w)), jnp.max(jnp.abs(prob.b)))
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = lambda x: jnp.round(x / scale * qmax) * (scale / qmax)
+    return dataclasses.replace(prob, w=q(prob.w), b=q(prob.b))
+
+
+def king_color_masks(H: int, W: int) -> jax.Array:
+    """(4, H, W) bool masks partitioning the lattice into 4 king-independent
+    color classes: color = (y%2)*2 + (x%2)."""
+    y = np.arange(H)[:, None]
+    x = np.arange(W)[None, :]
+    color = (y % 2) * 2 + (x % 2)
+    return jnp.asarray(np.stack([color == c for c in range(N_KING_COLORS)]))
+
+
+def enumerate_boltzmann(problem: DenseIsing) -> tuple[np.ndarray, np.ndarray]:
+    """Exact p(s) over all 2^n states (n <= 20). Returns (states, probs).
+
+    states: (2^n, n) in {-1,+1}; probs: (2^n,) normalized.
+    """
+    n = problem.n
+    assert n <= 20, "exact enumeration limited to 20 spins"
+    codes = np.arange(2**n, dtype=np.int64)
+    bits = (codes[:, None] >> np.arange(n)[None, :]) & 1
+    states = (2 * bits - 1).astype(np.float64)
+    E = np.asarray(jax.vmap(problem.energy)(jnp.asarray(states)))
+    E = E - E.min()
+    p = np.exp(-E)
+    p /= p.sum()
+    return states, p

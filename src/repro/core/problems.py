@@ -1,0 +1,98 @@
+"""Problem generators: MaxCut, Sherrington-Kirkpatrick, CAL-letters lattice.
+
+Mapping conventions (for E(s) = sum_{i<j} J_ij s_i s_j + b.s, p ∝ e^{-E}):
+
+  * MaxCut on graph G=(V,E,w): cut(s) = sum_{(i,j) in E} w_ij (1 - s_i s_j)/2.
+    Maximizing the cut == minimizing sum w_ij s_i s_j == ground state of
+    J = +w (antiferromagnetic), b = 0.
+  * SK spin glass: J_ij ~ N(0, 1)/sqrt(n), b = 0.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.ising import DenseIsing, LatticeIsing, lattice_from_pairs, KING_OFFSETS
+
+
+def random_maxcut(n: int, seed: int, density: float = 1.0, weights: str = "unit") -> DenseIsing:
+    """Random (weighted) MaxCut instance as a DenseIsing problem.
+
+    weights: 'unit' -> w=1 edges (the Hamerly/ref-47 benchmark style is dense
+    unit MaxCut); 'uniform' -> w ~ U(0,1].
+    """
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n, n)) < density
+    w = np.ones((n, n)) if weights == "unit" else rng.random((n, n))
+    J = np.triu(mask * w, k=1)
+    J = J + J.T
+    return DenseIsing(J=jnp.asarray(J, jnp.float32), b=jnp.zeros((n,), jnp.float32))
+
+
+def sk_instance(n: int, seed: int) -> DenseIsing:
+    """Sherrington-Kirkpatrick: J_ij ~ N(0, 1/n), symmetric, zero diag."""
+    rng = np.random.default_rng(seed)
+    A = rng.normal(0.0, 1.0, (n, n)) / np.sqrt(n)
+    J = np.triu(A, k=1)
+    J = J + J.T
+    return DenseIsing(J=jnp.asarray(J, jnp.float32), b=jnp.zeros((n,), jnp.float32))
+
+
+def cut_value(problem: DenseIsing, s) -> jnp.ndarray:
+    """Cut size for a MaxCut-encoded problem (J = +w)."""
+    J = problem.J
+    total_w = jnp.sum(jnp.triu(J, k=1))
+    return 0.5 * (total_w - problem.energy(s))
+
+
+# ---------------------------------------------------------------------------
+# CAL letters (Fig. 3F): ground state spells C, A, L on the 16x16 core.
+# ---------------------------------------------------------------------------
+
+# 16x16 binary template; 1 = letter pixel, 0 = background. Letters C A L
+# drawn in three 5-wide columns.
+_CAL_ROWS = [
+    "0000000000000000",
+    "0011100111000100",
+    "0100000100100100",
+    "0100000100100100",
+    "0100000111100100",
+    "0100000100100100",
+    "0011100100100111",
+    "0000000000000000",
+    "0000000000000000",
+    "0011100111000100",
+    "0100000100100100",
+    "0100000100100100",
+    "0100000111100100",
+    "0100000100100100",
+    "0011100100100111",
+    "0000000000000000",
+]
+
+
+def cal_template() -> np.ndarray:
+    """(16,16) ±1 template spelling CAL (twice, to use the full core)."""
+    t = np.array([[int(c) for c in row] for row in _CAL_ROWS], dtype=np.int8)
+    return (2 * t - 1).astype(np.float32)
+
+
+def cal_problem(coupling: float = 1.0) -> LatticeIsing:
+    """King's-move lattice whose two ground states are ±cal_template().
+
+    Neighbors with equal template value get ferromagnetic J=-coupling (our
+    convention: negative J favors alignment); neighbors with opposite value
+    get antiferromagnetic J=+coupling. The problem is gauge-equivalent to a
+    uniform ferromagnet, so the ground state is exactly ±template.
+    """
+    t = cal_template()
+    H, W = t.shape
+    pairs = {}
+    for y in range(H):
+        for x in range(W):
+            for dy, dx in KING_OFFSETS[4:]:  # each undirected pair once
+                yy, xx = y + dy, x + dx
+                if 0 <= yy < H and 0 <= xx < W:
+                    same = t[y, x] == t[yy, xx]
+                    pairs[((y, x), (yy, xx))] = -coupling if same else coupling
+    return lattice_from_pairs(H, W, pairs)

@@ -1,0 +1,1 @@
+from repro.data import digits, pipeline  # noqa: F401

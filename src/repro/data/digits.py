@@ -1,0 +1,61 @@
+"""Synthetic 16x16 digit dataset (MNIST stand-in for the offline container).
+
+The paper downsamples MNIST digits to the 16x16 neuron core and trains one
+digit class at a time (Fig. 4B). This module provides deterministic 16x16
+digit templates plus Bernoulli pixel noise — the same experimental protocol
+with a license-free, offline data source. The CD trainer and reconstruction
+experiments are data-agnostic.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# 7-segment-inspired 16x16 templates for digits 0-9 (1=ink).
+_SEGS = {
+    # segment: (row slice, col slice) on a 16x16 canvas, 3px strokes
+    "top": (slice(1, 3), slice(3, 13)),
+    "mid": (slice(7, 9), slice(3, 13)),
+    "bot": (slice(13, 15), slice(3, 13)),
+    "tl": (slice(1, 9), slice(2, 4)),
+    "tr": (slice(1, 9), slice(12, 14)),
+    "bl": (slice(7, 15), slice(2, 4)),
+    "br": (slice(7, 15), slice(12, 14)),
+}
+
+_DIGIT_SEGS = {
+    0: ("top", "bot", "tl", "tr", "bl", "br"),
+    1: ("tr", "br"),
+    2: ("top", "mid", "bot", "tr", "bl"),
+    3: ("top", "mid", "bot", "tr", "br"),
+    4: ("mid", "tl", "tr", "br"),
+    5: ("top", "mid", "bot", "tl", "br"),
+    6: ("top", "mid", "bot", "tl", "bl", "br"),
+    7: ("top", "tr", "br"),
+    8: ("top", "mid", "bot", "tl", "tr", "bl", "br"),
+    9: ("top", "mid", "bot", "tl", "tr", "br"),
+}
+
+
+def digit_template(d: int) -> np.ndarray:
+    """(16,16) ±1 template for digit d."""
+    canvas = np.zeros((16, 16), np.float32)
+    for seg in _DIGIT_SEGS[d % 10]:
+        rs, cs = _SEGS[seg]
+        canvas[rs, cs] = 1.0
+    return 2.0 * canvas - 1.0
+
+
+def digit_batch(d: int, n: int, key: jax.Array, flip_prob: float = 0.05) -> jax.Array:
+    """(n,16,16) ±1 noisy samples of digit d."""
+    t = jnp.asarray(digit_template(d))
+    flips = jax.random.bernoulli(key, flip_prob, (n, 16, 16))
+    return jnp.where(flips, -t, t)
+
+
+def mixed_batch(digits_list, n_each: int, key: jax.Array, flip_prob: float = 0.05) -> jax.Array:
+    keys = jax.random.split(key, len(digits_list))
+    return jnp.concatenate(
+        [digit_batch(d, n_each, k, flip_prob) for d, k in zip(digits_list, keys)]
+    )

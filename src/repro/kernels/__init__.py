@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the PASS hot loops.
+
+Each kernel <name>.py carries a pl.pallas_call with explicit BlockSpec VMEM
+tiling; ops.py is the jit'd public wrapper with backend dispatch; ref.py is
+the pure-jnp oracle every kernel is tested against (interpret=True sweeps).
+"""
+from repro.kernels import ops, ref  # noqa: F401

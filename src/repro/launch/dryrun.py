@@ -1,0 +1,230 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape) cell and each production mesh
+(single-pod 16x16, multi-pod 2x16x16):
+
+    lowered  = jax.jit(step, in_shardings=..., out_shardings=...).lower(specs)
+    compiled = lowered.compile()
+    memory_analysis / cost_analysis / collective parse -> artifacts/
+
+Shapes lower the production graphs: train_4k lowers the FULL train step
+(fwd + bwd + AdamW update), prefill_32k lowers `prefill`, decode shapes
+lower `decode_step` (one token against a seq_len KV cache).
+
+Results are cached incrementally in artifacts/dryrun/<cell>.json so the
+sweep is resumable; failures record the exception and keep going.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch a] [--shape s]
+        [--mesh single|multi|both] [--force] [--list]
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, cell_skip_reason, get_config, list_archs
+from repro.launch import hlo_analysis as ha
+from repro.launch import roofline as rl
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh
+from repro.models import model
+from repro.sharding import partition
+from repro.train import train_step as ts
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+
+def _tcfg(cfg):
+    return ts.TrainConfig()
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str):
+    """Lower + compile one cell; returns the result record."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        return {"status": "skipped", "reason": skip}
+    cfg = sp.serve_overrides(cfg, shape)
+    rules = sp.rules_for(cfg, shape, mesh)
+    t0 = time.time()
+
+    with partition.axis_rules(mesh, rules):
+        if shape.kind == "train":
+            tcfg = _tcfg(cfg)
+            state, state_axes = sp.train_state_and_axes(cfg, tcfg)
+            batch = sp.batch_specs(cfg, shape)
+            b_axes = sp.batch_axes(cfg, shape)
+            in_sh = (
+                partition.struct_shardings(state, state_axes, mesh, rules),
+                partition.struct_shardings(batch, b_axes, mesh, rules),
+                jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            )
+            step_fn = ts.make_train_step(cfg, tcfg, param_axes=state_axes.params)
+            jitted = jax.jit(step_fn, in_shardings=in_sh)
+            lowered = jitted.lower(state, batch, jax.ShapeDtypeStruct((), jax.random.key(0).dtype))
+            n_params = rl.count_params(state.params)
+        elif shape.kind == "prefill":
+            params, p_axes = sp.param_specs_and_axes(cfg)
+            batch = sp.batch_specs(cfg, shape)
+            b_axes = sp.batch_axes(cfg, shape)
+            caches = sp.cache_specs(cfg, shape)
+            c_axes = model.cache_axes(cfg)
+            in_sh = (
+                partition.struct_shardings(params, p_axes, mesh, rules),
+                partition.struct_shardings(batch, b_axes, mesh, rules),
+                partition.struct_shardings(caches, c_axes, mesh, rules),
+            )
+            fn = partial(model.prefill, cfg)
+            jitted = jax.jit(fn, in_shardings=in_sh)
+            lowered = jitted.lower(params, batch, caches)
+            n_params = rl.count_params(params)
+        else:  # decode
+            params, p_axes = sp.param_specs_and_axes(cfg)
+            caches = sp.cache_specs(cfg, shape)
+            c_axes = model.cache_axes(cfg)
+            B = shape.global_batch
+            tokens = jax.ShapeDtypeStruct((B,), jnp.int32)
+            tok_sh = partition.struct_shardings(
+                tokens, ("kv_batch",), mesh, rules
+            )
+            in_sh = (
+                partition.struct_shardings(params, p_axes, mesh, rules),
+                tok_sh,
+                jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                partition.struct_shardings(caches, c_axes, mesh, rules),
+            )
+            fn = partial(model.decode_step, cfg)
+            jitted = jax.jit(fn, in_shardings=in_sh)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jitted.lower(params, tokens, pos, caches)
+            n_params = rl.count_params(params)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    pod_size = 256 if mesh_name == "multi" else None
+    hlo = compiled.as_text()
+    # persist the HLO (gzipped) so analyses can be re-run without recompiling
+    os.makedirs(ART_DIR, exist_ok=True)
+    import gzip
+
+    with gzip.open(
+        os.path.join(ART_DIR, f"{arch}__{shape_name}__{mesh_name}.hlo.gz"), "wt"
+    ) as zf:
+        zf.write(hlo)
+    # scan-aware analysis: cost_analysis() counts while bodies ONCE; the HLO
+    # parser multiplies by known_trip_count (see hlo_analysis.py)
+    summary = ha.analyze(hlo, pod_size=pod_size)
+
+    n_chips = mesh.devices.size
+    mf_global = rl.model_flops(get_config(arch), shape, n_params)
+    terms = rl.compute_terms_from_summary(summary, mf_global / n_chips)
+
+    mem_dict = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes", "output_size_in_bytes",
+                 "alias_size_in_bytes", "generated_code_size_in_bytes"):
+        mem_dict[attr] = getattr(mem, attr, None)
+
+    return {
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_chips": int(n_chips),
+        "n_params": int(n_params),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": mem_dict,
+        "cost_raw": {k: v for k, v in (cost or {}).items() if isinstance(v, (int, float)) and abs(v) > 0},
+        "collectives": {
+            "ici_bytes": summary.ici_bytes,
+            "dcn_bytes": summary.dcn_bytes,
+            "by_kind": summary.coll_by_kind,
+            "n_while": summary.n_while,
+        },
+        "hbm_bytes_upper": summary.hbm_bytes_upper,
+        "roofline": terms.to_dict(),
+    }
+
+
+def run_cell(arch, shape_name, mesh_name, force=False):
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{arch}__{shape_name}__{mesh_name}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") in ("ok", "skipped"):
+            print(f"[cached] {arch} x {shape_name} x {mesh_name}: {rec['status']}")
+            return rec
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    print(f"[lower ] {arch} x {shape_name} x {mesh_name} ...", flush=True)
+    try:
+        rec = lower_cell(arch, shape_name, mesh, mesh_name)
+    except Exception as e:
+        rec = {
+            "status": "error",
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": mesh_name,
+            "error": f"{type(e).__name__}: {e}",
+            "trace": traceback.format_exc()[-3000:],
+        }
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (
+            f" compile={rec['compile_s']}s bottleneck={r['bottleneck']}"
+            f" t=(c {r['t_compute']:.3e}, m {r['t_memory']:.3e}, x {r['t_collective']:.3e})"
+        )
+    elif status == "error":
+        extra = " " + rec["error"][:160]
+    print(f"[{status:6}] {arch} x {shape_name} x {mesh_name}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.list:
+        for a in archs:
+            for s in shapes:
+                skip = cell_skip_reason(get_config(a), SHAPES[s])
+                print(f"{a:22} {s:12} {'SKIP: ' + skip if skip else 'runnable'}")
+        return
+
+    results = {"ok": 0, "skipped": 0, "error": 0}
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                rec = run_cell(a, s, m, force=args.force)
+                results[rec["status"]] = results.get(rec["status"], 0) + 1
+    print(f"\ndone: {results}")
+
+
+if __name__ == "__main__":
+    main()

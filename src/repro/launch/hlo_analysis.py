@@ -1,0 +1,335 @@
+"""Scan-aware analysis of compiled (SPMD-partitioned) HLO text.
+
+`compiled.cost_analysis()` visits each computation ONCE, so anything inside
+a `while` body (jax.lax.scan over layers, microbatches, mLSTM chunks...) is
+undercounted by its trip count. This module re-derives the roofline inputs
+from the HLO text itself, weighting every op by the product of the
+`known_trip_count`s of the while-loops enclosing it:
+
+  * FLOPs        — 2 x prod(result dims) x prod(contracting dims) per
+                   dot / custom-call matmul (elementwise flops are ignored;
+                   all our workloads are dot-dominated).
+  * HBM bytes    — operand + result bytes of every instruction in
+                   non-fusion computations (fusion internals never touch
+                   HBM; the fusion instruction's boundary does).
+  * collectives  — all-gather / all-reduce / reduce-scatter / all-to-all /
+                   collective-permute operand bytes x ring factors,
+                   split ICI vs DCN by replica-group pod membership.
+
+The compiled module is the per-device program, so all numbers are per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1, "f8e8m0fnu": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLL_FACTORS = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+# ops whose operands/results round-trip HBM on TPU (fusion boundaries)
+_HBM_OPS = frozenset(
+    {
+        "dot", "convolution", "fusion", "custom-call",
+        "reduce", "reduce-window", "sort", "scatter", "gather",
+        "dynamic-slice", "dynamic-update-slice", "slice", "concatenate",
+        "transpose", "copy", "reshape", "pad", "reverse",
+        "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute", "all-gather-start", "all-reduce-start",
+        "collective-permute-start", "rng-bit-generator", "iota", "select-and-scatter",
+    }
+)
+
+_SHAPE_TOKEN = re.compile(r"([a-z0-9]+)\[([\d,]*)\](?:\{[^}]*\})?")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+) = (.+?) ([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_RE = re.compile(r"(?:body|calls|to_apply|branch_computations)=\{?(%?[\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+
+def _shape_elems_bytes(type_str: str):
+    """Total (elements, bytes) across all array shapes in a type string."""
+    elems = nbytes = 0
+    for dt, dims in _SHAPE_TOKEN.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    result_type: str
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class HLOSummary:
+    flops: float
+    hbm_bytes: float        # perfect-fusion estimate: write + one read per
+                            # materialized tensor (TPU XLA approaches this)
+    hbm_bytes_upper: float  # operand re-reads counted per consumer (CPU-
+                            # backend fusion granularity; pessimistic on TPU)
+    ici_bytes: float
+    dcn_bytes: float
+    coll_by_kind: dict
+    n_while: int
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _parse_computations(text: str):
+    """computation name -> list[Instruction]."""
+    comps: dict[str, list[Instruction]] = {}
+    current: Optional[str] = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and "= " not in line.split("(")[0]:
+            name = mc.group(1)
+            current = name if name.startswith("%") else "%" + name
+            comps[current] = []
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        md = _DEF_RE.match(line)
+        if md:
+            comps[current].append(
+                Instruction(name=md.group(1), result_type=md.group(2), op=md.group(3), line=line)
+            )
+    return comps
+
+
+def _multipliers(comps, entry: str):
+    """Computation -> execution multiplier (product of enclosing trip counts)."""
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    # BFS through the call graph, multiplying at while boundaries
+    i = 0
+    while i < len(order):
+        comp = order[i]
+        i += 1
+        m = mult[comp]
+        for inst in comps.get(comp, []):
+            called = []
+            for g in _CALLED_RE.finditer(inst.line):
+                for nm in g.group(1).split(","):
+                    nm = nm.strip()
+                    called.append(nm if nm.startswith("%") else "%" + nm)
+            if not called:
+                continue
+            factor = 1.0
+            if inst.op == "while":
+                tm = _TRIP_RE.search(inst.line)
+                factor = float(tm.group(1)) if tm else 1.0
+            for c in called:
+                if c not in comps:
+                    continue
+                mult[c] = max(mult[c], m * factor)
+                if c not in seen:
+                    seen.add(c)
+                    order.append(c)
+    return mult
+
+
+def _operand_names(inst: Instruction, op: str) -> list:
+    m = re.search(r"\(([^)]*)\)", inst.line[inst.line.index(op + "(") :])
+    if not m:
+        return []
+    return [o.strip().split(" ")[-1] for o in m.group(1).split(",") if o.strip()]
+
+
+def _operand_bytes(operands, shape_of, idx: int) -> float:
+    if idx < len(operands) and operands[idx] in shape_of:
+        return _shape_elems_bytes(shape_of[operands[idx]])[1]
+    return 0.0
+
+
+def _fusion_callees(inst: Instruction) -> list:
+    out = []
+    for g in _CALLED_RE.finditer(inst.line):
+        for nm in g.group(1).split(","):
+            nm = nm.strip()
+            out.append(nm if nm.startswith("%") else "%" + nm)
+    return out
+
+
+def _dot_flops(inst: Instruction, shape_of) -> float:
+    """2 x prod(result dims) x prod(contracting dims of lhs)."""
+    res_elems, _ = _shape_elems_bytes(inst.result_type)
+    m = re.search(r"\(([^)]*)\)", inst.line[inst.line.index(inst.op + "(") :])
+    if not m:
+        return 0.0
+    operands = [o.strip().split(" ")[-1] for o in m.group(1).split(",")]
+    lhs = operands[0] if operands else None
+    lhs_type = shape_of.get(lhs, "")
+    dims_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.line)
+    contract = 1
+    if dims_m and lhs_type:
+        st = _SHAPE_TOKEN.search(lhs_type)
+        if st:
+            dim_list = [int(d) for d in st.group(2).split(",") if d]
+            for idx in dims_m.group(1).split(","):
+                if idx:
+                    ii = int(idx)
+                    if ii < len(dim_list):
+                        contract *= dim_list[ii]
+    return 2.0 * res_elems * contract
+
+
+def analyze(text: str, pod_size: Optional[int] = None) -> HLOSummary:
+    comps = _parse_computations(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+(%?[\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+                entry = entry if entry.startswith("%") else "%" + entry
+            break
+    if entry is None or entry not in comps:
+        # fall back: biggest computation
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+        if entry is None:
+            return HLOSummary(0, 0, 0, 0, 0, {}, 0)
+    mult = _multipliers(comps, entry)
+
+    shape_of: dict[str, str] = {}
+    for insts in comps.values():
+        for inst in insts:
+            shape_of[inst.name] = inst.result_type
+
+    # fusion computations don't touch HBM; find them (called via calls= from
+    # fusion ops) — bytes counted at the fusion instruction boundary.
+    fusion_comps = set()
+    for insts in comps.values():
+        for inst in insts:
+            if inst.op == "fusion":
+                for g in _CALLED_RE.finditer(inst.line):
+                    for nm in g.group(1).split(","):
+                        nm = nm.strip()
+                        fusion_comps.add(nm if nm.startswith("%") else "%" + nm)
+
+    flops = 0.0
+    hbm = 0.0
+    hbm_lower = 0.0
+    ici = dcn = 0.0
+    coll_by_kind: dict[str, dict] = {}
+    n_while = 0
+
+    for comp, insts in comps.items():
+        m = mult.get(comp, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = comp in fusion_comps
+        for inst in insts:
+            op = inst.op
+            if op == "while":
+                n_while += 1
+            # FLOPs: dots count wherever they live (fusion or not)
+            if op in ("dot", "convolution"):
+                flops += m * _dot_flops(inst, shape_of)
+            elif op == "custom-call" and ("matmul" in inst.line or "dot" in inst.line.lower()):
+                flops += m * _dot_flops(inst, shape_of)
+            # HBM bytes: boundaries of MAJOR ops only. The CPU backend fuses
+            # far less than TPU; counting every unfused elementwise op would
+            # overstate TPU HBM traffic badly. We count ops that on TPU are
+            # genuine HBM round-trips: matmuls, fusions (their boundary),
+            # data movement, reductions, collectives.
+            #
+            # Slicing ops move only the SLICE, not the buffer: dynamic-slice/
+            # gather cost 2x the slice; dynamic-update-slice/scatter cost 2x
+            # the update (the buffer is aliased in place). Fusions whose body
+            # ends in a DUS (XLA's in-place cache-update pattern) likewise.
+            if not in_fusion and op in _HBM_OPS:
+                _, out_b = _shape_elems_bytes(inst.result_type)
+                operands = _operand_names(inst, op)
+                if op in ("dynamic-slice", "gather"):
+                    eff = 2.0 * out_b
+                elif op in ("dynamic-update-slice", "scatter"):
+                    upd_b = _operand_bytes(operands, shape_of, idx=1)
+                    eff = 2.0 * upd_b
+                elif op == "fusion":
+                    eff = 2.0 * out_b
+                    for c in _fusion_callees(inst):
+                        for fi in comps.get(c, []):
+                            if fi.op == "dynamic-update-slice":
+                                _, dus_out = _shape_elems_bytes(fi.result_type)
+                                dus_upd = _operand_bytes(_operand_names(fi, fi.op), shape_of, idx=1)
+                                eff -= 2.0 * dus_out
+                                eff += 2.0 * dus_upd
+                    eff = max(eff, 0.0)
+                else:
+                    eff = 2.0 * out_b
+                hbm_lower += m * eff
+                in_b = 0
+                for nm in operands:
+                    if nm in shape_of:
+                        _, b = _shape_elems_bytes(shape_of[nm])
+                        in_b += b
+                if op in ("dynamic-slice", "gather", "dynamic-update-slice", "scatter"):
+                    hbm += m * eff
+                else:
+                    hbm += m * (out_b + in_b)
+            # collectives
+            kind = op.replace("-start", "")
+            if kind in _COLL_FACTORS:
+                _, nbytes = _shape_elems_bytes(inst.result_type)
+                if kind == "all-gather" and "-start" in op:
+                    # result of -start is a tuple (operand, result): halve
+                    nbytes = nbytes / 2
+                w = m * nbytes * _COLL_FACTORS[kind]
+                crosses = False
+                if pod_size:
+                    gm = re.search(r"replica_groups=\{\{([^}]*)\}", inst.line)
+                    if gm:
+                        ids = [int(x) for x in gm.group(1).split(",") if x.strip()]
+                        crosses = len({i // pod_size for i in ids}) > 1
+                    else:
+                        gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\]", inst.line)
+                        if gm2 and int(gm2.group(2)) > pod_size:
+                            crosses = True
+                d = coll_by_kind.setdefault(kind, {"count": 0, "bytes": 0.0})
+                d["count"] += 1
+                d["bytes"] += m * nbytes
+                if crosses:
+                    dcn += w
+                else:
+                    ici += w
+    return HLOSummary(
+        flops=flops,
+        hbm_bytes=hbm_lower,
+        hbm_bytes_upper=hbm,
+        ici_bytes=ici,
+        dcn_bytes=dcn,
+        coll_by_kind=coll_by_kind,
+        n_while=n_while,
+    )

@@ -1,0 +1,222 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch, shape, mesh), in seconds per step:
+
+    compute    = HLO_FLOPs_per_chip / PEAK_FLOPS
+    memory     = HLO_bytes_per_chip / HBM_BW
+    collective = sum(collective bytes x algo factor) / LINK_BW
+
+FLOPs/bytes come from compiled.cost_analysis() (per-chip numbers under
+SPMD). Collective bytes are NOT in cost_analysis — they are parsed from the
+compiled HLO text: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op's operand sizes, weighted by standard
+ring-algorithm factors:
+
+    all-reduce      2 x size     (reduce-scatter + all-gather)
+    all-gather      1 x output   (each chip receives the gathered result)
+    reduce-scatter  1 x input
+    all-to-all      1 x size
+    collective-permute 1 x size
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (1 link assumed per mesh-axis hop; DCN collectives — replica groups that
+cross the pod boundary — are scored at DCN_BW instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+DCN_BW = 6.25e9          # bytes/s / chip (50 Gbit/s NIC assumption)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_FACTORS = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\w+\[[\d,]*\]\S*)\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute-start|collective-permute)\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}?|replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: list            # (kind, bytes, weighted_bytes, crosses_pod)
+    ici_bytes: float     # factor-weighted bytes on ICI (per chip)
+    dcn_bytes: float     # factor-weighted bytes on DCN (per chip)
+
+    @property
+    def total_ops(self):
+        return len(self.ops)
+
+
+def parse_collectives(hlo_text: str, pod_size: Optional[int] = None) -> CollectiveStats:
+    """Scan compiled HLO for collective ops and sum operand bytes.
+
+    pod_size: device count per pod; a replica group whose members span a
+    multiple of pod_size boundary is scored as DCN. With iota groups
+    [n,g]<=[N] we conservatively mark DCN when the group stride crosses pods
+    — heuristic: groups of size > pod_size or explicit ids differing by
+    >= pod_size.
+    """
+    ops = []
+    ici = dcn = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if m is None:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        kind = kind.replace("-start", "")
+        nbytes = _shape_bytes(type_str)
+        if nbytes == 0:
+            continue
+        crosses = False
+        if pod_size:
+            gm = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+            if gm:
+                ids = [int(x) for x in gm.group(1).split(",") if x.strip()]
+                pods = {i // pod_size for i in ids}
+                crosses = len(pods) > 1
+            else:
+                gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\]", line)
+                if gm2:
+                    gsize = int(gm2.group(2))
+                    crosses = gsize > pod_size
+        w = nbytes * _FACTORS[kind]
+        ops.append((kind, nbytes, w, crosses))
+        if crosses:
+            dcn += w
+        else:
+            ici += w
+    return CollectiveStats(ops=ops, ici_bytes=ici, dcn_bytes=dcn)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float             # per chip
+    hbm_bytes: float         # per chip
+    ici_bytes: float         # per chip, factor-weighted
+    dcn_bytes: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float       # 6ND (train) / 2ND (decode), per chip
+    useful_ratio: float      # model_flops / hlo_flops
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def compute_terms(
+    cost: dict,
+    coll: CollectiveStats,
+    model_flops_per_chip: float,
+    bwd: bool = False,
+) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_x = coll.ici_bytes / ICI_BW + coll.dcn_bytes / DCN_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    return RooflineTerms(
+        flops=flops,
+        hbm_bytes=hbm,
+        ici_bytes=coll.ici_bytes,
+        dcn_bytes=coll.dcn_bytes,
+        t_compute=t_c,
+        t_memory=t_m,
+        t_collective=t_x,
+        bottleneck=bottleneck,
+        model_flops=model_flops_per_chip,
+        useful_ratio=(model_flops_per_chip / flops) if flops else 0.0,
+    )
+
+
+def compute_terms_from_summary(summary, model_flops_per_chip: float) -> RooflineTerms:
+    """Terms from a scan-aware hlo_analysis.HLOSummary (per-chip numbers)."""
+    t_c = summary.flops / PEAK_FLOPS
+    t_m = summary.hbm_bytes / HBM_BW
+    t_x = summary.ici_bytes / ICI_BW + summary.dcn_bytes / DCN_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    return RooflineTerms(
+        flops=summary.flops,
+        hbm_bytes=summary.hbm_bytes,
+        ici_bytes=summary.ici_bytes,
+        dcn_bytes=summary.dcn_bytes,
+        t_compute=t_c,
+        t_memory=t_m,
+        t_collective=t_x,
+        bottleneck=bottleneck,
+        model_flops=model_flops_per_chip,
+        useful_ratio=(model_flops_per_chip / summary.flops) if summary.flops else 0.0,
+    )
+
+
+def count_params(param_structs) -> int:
+    import jax
+
+    return sum(
+        int(l.size) for l in jax.tree.leaves(param_structs) if hasattr(l, "size")
+    )
+
+
+def model_flops(cfg, shape, n_params: int) -> float:
+    """6*N*D for a train step, 2*N*tokens for one serve step (global)."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        n = _active_params(cfg, n_params)
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * _active_params(cfg, n_params) * tokens
+    tokens = shape.global_batch  # one new token per sequence
+    return 2.0 * _active_params(cfg, n_params) * tokens
+
+
+def _active_params(cfg, n_params: int) -> float:
+    """MoE: only top_k (+shared) of the routed experts are active/token."""
+    if cfg.moe is None:
+        return float(n_params)
+    m = cfg.moe
+    gated = 3 if cfg.act in ("swiglu", "geglu") else 2
+    per_expert = gated * cfg.d_model * m.d_expert
+    routed_total = cfg.n_layers * m.n_experts * per_expert
+    routed_active = cfg.n_layers * m.top_k * per_expert
+    return float(n_params - routed_total + routed_active)

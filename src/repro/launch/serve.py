@@ -1,0 +1,59 @@
+"""Production serving driver: loads (or initializes) params, starts the
+continuous-batching engine, and runs a synthetic request workload.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m \
+        --requests 8 --slots 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.models import model
+from repro.serve.engine import Engine, Request
+from repro.train import checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m", choices=list_archs())
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.7)
+    ap.add_argument("--ckpt-dir", default=None, help="restore params from a train checkpoint")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    params, _ = model.init_params(cfg, jax.random.key(0))
+    if args.ckpt_dir:
+        step = checkpoint.latest_step(args.ckpt_dir)
+        if step is not None:
+            from repro.train.train_step import TrainConfig, init_state
+
+            state, _ = init_state(cfg, TrainConfig(), jax.random.key(0))
+            state = checkpoint.restore(args.ckpt_dir, step, state)
+            params = state.params
+            print(f"restored params from step {step}")
+
+    eng = Engine(cfg, params, n_slots=args.slots, max_len=args.max_len, seed=0)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for uid in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size, size=int(rng.integers(4, 16))).astype(np.int32)
+        eng.submit(Request(uid=uid, prompt=prompt, max_new_tokens=args.max_new,
+                           temperature=args.temperature))
+    done = eng.run()
+    dt = time.time() - t0
+    tokens = sum(len(c.tokens) for c in done)
+    print(f"{len(done)} completions, {tokens} tokens, {dt:.1f}s ({tokens/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

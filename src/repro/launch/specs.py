@@ -1,0 +1,144 @@
+"""ShapeDtypeStruct stand-ins and sharding rules for every dry-run cell.
+
+`input_specs(cfg, shape)` returns the exact input pytree the lowered step
+consumes — weak-type-correct, shardable, zero device allocation. The same
+function feeds the real train/serve drivers (which substitute concrete
+arrays of the same shapes), so the dry-run lowers the production graphs.
+
+`rules_for(cfg, shape, mesh)` resolves the logical->mesh mapping per cell:
+  * train/prefill: sequence parallelism on the residual stream
+    (seq -> "model"), FSDP on "data", TP on "model".
+  * decode: weights replicated over "data" (fsdp -> None; serving never
+    re-gathers per token), KV cache sharded (batch, heads-if-divisible,
+    else head_dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model
+from repro.optim import adamw
+from repro.train import train_step as ts
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Training/prefill batch structure for one global step."""
+    B, S = shape.global_batch, shape.seq_len
+    act = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm":
+        S_text = S - cfg.n_patches
+        out = {
+            "tokens": _sds((B, S_text), jnp.int32),
+            "patch_embeds": _sds((B, cfg.n_patches, cfg.d_model), act),
+        }
+        if shape.kind == "train":
+            out["labels"] = _sds((B, S_text), jnp.int32)
+        return out
+    if cfg.family == "audio":
+        # encoder consumes `S` frames (the stressed dimension); decoder
+        # consumes the nominal target length in prefill, S in train.
+        S_dec = S if shape.kind == "train" else 448
+        out = {
+            "frames": _sds((B, S, cfg.d_model), act),
+            "tokens": _sds((B, S_dec), jnp.int32),
+        }
+        if shape.kind == "train":
+            out["labels"] = _sds((B, S_dec), jnp.int32)
+        return out
+    out = {"tokens": _sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = _sds((B, S), jnp.int32)
+    return out
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    specs = batch_specs(cfg, shape)
+    axes = {}
+    for k, v in specs.items():
+        axes[k] = ("batch",) + (None,) * (len(v.shape) - 1)
+    return axes
+
+
+def param_specs_and_axes(cfg: ModelConfig):
+    """(ShapeDtypeStruct params, logical-axes tree) with zero allocation.
+
+    The axes tree is static (value-independent), so it is captured through a
+    closure while the params are traced abstractly by eval_shape.
+    """
+    box = {}
+
+    def f(key):
+        p, a = model.init_params(cfg, key)
+        box["axes"] = a
+        return p
+
+    structs = jax.eval_shape(f, jax.random.key(0))
+    return structs, box["axes"]
+
+
+def train_state_and_axes(cfg: ModelConfig, tcfg: ts.TrainConfig):
+    """(ShapeDtypeStruct TrainState, logical-axes TrainState)."""
+    box = {}
+
+    def f(key):
+        st, ax = ts.init_state(cfg, tcfg, key)
+        box["axes"] = ax
+        return st
+
+    state = jax.eval_shape(f, jax.random.key(0))
+    return state, box["axes"]
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B = shape.global_batch
+    return jax.eval_shape(lambda: model.init_caches(cfg, B, shape.seq_len))
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    model_size = mesh.shape.get("model", 1)
+    rules: dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.strategy == "fsdp_pure" and shape.global_batch % (
+            mesh.devices.size
+        ) == 0:
+            # ZeRO-3: batch over every axis, params/opt fsdp-sharded over
+            # every axis, no tensor parallelism, no activation collectives
+            rules["batch"] = ("pod", "data", "model")
+            rules["kv_batch"] = ("pod", "data", "model")
+            rules["fsdp"] = ("data", "model")
+            rules["seq"] = None
+            rules["heads"] = None
+            rules["kv_heads"] = None
+            rules["mlp"] = None
+            rules["vocab"] = None
+            rules["experts"] = None
+        else:
+            rules["seq"] = "model"  # sequence-parallel residual stream
+    if shape.kind in ("prefill", "decode"):
+        # serving: weights live TP-sharded, replicated across data
+        if shape.kind == "decode":
+            rules["fsdp"] = None
+        if cfg.n_kv_heads % model_size == 0:
+            rules["kv_heads"] = "model"
+            rules["kv_hd"] = None
+        else:
+            rules["kv_heads"] = None
+            rules["kv_hd"] = "model"
+    return rules
+
+
+def serve_overrides(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """Per-cell config adjustments for serving memory (recorded in
+    EXPERIMENTS.md): fp8 KV cache for the 32B decode cell."""
+    if shape.kind == "decode" and cfg.name == "qwen1p5-32b":
+        return dataclasses.replace(cfg, kv_cache_dtype="float8_e4m3fn")
+    return cfg

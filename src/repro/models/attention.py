@@ -1,0 +1,261 @@
+"""Attention: MHA / GQA / MQA, causal + sliding-window, KV-cache decode.
+
+Three entry points sharing one set of params:
+  * `attn_train`   — full-sequence causal (or windowed / bidirectional)
+  * `attn_prefill` — same as train but also returns the populated KV cache
+  * `attn_decode`  — one query token against the cache (cheap serve step)
+
+Layout: activations (B, S, D); heads split as (B, S, H, hd); KV cache
+(B, T, K, hd) in `kv_cache_dtype`. GQA is computed grouped — queries are
+reshaped to (B, S, K, G, hd) so the einsum contracts against un-replicated
+KV heads (no materialized repeat, MQA stays memory-lean).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.sharding.partition import constrain
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, T, K, hd)
+    v: jax.Array  # (B, T, K, hd)
+    # NOTE: the running position lives in the serving state, not here, so the
+    # cache pytree keeps a static treedef across decode steps.
+
+
+def attn_init(key, cfg, dtype):
+    hd = cfg.resolved_head_dim
+    ks = layers._split(key, 4)
+    params, axes = {}, {}
+    params["wq"], axes["wq"] = layers.dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, ("fsdp", "heads"), dtype)
+    params["wk"], axes["wk"] = layers.dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, ("fsdp", "kv_heads"), dtype)
+    params["wv"], axes["wv"] = layers.dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, ("fsdp", "kv_heads"), dtype)
+    params["wo"], axes["wo"] = layers.dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, ("heads", "fsdp"), dtype)
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        params["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        params["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        axes["bq"], axes["bk"], axes["bv"] = ("heads",), ("kv_heads",), ("kv_heads",)
+    return params, axes
+
+
+def _project_qkv(params, x, cfg, positions, rope: bool):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    # Sharding layout (perf iteration 1, see EXPERIMENTS.md §Perf):
+    #   * head counts divisible by the tensor axis -> head-TP (scores
+    #     sharded over heads, zero attention collectives);
+    #   * otherwise -> context-parallel q (scores sharded over q-seq; k/v
+    #     gathered once per layer). The naive uneven-head padding made
+    #     GSPMD all-gather full (B,K,G,S,S) probability tensors.
+    from repro.sharding.partition import active_axis_size
+
+    heads_div = cfg.n_heads % max(active_axis_size("heads"), 1) == 0
+    kv_div = cfg.n_kv_heads % max(active_axis_size("kv_heads"), 1) == 0
+    hd_sharded = active_axis_size("kv_hd") > 1  # decode cache sharded on head_dim
+    kv_axes = ("batch", None, "kv_heads" if kv_div else None, "kv_hd" if hd_sharded else None)
+    if S == 1 and hd_sharded:
+        # decode against a head_dim-sharded cache: align q so the score
+        # contraction is a local partial-sum + tiny psum (never gather the
+        # cache — that regression cost 11x, see EXPERIMENTS §Perf).
+        q = constrain(q, ("kv_batch", None, None, "kv_hd"))
+    elif heads_div:
+        q = constrain(q, ("batch", None, "heads", None))
+    elif S > 1:
+        if S > BLOCKWISE_THRESHOLD and not cfg.blockwise_context_parallel:
+            # blockwise python q-slicing fights a seq-sharded q; some archs
+            # (deep 32B prefill) prefer padded-head TP here — per-arch knob
+            q = constrain(q, ("batch", None, "heads", None))
+            kv_axes = ("batch", None, "kv_heads", None)  # padded like q
+        else:
+            q = constrain(q, ("batch", "seq", None, None))  # context parallel
+    k = constrain(k, kv_axes)
+    v = constrain(v, kv_axes)
+    return q, k, v
+
+
+def _grouped_scores(q, k, cfg):
+    """(B,Sq,K,G,hd) x (B,Sk,K,hd) -> (B,K,G,Sq,Sk), GQA without repeat."""
+    B, Sq, H, hd = q.shape
+    K = cfg.n_kv_heads
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / jnp.sqrt(jnp.asarray(hd, jnp.float32)).astype(q.dtype)
+    return scores
+
+
+def _apply_mask_softmax(scores, mask):
+    scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return probs
+
+
+def _combine(probs, v, cfg, out_dtype):
+    B, K, G, Sq, Sk = probs.shape
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(out_dtype), v)
+    return out.reshape(B, Sq, K * G, -1)
+
+
+def causal_mask(Sq: int, Sk: int, window: int = 0, offset: int = 0) -> jax.Array:
+    """(Sq, Sk) bool; query i attends key j iff j <= i+offset (and within
+    window if window>0). offset shifts query positions (decode/prefill)."""
+    qpos = jnp.arange(Sq)[:, None] + offset
+    kpos = jnp.arange(Sk)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > (qpos - window)
+    return m
+
+
+# Sequences longer than this use the blockwise path (O(S*block) score
+# memory for causal, O(S*window) for banded) instead of materializing SxS.
+BLOCKWISE_THRESHOLD = 4096
+Q_BLOCK = 1024
+
+
+def _attn_dense(q, k, v, cfg, mask, out_dtype):
+    scores = _grouped_scores(q, k, cfg)
+    probs = _apply_mask_softmax(scores, mask)
+    return _combine(probs, v, cfg, out_dtype)
+
+
+def _attn_blockwise(q, k, v, cfg, *, causal: bool, window: int, out_dtype):
+    """Exact attention, q processed in blocks of Q_BLOCK.
+
+    causal:      block i sees keys [0, (i+1)*Q)        — O(S^2/2) flops, but
+                 only (Q x visible) scores live at once.
+    windowed:    block i sees the static band [i*Q - W, (i+1)*Q).
+    bidirectional: block i sees all keys (whisper encoder).
+    """
+    B, S, H, hd = q.shape
+    nq = -(-S // Q_BLOCK)
+    outs = []
+    for i in range(nq):
+        qs = i * Q_BLOCK
+        qe = min(S, qs + Q_BLOCK)
+        qi = q[:, qs:qe]
+        if causal and window > 0:
+            ks = max(0, qs - window + 1)
+            kv_k, kv_v = k[:, ks:qe], v[:, ks:qe]
+            mask = causal_mask(qe - qs, qe - ks, window, offset=qs - ks)
+        elif causal:
+            kv_k, kv_v = k[:, :qe], v[:, :qe]
+            mask = causal_mask(qe - qs, qe, 0, offset=qs)
+        else:
+            kv_k, kv_v = k, v
+            mask = jnp.ones((qe - qs, k.shape[1]), bool)
+        outs.append(_attn_dense(qi, kv_k, kv_v, cfg, mask, out_dtype))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attn_train(params, x, cfg, positions, *, window: int = 0, causal: bool = True, rope: bool = True):
+    q, k, v = _project_qkv(params, x, cfg, positions, rope)
+    S = x.shape[1]
+    if S > BLOCKWISE_THRESHOLD:
+        out = _attn_blockwise(q, k, v, cfg, causal=causal, window=window, out_dtype=x.dtype)
+    else:
+        if causal:
+            mask = causal_mask(S, S, window)
+        else:
+            mask = jnp.ones((S, S), bool)
+        out = _attn_dense(q, k, v, cfg, mask, x.dtype)
+    return out.reshape(x.shape[0], S, -1) @ params["wo"]
+
+
+def attn_cross(params, x, enc_kv, cfg):
+    """Cross-attention: queries from x, keys/values precomputed from encoder."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k, v = enc_kv
+    scores = _grouped_scores(q, k, cfg)
+    mask = jnp.ones((S, k.shape[1]), bool)
+    probs = _apply_mask_softmax(scores, mask)
+    out = _combine(probs, v, cfg, x.dtype)
+    return out.reshape(B, S, -1) @ params["wo"]
+
+
+def cross_kv(params, enc_out, cfg):
+    B, T, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = (enc_out @ params["wk"]).reshape(B, T, cfg.n_kv_heads, hd)
+    v = (enc_out @ params["wv"]).reshape(B, T, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype) -> KVCache:
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.n_kv_heads, hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def cache_axes() -> KVCache:
+    a = ("kv_batch", "kv_seq", "kv_heads", "kv_hd")
+    return KVCache(k=a, v=a)
+
+
+def attn_prefill(params, x, cfg, positions, cache: KVCache, *, window: int = 0, rope: bool = True):
+    """Causal attention over the prompt; writes K/V into cache[0:S]."""
+    q, k, v = _project_qkv(params, x, cfg, positions, rope)
+    S = x.shape[1]
+    if S > BLOCKWISE_THRESHOLD:
+        out = _attn_blockwise(q, k, v, cfg, causal=True, window=window, out_dtype=x.dtype)
+    else:
+        out = _attn_dense(q, k, v, cfg, causal_mask(S, S, window), x.dtype)
+    new_cache = KVCache(
+        k=jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), 0, axis=1),
+        v=jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), 0, axis=1),
+    )
+    return out.reshape(x.shape[0], S, -1) @ params["wo"], new_cache
+
+
+def attn_decode(params, x, cfg, pos, cache: KVCache, *, window: int = 0, rope: bool = True):
+    """One-token decode. x: (B, 1, D); pos: () current position (int32).
+
+    Attends to the cache plus the new token; writes the new K/V at pos.
+    The full cache length participates in the einsum (dense over T_max) with
+    an explicit validity mask — the standard fixed-shape serving layout.
+
+    Windowed layers use a RING cache: the cache is only `window` slots long
+    and the write index is pos % window, so a 500k-token context costs O(W)
+    memory on local-attention layers (this is what makes long_500k feasible
+    on the hybrid archs).
+    """
+    B = x.shape[0]
+    T = cache.k.shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions, rope)
+    ring = window > 0 and T <= window
+    write_pos = jnp.mod(pos, T) if ring else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), write_pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), write_pos, axis=1)
+    kpos = jnp.arange(T)
+    if ring:
+        # slot s holds absolute position pos - ((pos - s) mod T); it is valid
+        # once written, i.e. unless we are still in the first wrap.
+        valid = jnp.where(pos >= T, jnp.ones((T,), bool), kpos <= pos)
+    else:
+        valid = kpos <= pos
+        if window > 0:
+            valid &= kpos > (pos - window)
+    scores = _grouped_scores(q, k_cache.astype(x.dtype), cfg)  # (B,K,G,1,T)
+    probs = _apply_mask_softmax(scores, valid[None, :])
+    out = _combine(probs, v_cache.astype(x.dtype), cfg, x.dtype)
+    out = out.reshape(B, 1, -1) @ params["wo"]
+    return out, KVCache(k=k_cache, v=v_cache)

@@ -1,0 +1,145 @@
+"""Shared layer primitives: norms, RoPE, MLPs, embeddings.
+
+Pure functional: params are nested dicts of arrays; every function takes
+(params, x, ...) and returns arrays. Initializers return the param dict and
+a parallel dict of logical-axis tuples (for sharding), kept in sync by
+construction.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partition import constrain
+
+
+def _split(key, n):
+    return jax.random.split(key, n)
+
+
+# ---------------------------------------------------------------------------
+# init helpers — every param carries its logical axes in a parallel tree
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in, d_out, axes, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    w = (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+    return w, axes
+
+
+def norm_params(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def norm_axes():
+    return {"scale": (None,)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = y * params["scale"].astype(jnp.float32)
+    if "bias" in params:
+        out = out + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(kind: str, params, x):
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN): swiglu / geglu / gelu
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model, d_ff, act, dtype):
+    ks = _split(key, 3)
+    gated = act in ("swiglu", "geglu")
+    params = {}
+    axes = {}
+    if gated:
+        params["w_gate"], axes["w_gate"] = dense_init(ks[0], d_model, d_ff, ("fsdp", "mlp"), dtype)
+        params["w_up"], axes["w_up"] = dense_init(ks[1], d_model, d_ff, ("fsdp", "mlp"), dtype)
+    else:
+        params["w_up"], axes["w_up"] = dense_init(ks[1], d_model, d_ff, ("fsdp", "mlp"), dtype)
+    params["w_down"], axes["w_down"] = dense_init(ks[2], d_ff, d_model, ("mlp", "fsdp"), dtype)
+    return params, axes
+
+
+def mlp_apply(params, x, act: str):
+    if act == "swiglu":
+        g = jax.nn.silu(x @ params["w_gate"])
+        h = g * (x @ params["w_up"])
+    elif act == "geglu":
+        g = jax.nn.gelu(x @ params["w_gate"], approximate=True)
+        h = g * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"], approximate=True)
+    h = constrain(h, ("batch",) + (None,) * (h.ndim - 2) + ("mlp",))
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab, d_model, dtype):
+    w = (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+    return w, ("vocab", "fsdp")
+
+
+def embed_lookup(embed_w, tokens, scale_by_dim: bool):
+    x = jnp.take(embed_w, tokens, axis=0)
+    if scale_by_dim:
+        x = x * jnp.sqrt(jnp.asarray(embed_w.shape[-1], x.dtype))
+    return x
+
+
+def unembed(x, w_out, softcap: float = 0.0):
+    logits = x @ w_out  # (B, S, vocab)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return constrain(logits, ("batch", None, "vocab"))

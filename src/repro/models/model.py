@@ -1,0 +1,302 @@
+"""Unified model API over every assigned architecture.
+
+    params, axes = init_params(cfg, key)
+    loss, metrics = train_forward(cfg, params, batch, rng)
+    logits, caches = prefill(cfg, params, batch)
+    logits, caches = decode_step(cfg, params, tokens, pos, caches)
+
+Batches (all token IDs int32):
+  decoder LMs : {"tokens": (B,S), "labels": (B,S)}
+  vlm         : + {"patch_embeds": (B, n_patches, D)} — stub frontend
+  audio (e-d) : {"frames": (B,T,D), "tokens": (B,S), "labels": (B,S)}
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, transformer
+from repro.sharding.partition import constrain
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg, key):
+    dtype = _dtype(cfg)
+    ks = layers._split(key, 8)
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    params["embed"], axes["embed"] = layers.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype)
+    params["layers"], axes["layers"] = transformer.init_decoder_layers(ks[1], cfg, dtype)
+    params["final_norm"] = layers.norm_params(cfg.d_model, dtype)
+    axes["final_norm"] = layers.norm_axes()
+    if not cfg.tie_embeddings:
+        params["lm_head"], axes["lm_head"] = layers.dense_init(
+            ks[2], cfg.d_model, cfg.vocab_size, ("fsdp", "vocab"), dtype, scale=0.02
+        )
+    if cfg.is_encdec:
+        enc_cfg = cfg
+        params["enc_layers"], axes["enc_layers"] = _init_encoder_layers(ks[3], enc_cfg, dtype)
+        params["enc_norm"] = layers.norm_params(cfg.d_model, dtype)
+        axes["enc_norm"] = layers.norm_axes()
+        params["cross"], axes["cross"] = _init_cross_layers(ks[4], cfg, dtype)
+    return params, axes
+
+
+def _init_encoder_layers(key, cfg, dtype):
+    per = []
+    ax = None
+    for i in range(cfg.n_encoder_layers):
+        p, ax = transformer.block_init(jax.random.fold_in(key, i), "attn_global", cfg, dtype)
+        per.append(p)
+    stacked = transformer._stack_params(per)
+    axes = jax.tree.map(
+        lambda a: ("layers",) + a if isinstance(a, tuple) else a, ax,
+        is_leaf=lambda v: isinstance(v, tuple),
+    )
+    return stacked, axes
+
+
+def _init_cross_layers(key, cfg, dtype):
+    """Per-decoder-layer cross-attention params (stacked over layers)."""
+    per = []
+    ax = None
+    for i in range(cfg.n_layers):
+        k = jax.random.fold_in(key, i)
+        p = {"norm": layers.norm_params(cfg.d_model, dtype)}
+        a = {"norm": layers.norm_axes()}
+        p["attn"], a["attn"] = attention.attn_init(k, cfg, dtype)
+        per.append(p)
+        ax = a
+    stacked = transformer._stack_params(per)
+    axes = jax.tree.map(
+        lambda v: ("layers",) + v if isinstance(v, tuple) else v, ax,
+        is_leaf=lambda v: isinstance(v, tuple),
+    )
+    return stacked, axes
+
+
+# ---------------------------------------------------------------------------
+# input embedding per family
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg, params, batch):
+    """Returns (x (B,S,D), positions (B,S), label_mask (B,S) or None)."""
+    tokens = batch["tokens"]
+    x = layers.embed_lookup(params["embed"], tokens, cfg.embed_scale)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        patches = batch["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        mask = jnp.concatenate(
+            [jnp.zeros(patches.shape[:2], bool), jnp.ones(tokens.shape, bool)], axis=1
+        )
+        return x, positions, mask
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return x, positions, None
+
+
+def _final_logits(cfg, params, x):
+    x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+    w_out = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return layers.unembed(x, w_out, cfg.logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# encoder (audio / enc-dec)
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg, params, frames):
+    """frames: (B, T, D) precomputed conv-frontend embeddings (stub)."""
+    x = frames.astype(_dtype(cfg))
+    x = x + layers.sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(x, p):
+        h = layers.apply_norm(cfg.norm, p["norm1"], x)
+        x = x + attention.attn_train(p["attn"], h, cfg, positions, causal=False, rope=False)
+        h2 = layers.apply_norm(cfg.norm, p["norm2"], x)
+        x = x + layers.mlp_apply(p["mlp"], h2, cfg.act)
+        return x, None
+
+    x, _ = jax.lax.scan(transformer._remat(body, cfg), x, params["enc_layers"])
+    return layers.apply_norm(cfg.norm, params["enc_norm"], x)
+
+
+def _decoder_encdec(cfg, params, x, positions, enc_out, rng):
+    """Decoder layers with interleaved cross-attention (scanned together)."""
+
+    def body(x, inp):
+        p_self, p_cross = inp
+        h = layers.apply_norm(cfg.norm, p_self["norm1"], x)
+        x = x + attention.attn_train(p_self["attn"], h, cfg, positions, rope=False)
+        hc = layers.apply_norm(cfg.norm, p_cross["norm"], x)
+        kv = attention.cross_kv(p_cross["attn"], enc_out, cfg)
+        x = x + attention.attn_cross(p_cross["attn"], hc, kv, cfg)
+        h2 = layers.apply_norm(cfg.norm, p_self["norm2"], x)
+        x = x + layers.mlp_apply(p_self["mlp"], h2, cfg.act)
+        return x, None
+
+    # decoder self layers live in params["layers"]["scan"][0] (unit = attn_global)
+    x, _ = jax.lax.scan(
+        transformer._remat(body, cfg), x, (params["layers"]["scan"][0], params["cross"])
+    )
+    return x
+
+
+# ---------------------------------------------------------------------------
+# train / prefill / decode entry points
+# ---------------------------------------------------------------------------
+
+
+def train_forward(cfg, params, batch, rng):
+    """Returns (loss, metrics)."""
+    if cfg.is_encdec:
+        enc_out = encode(cfg, params, batch["frames"])
+        tokens = batch["tokens"]
+        x = layers.embed_lookup(params["embed"], tokens, cfg.embed_scale)
+        x = x + layers.sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = _decoder_encdec(cfg, params, x, positions, enc_out, rng)
+        aux = jnp.zeros((), jnp.float32)
+        mask = None
+    else:
+        x, positions, mask = _embed_inputs(cfg, params, batch)
+        x = constrain(x, ("batch", "seq", "embed"))
+        x, aux = transformer.decoder_train(params["layers"], x, cfg, positions, rng)
+    labels = batch["labels"]
+    x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+    if mask is not None:
+        # vlm: hidden states cover [patches, text]; score text positions only
+        n_p = x.shape[1] - labels.shape[1]
+        x = x[:, n_p:]
+    w_out = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    # chunked CE: never materializes the full (B, S, V) logits
+    from repro.train.loss import chunked_ce
+
+    loss = chunked_ce(x, w_out, labels, n_chunks=8, softcap=cfg.logit_softcap)
+    total = loss + aux
+    return total, {"ce_loss": loss, "aux_loss": aux}
+
+
+def cross_entropy(logits, labels):
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def init_caches(cfg, batch: int, max_len: int):
+    caches = {"dec": transformer.decoder_caches(cfg, batch, max_len)}
+    if cfg.is_encdec:
+        # cross-attention K/V are computed at prefill and then static
+        hd = cfg.resolved_head_dim
+        T = cfg.encoder_seq
+        shape = (cfg.n_layers, batch, T, cfg.n_kv_heads, hd)
+        caches["cross_kv"] = (
+            jnp.zeros(shape, _dtype(cfg)),
+            jnp.zeros(shape, _dtype(cfg)),
+        )
+    return caches
+
+
+def cache_axes(cfg):
+    axes = {"dec": transformer.decoder_cache_axes(cfg)}
+    if cfg.is_encdec:
+        a = ("layers", "kv_batch", "kv_seq", "kv_heads", None)
+        axes["cross_kv"] = (a, a)
+    return axes
+
+
+def prefill(cfg, params, batch, caches):
+    """Prompt pass. Returns (last-position logits (B,V), caches)."""
+    if cfg.is_encdec:
+        enc_out = encode(cfg, params, batch["frames"])
+        tokens = batch["tokens"]
+        x = layers.embed_lookup(params["embed"], tokens, cfg.embed_scale)
+        x = x + layers.sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def body(carry, inp):
+            x = carry
+            p_self, p_cross, uc = inp
+            h = layers.apply_norm(cfg.norm, p_self["norm1"], x)
+            delta, uc = attention.attn_prefill(p_self["attn"], h, cfg, positions, uc)
+            x = x + delta
+            hc = layers.apply_norm(cfg.norm, p_cross["norm"], x)
+            kv = attention.cross_kv(p_cross["attn"], enc_out, cfg)
+            x = x + attention.attn_cross(p_cross["attn"], hc, kv, cfg)
+            h2 = layers.apply_norm(cfg.norm, p_self["norm2"], x)
+            x = x + layers.mlp_apply(p_self["mlp"], h2, cfg.act)
+            return x, (uc, kv)
+
+        x, (scan_caches, cross_kvs) = jax.lax.scan(
+            body, x, (params["layers"]["scan"][0], params["cross"], caches["dec"]["scan"][0])
+        )
+        caches = {
+            "dec": {"scan": (scan_caches,), "tail": ()},
+            "cross_kv": cross_kvs,
+        }
+    else:
+        x, positions, _ = _embed_inputs(cfg, params, batch)
+        x, dec_caches = transformer.decoder_prefill(params["layers"], x, cfg, positions, caches["dec"])
+        caches = {"dec": dec_caches}
+    logits = _final_logits(cfg, params, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def decode_step(cfg, params, tokens, pos, caches):
+    """tokens: (B,) next input ids; pos: () int32 their TEXT position.
+
+    For vlm configs the image patches occupy cache slots [0, n_patches);
+    the text position is offset internally so callers stay uniform.
+    """
+    if cfg.family == "vlm":
+        pos = pos + cfg.n_patches
+    x = layers.embed_lookup(params["embed"], tokens[:, None], cfg.embed_scale)
+    if cfg.is_encdec:
+        x = x + layers.sinusoidal_positions(4096, cfg.d_model, x.dtype)[pos][None, None]
+
+        def body(x, inp):
+            p_self, p_cross, uc, ckv = inp
+            h = layers.apply_norm(cfg.norm, p_self["norm1"], x)
+            delta, uc = attention.attn_decode(p_self["attn"], h, cfg, pos, uc)
+            x = x + delta
+            hc = layers.apply_norm(cfg.norm, p_cross["norm"], x)
+            x = x + attention.attn_cross(p_cross["attn"], hc, ckv, cfg)
+            h2 = layers.apply_norm(cfg.norm, p_self["norm2"], x)
+            x = x + layers.mlp_apply(p_self["mlp"], h2, cfg.act)
+            return x, uc
+
+        x, scan_caches = jax.lax.scan(
+            body,
+            x,
+            (
+                params["layers"]["scan"][0],
+                params["cross"],
+                caches["dec"]["scan"][0],
+                caches["cross_kv"],
+            ),
+        )
+        caches = {"dec": {"scan": (scan_caches,), "tail": ()}, "cross_kv": caches["cross_kv"]}
+    else:
+        x, dec_caches = transformer.decoder_decode(params["layers"], x, cfg, pos, caches["dec"])
+        caches = {"dec": dec_caches}
+    logits = _final_logits(cfg, params, x)
+    return logits[:, 0], caches

@@ -1,0 +1,143 @@
+"""Mixture-of-Experts FFN: capacity-factor einsum dispatch, shared experts,
+expert parallelism, and the PASS-inspired Boltzmann sampled router.
+
+Dispatch follows the grouped capacity scheme (MaxText-style): tokens are
+reshaped into groups of `group_size`; each group dispatches into per-expert
+capacity slots C = ceil(group_size * top_k / n_experts * capacity_factor).
+Dispatch/combine are one-hot einsums, so the whole layer is dense linear
+algebra that GSPMD can shard: experts over the "model" axis (EP — the
+dispatch einsum lowers to an all-to-all), groups over "data"/"pod".
+
+Router modes:
+  * 'topk'      — deterministic softmax top-k (paper-faithful arch baseline)
+  * 'boltzmann' — PASS-inspired: experts are SAMPLED without replacement
+    from the router's Boltzmann distribution via Gumbel perturbation
+    (Gumbel-top-k == Plackett-Luce sampling). Temperature -> 0 recovers
+    deterministic top-k. This is the paper's thesis — sample the
+    distribution instead of argmaxing the energy landscape — applied to
+    routing; it explores experts proportionally to router probability mass.
+
+Tokens overflowing expert capacity are dropped (contribute zero; the
+residual stream carries them), standard for capacity-factor MoE.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.sharding.partition import constrain
+
+
+def moe_init(key, cfg, dtype):
+    m = cfg.moe
+    ks = layers._split(key, 5)
+    params, axes = {}, {}
+    params["router"], axes["router"] = layers.dense_init(
+        ks[0], cfg.d_model, m.n_experts, ("fsdp", None), dtype, scale=0.02
+    )
+    d_e = m.d_expert
+    gated = cfg.act in ("swiglu", "geglu")
+    shp_in = (m.n_experts, cfg.d_model, d_e)
+    shp_out = (m.n_experts, d_e, cfg.d_model)
+    def expert_w(k, shape):
+        return (jax.random.normal(k, shape) * (1.0 / math.sqrt(shape[1]))).astype(dtype)
+    if gated:
+        params["w_gate"] = expert_w(ks[1], shp_in)
+        axes["w_gate"] = ("experts", "fsdp", "mlp")
+    params["w_up"] = expert_w(ks[2], shp_in)
+    axes["w_up"] = ("experts", "fsdp", "mlp")
+    params["w_down"] = expert_w(ks[3], shp_out)
+    axes["w_down"] = ("experts", "mlp", "fsdp")
+    if m.n_shared > 0:
+        sk = layers._split(ks[4], 2)
+        params["shared"], axes["shared"] = layers.mlp_init(
+            sk[0], cfg.d_model, m.n_shared * d_e, cfg.act, dtype
+        )
+        params["shared_gate"], axes["shared_gate"] = layers.dense_init(
+            sk[1], cfg.d_model, 1, ("fsdp", None), dtype, scale=0.02
+        )
+    return params, axes
+
+
+def _capacity(group_size: int, m) -> int:
+    c = math.ceil(group_size * m.top_k / m.n_experts * m.capacity_factor)
+    return max(4, int(math.ceil(c / 4) * 4))
+
+
+def _select_experts(logits, m, key):
+    """Return (indices (..., k), weights (..., k)) for the chosen experts."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    if m.router_mode == "boltzmann":
+        assert key is not None, "boltzmann router needs an rng key"
+        g = jax.random.gumbel(key, logits.shape, jnp.float32)
+        scores = logits.astype(jnp.float32) / m.router_temp + g
+    else:
+        scores = logits.astype(jnp.float32)
+    _, idx = jax.lax.top_k(scores, m.top_k)
+    w = jnp.take_along_axis(probs, idx, axis=-1)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return idx, w, probs
+
+
+def moe_apply(params, x, cfg, key=None):
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    tokens = x.reshape(B * S, D)
+    T = B * S
+    gs = min(m.group_size, T)
+    # pad T to a multiple of the group size
+    pad = (-T) % gs
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    G = tokens.shape[0] // gs
+    xg = tokens.reshape(G, gs, D)
+    xg = constrain(xg, ("batch", None, None))
+
+    logits = jnp.einsum("gtd,de->gte", xg, params["router"])
+    idx, w, probs = _select_experts(logits, m, key)  # (G,gs,k), (G,gs,k)
+
+    C = _capacity(gs, m)
+    onehot = jax.nn.one_hot(idx, m.n_experts, dtype=jnp.float32)  # (G,gs,k,E)
+    # capacity slot per (token, choice): running count of earlier tokens
+    # routed to the same expert within the group
+    pos_in_expert = jnp.cumsum(onehot.reshape(G, gs * m.top_k, m.n_experts), axis=1)
+    pos_in_expert = pos_in_expert.reshape(G, gs, m.top_k, m.n_experts) * onehot - 1.0
+    kept = (pos_in_expert < C) & (pos_in_expert >= 0)
+    slot_oh = jax.nn.one_hot(pos_in_expert.astype(jnp.int32), C, dtype=jnp.float32)
+    slot_oh = slot_oh * kept.astype(jnp.float32)[..., None]
+    dispatch = jnp.einsum("gske,gskec->gsec", onehot, slot_oh)
+    # dispatch: (G, gs, E, C) — 1 where token s goes to expert e slot c
+    combine = dispatch * jnp.sum(
+        w[..., None] * onehot, axis=2
+    )[..., None]  # weight per (token, expert) broadcast over slots
+
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg)
+    expert_in = constrain(expert_in, ("batch", "experts", None, None))
+    if "w_gate" in params:
+        gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"])) if cfg.act == "swiglu" else jax.nn.gelu(jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"]), approximate=True)
+        h = gate * jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"]), approximate=True)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    expert_out = constrain(expert_out, ("batch", "experts", None, None))
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), expert_out)
+
+    out = out.reshape(-1, D)
+    if pad:
+        out = out[:T]
+    out = out.reshape(B, S, D)
+
+    if m.n_shared > 0:
+        shared = layers.mlp_apply(params["shared"], x, cfg.act)
+        sg = jax.nn.sigmoid(x @ params["shared_gate"])
+        out = out + sg * shared
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    f = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))      # fraction routed
+    p = jnp.mean(probs, axis=(0, 1))                        # mean router prob
+    aux = m.n_experts * jnp.sum(f * p) * m.aux_loss_weight
+    return out, aux

@@ -1,0 +1,116 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block: x -> [W1 -> causal depthwise conv(4) -> RG-LRU] * gelu(W2 x) -> W_out.
+
+RG-LRU (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    log a_t = -c * softplus(Lambda) * r_t (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses jax.lax.associative_scan over time (log-depth on TPU; the
+linear recurrence is associative: (a1,b1)∘(a2,b2) = (a1*a2, b1*a2 + b2)).
+Decode is a single fused step carrying (h, conv window) — O(1) per token,
+which is what makes the 500k-context cell feasible.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.sharding.partition import constrain
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array     # (B, R) recurrent state
+    conv: jax.Array  # (B, W-1, R) last conv inputs
+
+
+def rglru_init(key, cfg, dtype):
+    R = cfg.lru_width or cfg.d_model
+    D = cfg.d_model
+    ks = layers._split(key, 7)
+    params, axes = {}, {}
+    params["w_in1"], axes["w_in1"] = layers.dense_init(ks[0], D, R, ("fsdp", "mlp"), dtype)
+    params["w_in2"], axes["w_in2"] = layers.dense_init(ks[1], D, R, ("fsdp", "mlp"), dtype)
+    params["w_out"], axes["w_out"] = layers.dense_init(ks[2], R, D, ("mlp", "fsdp"), dtype)
+    params["conv_w"] = (jax.random.normal(ks[3], (cfg.conv_width, R)) * 0.1).astype(dtype)
+    axes["conv_w"] = (None, "mlp")
+    params["w_a"], axes["w_a"] = layers.dense_init(ks[4], R, R, ("mlp", "mlp"), dtype, scale=0.02)
+    params["w_x"], axes["w_x"] = layers.dense_init(ks[5], R, R, ("mlp", "mlp"), dtype, scale=0.02)
+    params["b_a"] = jnp.zeros((R,), dtype)
+    params["b_x"] = jnp.zeros((R,), dtype)
+    # Lambda init so that a spans (0.9, 0.999) at r=1 (Griffin's init range)
+    lam = jax.random.uniform(ks[6], (R,), jnp.float32, 0.9, 0.999)
+    params["lambda_raw"] = jnp.log(jnp.expm1(-jnp.log(lam) / _C)).astype(dtype)
+    axes["b_a"], axes["b_x"], axes["lambda_raw"] = ("mlp",), ("mlp",), ("mlp",)
+    return params, axes
+
+
+def _gates(params, u):
+    """u: (..., R) conv output. Returns (log_a, beta_x) in f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_a"].astype(jnp.float32) + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ params["w_x"].astype(jnp.float32) + params["b_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lambda_raw"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-9)) * i * uf
+    return a, b
+
+
+def _conv_train(params, x):
+    """Causal depthwise conv over (B,S,R): y_t = sum_i w_i x_{t-W+1+i}."""
+    W = params["conv_w"].shape[0]
+    acc = jnp.zeros_like(x)
+    for i in range(W):
+        shift = W - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        acc = acc + params["conv_w"][i] * xi
+    return acc
+
+
+def rglru_train(params, x, cfg):
+    """x: (B,S,D) -> (B,S,D), full-sequence parallel (associative scan)."""
+    u1 = x @ params["w_in1"]
+    u2 = x @ params["w_in2"]
+    u1 = constrain(u1, ("batch", None, "mlp"))
+    c = _conv_train(params, u1)
+    a, b = _gates(params, c)
+
+    def combine(l, r):
+        return (l[0] * r[0], l[1] * r[0] + r[1])
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h.astype(x.dtype) * jax.nn.gelu(u2, approximate=True)
+    y = constrain(y, ("batch", None, "mlp"))
+    return y @ params["w_out"]
+
+
+def rglru_init_state(cfg, batch: int, dtype) -> RGLRUState:
+    R = cfg.lru_width or cfg.d_model
+    return RGLRUState(
+        h=jnp.zeros((batch, R), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, R), dtype),
+    )
+
+
+def rglru_state_axes() -> RGLRUState:
+    return RGLRUState(h=("kv_batch", "mlp"), conv=("kv_batch", None, "mlp"))
+
+
+def rglru_decode(params, x, cfg, state: RGLRUState):
+    """x: (B,1,D); one-token step. Returns (y (B,1,D), new state)."""
+    u1 = x[:, 0] @ params["w_in1"]  # (B,R)
+    u2 = x[:, 0] @ params["w_in2"]
+    window = jnp.concatenate([state.conv, u1[:, None].astype(state.conv.dtype)], axis=1)
+    c = jnp.einsum("bwr,wr->br", window.astype(x.dtype), params["conv_w"])
+    a, b = _gates(params, c)
+    h = a * state.h + b
+    y = h.astype(x.dtype) * jax.nn.gelu(u2, approximate=True)
+    out = (y @ params["w_out"])[:, None]
+    return out, RGLRUState(h=h, conv=window[:, 1:])

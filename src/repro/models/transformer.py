@@ -1,0 +1,390 @@
+"""Model assembly: decoder-only LMs (dense / MoE / hybrid / ssm / vlm) and
+the encoder-decoder (audio) variant.
+
+Layer heterogeneity is expressed as a repeating `block_pattern` unit (e.g.
+RecurrentGemma's ("rglru", "rglru", "attn_local")). Parameters for each
+position in the unit are STACKED across units and the forward pass is a
+jax.lax.scan over units — compile time is O(unit), not O(depth), which is
+what keeps 64-layer dry-runs tractable. Remainder layers (depth % unit)
+run unscanned.
+
+Block contract: every block returns a residual DELTA; the assembly adds it.
+Temporal mixers: attn_global | attn_local | rglru | mlstm | slstm.
+Channel mixer per cfg: dense MLP (d_ff > 0), MoE (cfg.moe), or none
+(mlstm/slstm embed their own FFN).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, rglru, xlstm
+from repro.sharding.partition import constrain
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _kv_dtype(cfg):
+    return jnp.dtype(cfg.kv_cache_dtype)
+
+
+# ---------------------------------------------------------------------------
+# per-block init / apply
+# ---------------------------------------------------------------------------
+
+
+def _has_channel(kind: str, cfg) -> bool:
+    return kind in ("attn_global", "attn_local", "rglru") and (cfg.d_ff > 0 or cfg.moe)
+
+
+def block_init(key, kind: str, cfg, dtype):
+    ks = layers._split(key, 4)
+    params: dict[str, Any] = {"norm1": layers.norm_params(cfg.d_model, dtype)}
+    axes: dict[str, Any] = {"norm1": layers.norm_axes()}
+    if kind in ("attn_global", "attn_local"):
+        params["attn"], axes["attn"] = attention.attn_init(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        params["rglru"], axes["rglru"] = rglru.rglru_init(ks[0], cfg, dtype)
+    elif kind == "mlstm":
+        params["mlstm"], axes["mlstm"] = xlstm.mlstm_init(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        params["slstm"], axes["slstm"] = xlstm.slstm_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if _has_channel(kind, cfg):
+        params["norm2"] = layers.norm_params(cfg.d_model, dtype)
+        axes["norm2"] = layers.norm_axes()
+        if cfg.moe:
+            params["moe"], axes["moe"] = moe.moe_init(ks[1], cfg, dtype)
+        else:
+            params["mlp"], axes["mlp"] = layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return params, axes
+
+
+def block_train(params, kind: str, x, cfg, positions, rng):
+    """x -> (x', aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.apply_norm(cfg.norm, params["norm1"], x)
+    if kind == "attn_global":
+        delta = attention.attn_train(params["attn"], h, cfg, positions)
+    elif kind == "attn_local":
+        delta = attention.attn_train(params["attn"], h, cfg, positions, window=cfg.window)
+    elif kind == "rglru":
+        delta = rglru.rglru_train(params["rglru"], h, cfg)
+    elif kind == "mlstm":
+        delta = xlstm.mlstm_block_train(params["mlstm"], h, cfg)
+    elif kind == "slstm":
+        delta = xlstm.slstm_block_train(params["slstm"], h, cfg)
+    else:
+        raise ValueError(kind)
+    x = x + delta
+    if _has_channel(kind, cfg):
+        h2 = layers.apply_norm(cfg.norm, params["norm2"], x)
+        if cfg.moe:
+            out, aux = moe.moe_apply(params["moe"], h2, cfg, rng)
+        else:
+            out = layers.mlp_apply(params["mlp"], h2, cfg.act)
+        x = x + out
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, aux
+
+
+def block_cache_init(kind: str, cfg, batch: int, max_len: int):
+    if kind == "attn_global":
+        return attention.init_cache(cfg, batch, max_len, _kv_dtype(cfg))
+    if kind == "attn_local":
+        return attention.init_cache(cfg, batch, min(max_len, cfg.window), _kv_dtype(cfg))
+    if kind == "rglru":
+        return rglru.rglru_init_state(cfg, batch, _dtype(cfg))
+    if kind == "mlstm":
+        return xlstm.mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm.slstm_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_cache_axes(kind: str):
+    if kind in ("attn_global", "attn_local"):
+        return attention.cache_axes()
+    if kind == "rglru":
+        return rglru.rglru_state_axes()
+    if kind == "mlstm":
+        return xlstm.mlstm_state_axes()
+    if kind == "slstm":
+        return xlstm.slstm_state_axes()
+    raise ValueError(kind)
+
+
+def block_prefill(params, kind: str, x, cfg, positions, cache):
+    """Prompt pass that also fills the cache. Returns (x', cache')."""
+    h = layers.apply_norm(cfg.norm, params["norm1"], x)
+    if kind in ("attn_global", "attn_local"):
+        window = cfg.window if kind == "attn_local" else 0
+        if kind == "attn_local" and cache.k.shape[1] < x.shape[1]:
+            # ring cache shorter than the prompt: run train-style attention,
+            # then write the LAST `window` keys into the ring.
+            delta = attention.attn_train(params["attn"], h, cfg, positions, window=window)
+            q, k, v = attention._project_qkv(params["attn"], h, cfg, positions, True)
+            W = cache.k.shape[1]
+            S = x.shape[1]
+            # slots for positions S-W..S-1 at index pos % W
+            idx = (jnp.arange(S - W, S) % W)
+            cache = attention.KVCache(
+                k=cache.k.at[:, idx].set(k[:, -W:].astype(cache.k.dtype)),
+                v=cache.v.at[:, idx].set(v[:, -W:].astype(cache.v.dtype)),
+            )
+        else:
+            delta, cache = attention.attn_prefill(params["attn"], h, cfg, positions, cache, window=window)
+    elif kind == "rglru":
+        # run the parallel scan, then rebuild the decode state from the tail
+        delta = rglru.rglru_train(params["rglru"], h, cfg)
+        cache = _rglru_state_from_prefill(params["rglru"], h, cfg)
+    elif kind == "mlstm":
+        delta = xlstm.mlstm_block_train(params["mlstm"], h, cfg)
+        cache = _mlstm_state_from_prefill(params["mlstm"], h, cfg)
+    elif kind == "slstm":
+        B = x.shape[0]
+        st0 = xlstm.slstm_init_state(cfg, B)
+        hseq, cache = xlstm.slstm_scan(params["slstm"], h, cfg, st0)
+        delta = _slstm_block_from_scan(params["slstm"], h, hseq, cfg)
+    else:
+        raise ValueError(kind)
+    x = x + delta
+    if _has_channel(kind, cfg):
+        h2 = layers.apply_norm(cfg.norm, params["norm2"], x)
+        if cfg.moe:
+            out, _ = moe.moe_apply(params["moe"], h2, cfg, None)
+        else:
+            out = layers.mlp_apply(params["mlp"], h2, cfg.act)
+        x = x + out
+    return x, cache
+
+
+def _slstm_block_from_scan(params, x, hseq, cfg):
+    h = layers.rmsnorm(params["gn"], hseq.astype(x.dtype))
+    y = x + h
+    z = layers.rmsnorm(params["ffn_norm"], y)
+    return layers.mlp_apply(params["ffn"], z, "geglu") + h
+
+
+def _rglru_state_from_prefill(params, x, cfg):
+    """Recompute the final (h, conv window) after a parallel prefill."""
+    u1 = x @ params["w_in1"]
+    c = rglru._conv_train(params, u1)
+    a, b = rglru._gates(params, c)
+
+    def combine(l, r):
+        return (l[0] * r[0], l[1] * r[0] + r[1])
+
+    _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    W = cfg.conv_width
+    conv_tail = u1[:, -(W - 1):].astype(_dtype(cfg))
+    # left-pad if the prompt is shorter than the conv window
+    pad = (W - 1) - conv_tail.shape[1]
+    if pad > 0:
+        conv_tail = jnp.pad(conv_tail, ((0, 0), (pad, 0), (0, 0)))
+    return rglru.RGLRUState(h=hs[:, -1], conv=conv_tail)
+
+
+def _mlstm_state_from_prefill(params, x, cfg):
+    """Accumulate (C, n, m) over the prompt via the chunkwise scan."""
+    a = x @ params["w_up_a"]
+    _, st = xlstm.mlstm_chunkwise(params, a, cfg.n_heads, cfg.mlstm_chunk)
+    return st
+
+
+def block_decode(params, kind: str, x, cfg, pos, cache):
+    h = layers.apply_norm(cfg.norm, params["norm1"], x)
+    if kind in ("attn_global", "attn_local"):
+        window = cfg.window if kind == "attn_local" else 0
+        delta, cache = attention.attn_decode(params["attn"], h, cfg, pos, cache, window=window)
+    elif kind == "rglru":
+        delta, cache = rglru.rglru_decode(params["rglru"], h, cfg, cache)
+    elif kind == "mlstm":
+        delta, cache = xlstm.mlstm_block_decode(params["mlstm"], h, cfg, cache)
+    elif kind == "slstm":
+        delta, cache = xlstm.slstm_block_decode(params["slstm"], h, cfg, cache)
+    else:
+        raise ValueError(kind)
+    x = x + delta
+    if _has_channel(kind, cfg):
+        h2 = layers.apply_norm(cfg.norm, params["norm2"], x)
+        if cfg.moe:
+            out, _ = moe.moe_apply(params["moe"], h2, cfg, None)
+        else:
+            out = layers.mlp_apply(params["mlp"], h2, cfg.act)
+        x = x + out
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# unit decomposition (scan over repeated units)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class UnitPlan:
+    unit: tuple[str, ...]   # kinds within the repeating unit
+    n_scan: int             # scanned repetitions
+    tail: tuple[str, ...]   # remainder kinds (unscanned)
+
+
+def unit_plan(cfg) -> UnitPlan:
+    if cfg.block_pattern is None:
+        return UnitPlan(unit=("attn_global",), n_scan=cfg.n_layers, tail=())
+    unit = tuple(cfg.block_pattern)
+    n_scan, rem = divmod(cfg.n_layers, len(unit))
+    return UnitPlan(unit=unit, n_scan=n_scan, tail=unit[:rem])
+
+
+def _stack_params(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_decoder_layers(key, cfg, dtype):
+    """Returns ({'scan': tuple-of-stacked, 'tail': tuple}, same-shape axes)."""
+    plan = unit_plan(cfg)
+    assert plan.n_scan >= 1, "unit larger than layer count"
+    scan_params, scan_axes = [], []
+    for pos, kind in enumerate(plan.unit):
+        per_unit = []
+        ax = None
+        for u in range(plan.n_scan):
+            k = jax.random.fold_in(key, pos * 10_000 + u)
+            p, ax = block_init(k, kind, cfg, dtype)
+            per_unit.append(p)
+        scan_params.append(_stack_params(per_unit))
+        scan_axes.append(jax.tree.map(lambda a: ("layers",) + a if isinstance(a, tuple) else a, ax, is_leaf=lambda v: isinstance(v, tuple)))
+    tail_params, tail_axes = [], []
+    for pos, kind in enumerate(plan.tail):
+        k = jax.random.fold_in(key, 777_000 + pos)
+        p, ax = block_init(k, kind, cfg, dtype)
+        tail_params.append(p)
+        tail_axes.append(ax)
+    return (
+        {"scan": tuple(scan_params), "tail": tuple(tail_params)},
+        {"scan": tuple(scan_axes), "tail": tuple(tail_axes)},
+    )
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    policy = (
+        jax.checkpoint_policies.nothing_saveable
+        if cfg.remat == "full"
+        else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    )
+    return jax.checkpoint(fn, policy=policy)
+
+
+def decoder_train(params, x, cfg, positions, rng):
+    """Run all layers. Returns (x, total_aux)."""
+    plan = unit_plan(cfg)
+    n_scan = plan.n_scan
+
+    def unit_fn(x, unit_params, rngs):
+        aux = jnp.zeros((), jnp.float32)
+        for pos, kind in enumerate(plan.unit):
+            x, a = block_train(unit_params[pos], kind, x, cfg, positions, rngs[pos])
+            aux = aux + a
+        return x, aux
+
+    unit_fn_r = _remat(unit_fn, cfg)
+
+    if n_scan > 0:
+        keys = jax.random.split(rng, n_scan * len(plan.unit)).reshape(n_scan, len(plan.unit))
+
+        def body(carry, inp):
+            x, aux = carry
+            up, ks = inp
+            x, a = unit_fn_r(x, up, ks)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), (params["scan"], keys))
+    else:
+        aux = jnp.zeros((), jnp.float32)
+    for pos, kind in enumerate(plan.tail):
+        x, a = block_train(params["tail"][pos], kind, x, cfg, positions, jax.random.fold_in(rng, 999_000 + pos))
+        aux = aux + a
+    return x, aux
+
+
+def decoder_caches(cfg, batch: int, max_len: int):
+    plan = unit_plan(cfg)
+    assert plan.n_scan >= 1, "unit larger than layer count"
+    scan_caches = []
+    for kind in plan.unit:
+        reps = [block_cache_init(kind, cfg, batch, max_len) for _ in range(plan.n_scan)]
+        scan_caches.append(jax.tree.map(lambda *xs: jnp.stack(xs), *reps))
+    tail_caches = tuple(block_cache_init(kind, cfg, batch, max_len) for kind in plan.tail)
+    return {"scan": tuple(scan_caches), "tail": tail_caches}
+
+
+def _is_axes_leaf(v) -> bool:
+    """Leaf = a tuple of logical-axis names (str/None), not a pytree node."""
+    return isinstance(v, tuple) and all(isinstance(e, (str, type(None))) for e in v)
+
+
+def decoder_cache_axes(cfg):
+    plan = unit_plan(cfg)
+    scan_axes = tuple(
+        jax.tree.map(
+            lambda a: ("layers",) + a,
+            block_cache_axes(kind),
+            is_leaf=_is_axes_leaf,
+        )
+        for kind in plan.unit
+    )
+    tail_axes = tuple(block_cache_axes(kind) for kind in plan.tail)
+    return {"scan": scan_axes, "tail": tail_axes}
+
+
+def decoder_prefill(params, x, cfg, positions, caches):
+    plan = unit_plan(cfg)
+
+    if plan.n_scan > 0:
+        def body(x, inp):
+            up, uc = inp
+            new_uc = []
+            for pos, kind in enumerate(plan.unit):
+                x, c = block_prefill(up[pos], kind, x, cfg, positions, uc[pos])
+                new_uc.append(c)
+            return x, tuple(new_uc)
+
+        x, scan_caches = jax.lax.scan(body, x, (params["scan"], caches["scan"]))
+    else:
+        scan_caches = caches["scan"]
+    tail_caches = []
+    for pos, kind in enumerate(plan.tail):
+        x, c = block_prefill(params["tail"][pos], kind, x, cfg, positions, caches["tail"][pos])
+        tail_caches.append(c)
+    return x, {"scan": scan_caches, "tail": tuple(tail_caches)}
+
+
+def decoder_decode(params, x, cfg, pos, caches):
+    plan = unit_plan(cfg)
+
+    if plan.n_scan > 0:
+        def body(x, inp):
+            up, uc = inp
+            new_uc = []
+            for i, kind in enumerate(plan.unit):
+                x, c = block_decode(up[i], kind, x, cfg, pos, uc[i])
+                new_uc.append(c)
+            return x, tuple(new_uc)
+
+        x, scan_caches = jax.lax.scan(body, x, (params["scan"], caches["scan"]))
+    else:
+        scan_caches = caches["scan"]
+    tail_caches = []
+    for i, kind in enumerate(plan.tail):
+        x, c = block_decode(params["tail"][i], kind, x, cfg, pos, caches["tail"][i])
+        tail_caches.append(c)
+    return x, {"scan": scan_caches, "tail": tuple(tail_caches)}

@@ -1,0 +1,327 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM — exponential-gated matrix-memory cell:
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))
+with log-domain stabilizer m_t (gates i = exp(itilde), f = sigmoid-free
+exp(ftilde) accumulated in log space). Two executions of the SAME math:
+  * train/prefill: fully parallel quadratic form (attention-like with a
+    cumulative-gate decay matrix) — MXU-friendly, O(S^2) like attention;
+  * decode: O(1) recurrent step carrying (C, n, m) — this is why the ssm
+    arch runs the 500k-context cell.
+
+sLSTM — scalar memory with recurrent gate mixing (R h_{t-1} term) forces
+sequential execution: lax.scan over time, block-diagonal per-head R.
+
+Block wrappers follow the xLSTM paper: mLSTM = pre-up-projection block
+(projects up by pf=2, cell in the wide space, gated skip); sLSTM =
+post-up-projection block (cell at d_model, then a pf=4/3 gated FFN).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.sharding.partition import constrain
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array  # (B, H, d, d)
+    n: jax.Array  # (B, H, d)
+    m: jax.Array  # (B, H)
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, D)
+    n: jax.Array  # (B, D)
+    h: jax.Array  # (B, D)
+    m: jax.Array  # (B, D)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg, dtype):
+    D = cfg.d_model
+    H = cfg.n_heads
+    pf = 2
+    Du = pf * D
+    ks = layers._split(key, 8)
+    params, axes = {}, {}
+    params["w_up_a"], axes["w_up_a"] = layers.dense_init(ks[0], D, Du, ("fsdp", "mlp"), dtype)
+    params["w_up_b"], axes["w_up_b"] = layers.dense_init(ks[1], D, Du, ("fsdp", "mlp"), dtype)
+    # block-diagonal per-head q/k/v (the xLSTM design): (H, d, d) each
+    d_head = Du // H
+    def _blockdiag(k):
+        return (jax.random.normal(k, (H, d_head, d_head)) * 0.02).astype(dtype)
+    params["w_q"] = _blockdiag(ks[2])
+    params["w_k"] = _blockdiag(ks[3])
+    params["w_v"] = _blockdiag(ks[4])
+    axes["w_q"] = axes["w_k"] = axes["w_v"] = ("heads", None, None)
+    params["w_if"], axes["w_if"] = layers.dense_init(ks[5], Du, 2 * H, ("mlp", None), dtype, scale=0.02)
+    params["b_if"] = jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(dtype)
+    axes["b_if"] = (None,)
+    params["w_down"], axes["w_down"] = layers.dense_init(ks[6], Du, D, ("mlp", "fsdp"), dtype)
+    params["gn"] = layers.norm_params(Du, dtype)
+    axes["gn"] = layers.norm_axes()
+    return params, axes
+
+
+def _mlstm_qkv_gates(params, a, H):
+    B, S, Du = a.shape
+    d = Du // H
+    ah = a.reshape(B, S, H, d)
+    q = jnp.einsum("bshd,hde->bshe", ah, params["w_q"])
+    k = jnp.einsum("bshd,hde->bshe", ah, params["w_k"]) / jnp.sqrt(jnp.asarray(d, a.dtype))
+    v = jnp.einsum("bshd,hde->bshe", ah, params["w_v"])
+    gates = (a @ params["w_if"] + params["b_if"]).astype(jnp.float32)  # (B,S,2H)
+    itilde, ftilde = gates[..., :H], gates[..., H:]
+    log_f = -jax.nn.softplus(-ftilde)  # log sigmoid(ftilde): bounded forget
+    return q, k, v, itilde, log_f
+
+
+def mlstm_parallel(params, a, H):
+    """Parallel quadratic form. a: (B,S,Du) -> (B,S,Du)."""
+    B, S, Du = a.shape
+    d = Du // H
+    q, k, v, itilde, log_f = _mlstm_qkv_gates(params, a, H)
+    F = jnp.cumsum(log_f, axis=1)                       # (B,S,H) cumulative
+    u = itilde - F                                      # (B,S,H)
+    mstar = jax.lax.cummax(u, axis=1)                   # running max
+    m = F + mstar                                       # stabilizer per target t
+    # decay D_ts = exp(F_t - F_s + i_s - m_t) = exp(u_s - mstar_t), s<=t
+    logD = u[:, None, :, :] - mstar[:, :, None, :]      # (B,t,s,H)
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    Dmat = jnp.where(tri[None, :, :, None], jnp.exp(logD), 0.0)
+    scores = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32), k.astype(jnp.float32))
+    w = scores * Dmat
+    denom = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)), jnp.exp(-m))  # (B,t,H)
+    h = jnp.einsum("btsh,bshd->bthd", w, v.astype(jnp.float32)) / denom[..., None]
+    return h.reshape(B, S, Du).astype(a.dtype)
+
+
+def mlstm_step(params, a_t, H, state: MLSTMState):
+    """Recurrent step. a_t: (B,Du). Same math as mlstm_parallel."""
+    B, Du = a_t.shape
+    d = Du // H
+    a3 = a_t[:, None]
+    q, k, v, itilde, log_f = _mlstm_qkv_gates(params, a3, H)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                  # (B,H,d)
+    itilde, log_f = itilde[:, 0], log_f[:, 0]            # (B,H)
+    m_new = jnp.maximum(log_f + state.m, itilde)
+    f_eff = jnp.exp(log_f + state.m - m_new)
+    i_eff = jnp.exp(itilde - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = f_eff[..., None, None] * state.C + i_eff[..., None, None] * jnp.einsum("bhd,bhe->bhde", vf, kf)
+    n = f_eff[..., None] * state.n + i_eff[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhe->bhd", C, qf)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qf)), jnp.exp(-m_new))
+    h = (num / denom[..., None]).reshape(B, Du).astype(a_t.dtype)
+    return h, MLSTMState(C=C, n=n, m=m_new)
+
+
+def mlstm_chunkwise(params, a, H, chunk: int):
+    """Chunkwise-parallel mLSTM: scan over chunks carrying (C, n, m);
+    quadratic only within a chunk. Bit-matches mlstm_parallel/mlstm_step
+    (same stabilized math), with O(S * chunk) score memory — the form that
+    makes 32k-token prefill feasible.
+    """
+    B, S, Du = a.shape
+    d = Du // H
+    pad = (-S) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+    Sp = a.shape[1]
+    nc = Sp // chunk
+    q, k, v, itilde, log_f = _mlstm_qkv_gates(params, a, H)
+    if pad:
+        # padded steps must be no-ops on the carried state: i=0, f=1
+        valid = (jnp.arange(Sp) < S)[None, :, None]
+        itilde = jnp.where(valid, itilde, -1e30)
+        log_f = jnp.where(valid, log_f, 0.0)
+    # (B, nc, L, ...) chunked views, scan over nc
+    chunked = lambda t: jnp.moveaxis(t.reshape(B, nc, chunk, *t.shape[2:]), 1, 0)
+    qc, kc, vc, ic, fc = map(chunked, (q, k, v, itilde, log_f))
+
+    def body(carry, inp):
+        C0, n0, m0 = carry
+        q, k, v, it, lf = inp                 # (B,L,H,d) / (B,L,H)
+        F = jnp.cumsum(lf, axis=1)            # intra-chunk cumulative forget
+        u = it - F
+        mstar = jax.lax.cummax(u, axis=1)
+        m = F + jnp.maximum(m0[:, None], mstar)          # (B,L,H)
+        inter_w = jnp.exp(F + m0[:, None] - m)           # weight of C0/n0
+        logD = u[:, None, :, :] + F[:, :, None, :] - m[:, :, None, :]
+        L = q.shape[1]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(tri[None, :, :, None], jnp.exp(logD), 0.0)
+        qf = q.astype(jnp.float32)
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        scores = jnp.einsum("bthd,bshd->btsh", qf, kf) * D
+        num = jnp.einsum("btsh,bshd->bthd", scores, vf)
+        num = num + inter_w[..., None] * jnp.einsum("bhde,bthe->bthd", C0, qf)
+        dots = jnp.sum(scores, axis=2) + inter_w * jnp.einsum("bhd,bthd->bth", n0, qf)
+        denom = jnp.maximum(jnp.abs(dots), jnp.exp(-m))
+        h = num / denom[..., None]
+        # chunk-end state
+        F_L = F[:, -1]                                    # (B,H)
+        m_end = F_L + jnp.maximum(m0, mstar[:, -1])
+        wC = jnp.exp(u + F_L[:, None] - m_end[:, None])   # per source s
+        C1 = jnp.exp(F_L + m0 - m_end)[..., None, None] * C0 + jnp.einsum(
+            "bsh,bshd,bshe->bhde", wC, vf, kf
+        )
+        n1 = jnp.exp(F_L + m0 - m_end)[..., None] * n0 + jnp.einsum("bsh,bshd->bhd", wC, kf)
+        return (C1, n1, m_end), h
+
+    C0 = jnp.zeros((B, H, d, d), jnp.float32)
+    n0 = jnp.zeros((B, H, d), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    (C1, n1, m1), hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, Sp, Du)
+    if pad:
+        h = h[:, :S]
+    return h.astype(a.dtype), MLSTMState(C=C1, n=n1, m=m1)
+
+
+def mlstm_block_train(params, x, cfg):
+    a = x @ params["w_up_a"]
+    b = x @ params["w_up_b"]
+    a = constrain(a, ("batch", None, "mlp"))
+    if x.shape[1] > 4 * cfg.mlstm_chunk:
+        h, _ = mlstm_chunkwise(params, a, cfg.n_heads, cfg.mlstm_chunk)
+    else:
+        h = mlstm_parallel(params, a, cfg.n_heads)
+    h = layers.rmsnorm(params["gn"], h)
+    y = h * jax.nn.silu(b)
+    return y @ params["w_down"]
+
+
+def mlstm_block_decode(params, x, cfg, state: MLSTMState):
+    a = x[:, 0] @ params["w_up_a"]
+    b = x[:, 0] @ params["w_up_b"]
+    h, state = mlstm_step(params, a, cfg.n_heads, state)
+    h = layers.rmsnorm(params["gn"], h)
+    y = h * jax.nn.silu(b)
+    return (y @ params["w_down"])[:, None], state
+
+
+def mlstm_init_state(cfg, batch: int) -> MLSTMState:
+    H = cfg.n_heads
+    Du = 2 * cfg.d_model
+    d = Du // H
+    return MLSTMState(
+        C=jnp.zeros((batch, H, d, d), jnp.float32),
+        n=jnp.zeros((batch, H, d), jnp.float32),
+        m=jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+def mlstm_state_axes() -> MLSTMState:
+    return MLSTMState(
+        C=("kv_batch", "heads", None, None),
+        n=("kv_batch", "heads", None),
+        m=("kv_batch", "heads"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg, dtype):
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    ks = layers._split(key, 4)
+    params, axes = {}, {}
+    params["w_gates"], axes["w_gates"] = layers.dense_init(ks[0], D, 4 * D, ("fsdp", "mlp"), dtype)
+    # block-diagonal recurrent mixing: per head (H, dh, 4*dh)
+    params["r_gates"] = (jax.random.normal(ks[1], (H, dh, 4 * dh)) * 0.02).astype(dtype)
+    axes["r_gates"] = ("heads", None, None)
+    params["b_gates"] = jnp.concatenate(
+        [jnp.zeros((D,)), 2.0 * jnp.ones((D,)), jnp.zeros((2 * D,))]
+    ).astype(dtype)
+    axes["b_gates"] = (None,)
+    params["gn"] = layers.norm_params(D, dtype)
+    axes["gn"] = layers.norm_axes()
+    # post-up FFN (pf = 4/3 gated)
+    d_ff = int(4 * D / 3 / 64) * 64 or 64
+    params["ffn"], axes["ffn"] = layers.mlp_init(ks[2], D, d_ff, "geglu", dtype)
+    params["ffn_norm"] = layers.norm_params(D, dtype)
+    axes["ffn_norm"] = layers.norm_axes()
+    return params, axes
+
+
+def _slstm_cell(params, wx_t, state: SLSTMState, H: int):
+    """wx_t: (B, 4D) precomputed input contribution at step t."""
+    B = wx_t.shape[0]
+    D = wx_t.shape[1] // 4
+    dh = D // H
+    hprev = state.h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hprev, params["r_gates"].astype(jnp.float32))
+    gates = wx_t.astype(jnp.float32) + rec.reshape(B, 4 * D) + params["b_gates"].astype(jnp.float32)
+    itilde, ftilde, ztilde, otilde = jnp.split(gates, 4, axis=-1)
+    log_f = -jax.nn.softplus(-ftilde)
+    m_new = jnp.maximum(log_f + state.m, itilde)
+    f_eff = jnp.exp(log_f + state.m - m_new)
+    i_eff = jnp.exp(itilde - m_new)
+    c = f_eff * state.c + i_eff * jnp.tanh(ztilde)
+    n = f_eff * state.n + i_eff
+    h = jax.nn.sigmoid(otilde) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def slstm_scan(params, x, cfg, state: SLSTMState):
+    """x: (B,S,D) -> (B,S,D); sequential over time (inherent to sLSTM)."""
+    wx = x @ params["w_gates"]  # (B,S,4D)
+
+    def step(st, wx_t):
+        st = _slstm_cell(params, wx_t, st, cfg.n_heads)
+        return st, st.h
+
+    state, hs = jax.lax.scan(step, state, jnp.swapaxes(wx, 0, 1))
+    return jnp.swapaxes(hs, 0, 1).astype(x.dtype), state
+
+
+def slstm_block_train(params, x, cfg):
+    B = x.shape[0]
+    st = slstm_init_state(cfg, B)
+    h, _ = slstm_scan(params, x, cfg, st)
+    h = layers.rmsnorm(params["gn"], h.astype(x.dtype))
+    y = x + h  # cell residual inside the block
+    z = layers.rmsnorm(params["ffn_norm"], y)
+    return layers.mlp_apply(params["ffn"], z, "geglu") + h
+
+
+def slstm_block_decode(params, x, cfg, state: SLSTMState):
+    wx = x[:, 0] @ params["w_gates"]
+    state = _slstm_cell(params, wx, state, cfg.n_heads)
+    h = layers.rmsnorm(params["gn"], state.h.astype(x.dtype))
+    y = x[:, 0] + h
+    z = layers.rmsnorm(params["ffn_norm"], y)
+    out = layers.mlp_apply(params["ffn"], z, "geglu") + h
+    return out[:, None], state
+
+
+def slstm_init_state(cfg, batch: int) -> SLSTMState:
+    D = cfg.d_model
+    return SLSTMState(
+        c=jnp.zeros((batch, D), jnp.float32),
+        n=jnp.zeros((batch, D), jnp.float32),
+        h=jnp.zeros((batch, D), jnp.float32),
+        m=jnp.full((batch, D), -1e30, jnp.float32),
+    )
+
+
+def slstm_state_axes() -> SLSTMState:
+    a = ("kv_batch", "mlp")
+    return SLSTMState(c=a, n=a, h=a, m=a)

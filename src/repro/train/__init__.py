@@ -1,0 +1,1 @@
+from repro.train import checkpoint, loss, train_step  # noqa: F401

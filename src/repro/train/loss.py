@@ -1,0 +1,41 @@
+"""Loss utilities, including sequence-chunked cross-entropy.
+
+The naive CE materializes (B, S, V) logits; at vocab 256k and seq 4k that
+tensor dominates activation memory. `chunked_ce` computes the same value in
+S/chunk slabs (each slab's logits live only transiently), trading a second
+pass of the unembed matmul under remat for an O(S/chunk) activation saving.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def ce_from_logits(logits, labels):
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum(logz - gold), logits.shape[0] * logits.shape[1]
+
+
+def chunked_ce(x, w_out, labels, n_chunks: int = 8, softcap: float = 0.0):
+    """x: (B,S,D) final hidden; w_out: (D,V); labels: (B,S). Mean CE."""
+    B, S, D = x.shape
+    n_chunks = max(1, min(n_chunks, S))
+    while S % n_chunks:
+        n_chunks -= 1
+    xs = x.reshape(B, n_chunks, S // n_chunks, D).swapaxes(0, 1)
+    ls = labels.reshape(B, n_chunks, S // n_chunks).swapaxes(0, 1)
+
+    def body(acc, inp):
+        xc, lc = inp
+        logits = xc @ w_out
+        if softcap > 0:
+            logits = softcap * jnp.tanh(logits / softcap)
+        s, n = ce_from_logits(logits, lc)
+        return acc + s, None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    return total / (B * S)

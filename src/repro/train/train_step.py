@@ -1,0 +1,112 @@
+"""Train-step factory: loss -> grads (microbatched) -> compressed reduce ->
+AdamW — one jit-compiled function, sharded by the logical-axis rules.
+
+`make_train_step(cfg, ...)` returns (step_fn, TrainState helpers). The step
+is model-agnostic: any architecture from the registry plugs in through
+repro.models.model.train_forward.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+from repro.optim import adamw, compression, schedules
+from repro.sharding.partition import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = adamw.AdamWConfig()
+    microbatch: int = 0            # 0 = no gradient accumulation
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    compress_grads: bool = False   # int8 + error feedback on the DP reduce
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.OptState
+    ef: Optional[compression.EFState]
+    step: jax.Array
+
+
+def init_state(cfg, tcfg: TrainConfig, key) -> tuple[TrainState, Any]:
+    params, axes = model.init_params(cfg, key)
+    opt = adamw.init(params)
+    ef = compression.init(params) if tcfg.compress_grads else None
+    state = TrainState(params=params, opt=opt, ef=ef, step=jnp.zeros((), jnp.int32))
+    state_axes = TrainState(
+        params=axes,
+        opt=adamw.opt_state_axes(axes),
+        ef=compression.ef_axes(axes) if tcfg.compress_grads else None,
+        step=(),
+    )
+    return state, state_axes
+
+
+def make_train_step(cfg, tcfg: TrainConfig, param_axes=None):
+    """Returns step_fn(state, batch, rng) -> (state, metrics).
+
+    param_axes: optional logical-axes tree for the params. When given, the
+    gradient tree is sharding-constrained to the PARAM layout before the
+    optimizer — GSPMD then lowers the cross-replica gradient reduction as a
+    reduce-scatter into the FSDP shards (half the bytes of the all-reduce it
+    otherwise emits). See EXPERIMENTS.md §Perf iteration 4.
+    """
+
+    def loss_fn(params, batch, rng):
+        total, metrics = model.train_forward(cfg, params, batch, rng)
+        return total, metrics
+
+    def grads_of(params, batch, rng):
+        if tcfg.microbatch and tcfg.microbatch < batch["tokens"].shape[0]:
+            B = batch["tokens"].shape[0]
+            mb = tcfg.microbatch
+            assert B % mb == 0, f"batch {B} % microbatch {mb} != 0"
+            n = B // mb
+            parts = jax.tree.map(lambda x: x.reshape(n, mb, *x.shape[1:]), batch)
+
+            def body(carry, inp):
+                g_acc, l_acc = carry
+                mb_batch, r = inp
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb_batch, r)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            rngs = jax.random.split(rng, n)
+            (g, l), ms = jax.lax.scan(body, (g0, jnp.zeros(())), (parts, rngs))
+            g = jax.tree.map(lambda x: x / n, g)
+            metrics = jax.tree.map(lambda x: jnp.mean(x), ms)
+            return l / n, metrics, g
+        (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch, rng)
+        return l, m, g
+
+    def step_fn(state: TrainState, batch, rng):
+        loss, metrics, grads = grads_of(state.params, batch, rng)
+        if param_axes is not None:
+            grads = jax.tree.map(
+                lambda g, a: constrain(g, a) if isinstance(a, tuple) and g.ndim == len(a) else g,
+                grads,
+                param_axes,
+                is_leaf=lambda v: isinstance(v, tuple) and len(v) > 0
+                and all(isinstance(e, (str, type(None))) for e in v),
+            )
+        ef = state.ef
+        if tcfg.compress_grads:
+            grads, ef = compression.compress(grads, ef)
+        lr_scale = schedules.cosine_with_warmup(state.step, tcfg.warmup_steps, tcfg.total_steps)
+        new_params, new_opt, opt_m = adamw.update(
+            grads, state.opt, state.params, tcfg.optimizer, lr_scale
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_m)
+        metrics["loss"] = loss
+        metrics["lr_scale"] = lr_scale
+        return TrainState(params=new_params, opt=new_opt, ef=ef, step=state.step + 1), metrics
+
+    return step_fn

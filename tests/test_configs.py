@@ -1,0 +1,65 @@
+"""Config fidelity: parameter counts of the FULL assigned configs must land
+near the published model sizes (eval_shape only — no allocation)."""
+import jax
+import pytest
+
+from repro.configs import SHAPES, cell_skip_reason, get_config, list_archs
+from repro.launch import specs as sp
+from repro.launch.roofline import count_params
+
+# published total parameter counts (approx, embeddings included)
+EXPECTED_B = {
+    "gemma-2b": 2.5,
+    "recurrentgemma-9b": 9.0,
+    "qwen1p5-32b": 32.5,
+    "phi4-mini-3p8b": 3.8,
+    "phi3-medium-14b": 14.0,
+    "qwen2-moe-a2p7b": 14.3,     # total (2.7B active)
+    "olmoe-1b-7b": 6.9,          # total (1.3B active)
+    "internvl2-2b": 1.9,         # LM backbone (frontend is a stub)
+    "whisper-medium": 0.76,
+    "xlstm-125m": 0.125,
+}
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_count_matches_published(arch):
+    cfg = get_config(arch)
+    structs, _ = sp.param_specs_and_axes(cfg)
+    n = count_params(structs) / 1e9
+    want = EXPECTED_B[arch]
+    assert abs(n - want) / want < 0.30, f"{arch}: {n:.2f}B vs published ~{want}B"
+
+
+def test_cells_and_skips():
+    from repro.configs import cells
+
+    all_cells = cells()
+    assert len(all_cells) == 40
+    skips = [
+        (a, s) for a, s in all_cells if cell_skip_reason(get_config(a), SHAPES[s])
+    ]
+    # long_500k skipped exactly for the 8 full-attention archs
+    assert len(skips) == 8
+    assert all(s == "long_500k" for _, s in skips)
+    runnable_long = [a for a, s in all_cells
+                     if s == "long_500k" and not cell_skip_reason(get_config(a), SHAPES[s])]
+    assert sorted(runnable_long) == ["recurrentgemma-9b", "xlstm-125m"]
+
+
+def test_sub_quadratic_flags():
+    assert get_config("recurrentgemma-9b").sub_quadratic
+    assert get_config("xlstm-125m").sub_quadratic
+    assert not get_config("gemma-2b").sub_quadratic
+    assert not get_config("whisper-medium").sub_quadratic
+
+
+def test_pattern_expansion():
+    cfg = get_config("recurrentgemma-9b")
+    kinds = cfg.pattern_for_layers()
+    assert len(kinds) == 38
+    assert kinds[:3] == ["rglru", "rglru", "attn_local"]
+    assert kinds.count("attn_local") == 12  # 38 = 12 full units + 2 tail rglru
+    cfg2 = get_config("xlstm-125m")
+    kinds2 = cfg2.pattern_for_layers()
+    assert kinds2.count("mlstm") == 6 and kinds2.count("slstm") == 6

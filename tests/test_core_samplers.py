@@ -1,0 +1,177 @@
+"""Correctness of every sampler against exact Boltzmann enumeration.
+
+These tests pin the paper's statistical claims at small scale:
+  * all samplers (sync Gibbs, chromatic Gibbs, exact CTMC, tau-leap) converge
+    to the same Boltzmann distribution p ∝ exp(-E);
+  * tau-leap bias vanishes as dt -> 0 (the Fig.-S9 delay-skew analogue);
+  * clamping samples the correct conditional distribution;
+  * the CAL-letters problem's ground state is the template (Fig. 3F).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ctmc, ising, problems, samplers
+
+
+def tv(p, q):
+    return 0.5 * float(np.abs(np.asarray(p) - np.asarray(q)).sum())
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    rng = np.random.default_rng(0)
+    n = 5
+    A = rng.normal(0, 0.7, (n, n))
+    J = np.triu(A, 1)
+    J = J + J.T
+    b = rng.normal(0, 0.4, n)
+    prob = ising.DenseIsing(J=jnp.asarray(J, jnp.float32), b=jnp.asarray(b, jnp.float32))
+    _, p_exact = ising.enumerate_boltzmann(prob)
+    return prob, p_exact
+
+
+def test_energy_convention(small_problem):
+    prob, _ = small_problem
+    s = jnp.asarray([1.0, -1.0, 1.0, 1.0, -1.0])
+    # brute-force energy with explicit loops
+    J = np.asarray(prob.J)
+    b = np.asarray(prob.b)
+    sv = np.asarray(s)
+    e = sum(J[i, j] * sv[i] * sv[j] for i in range(5) for j in range(i + 1, 5))
+    e += float(b @ sv)
+    np.testing.assert_allclose(float(prob.energy(s)), e, rtol=1e-5)
+
+
+def test_conditional_matches_enumeration(small_problem):
+    """P(s_i=+1 | rest) from glauber == from exact joint."""
+    prob, p_exact = small_problem
+    states, p = ising.enumerate_boltzmann(prob)
+    from repro.core import glauber
+
+    rest = states[:, 1:]
+    # pick configurations matching a fixed rest-state
+    target = rest[3]
+    mask = (rest == target).all(axis=1)
+    p_up_exact = p[mask & (states[:, 0] > 0)].sum() / p[mask].sum()
+    s_full = jnp.asarray(np.concatenate([[1.0], target]), jnp.float32)
+    h0 = prob.local_fields(s_full)[0]
+    p_up = float(glauber.prob_up(h0))
+    np.testing.assert_allclose(p_up, p_up_exact, rtol=1e-4)
+
+
+def test_gibbs_random_scan_converges(small_problem):
+    prob, p_exact = small_problem
+    s0 = samplers.random_init(jax.random.key(1), (prob.n,))
+    run = samplers.gibbs_random_scan(prob, jax.random.key(3), s0, n_steps=120_000, sample_every=2)
+    emp = ctmc.empirical_distribution(run.samples.reshape(-1, prob.n), prob.n)
+    assert tv(emp, p_exact) < 0.03
+
+
+def test_gillespie_time_weighted_converges(small_problem):
+    prob, p_exact = small_problem
+    s0 = samplers.random_init(jax.random.key(1), (prob.n,))
+    run = ctmc.gillespie(prob, jax.random.key(0), s0, n_events=50_000, sample_every=1)
+    w = ctmc.time_weighted_distribution(run, prob.n)
+    assert tv(w, p_exact) < 0.03
+
+
+def test_tau_leap_bias_vanishes(small_problem):
+    """TV(dt) decreases as dt shrinks — the paper's delay-skew analogue."""
+    prob, p_exact = small_problem
+    s0 = samplers.random_init(jax.random.key(1), (prob.n,))
+    tvs = []
+    for dt, steps in [(0.8, 20_000), (0.05, 120_000)]:
+        run = samplers.tau_leap_dense(prob, jax.random.key(2), s0, n_steps=steps, dt=dt, sample_every=4)
+        emp = ctmc.empirical_distribution(run.samples.reshape(-1, prob.n), prob.n)
+        tvs.append(tv(emp, p_exact))
+    assert tvs[1] < tvs[0], f"bias should shrink with dt: {tvs}"
+    assert tvs[1] < 0.06
+
+
+def test_clamped_conditional():
+    """Clamping = sampling the conditional Boltzmann distribution (Fig 4C)."""
+    lat = problems.cal_problem(coupling=0.6)
+    H, W = lat.shape
+    import dataclasses
+
+    known = np.zeros((H, W), bool)
+    known[: H // 2] = True
+    template = problems.cal_template()
+    clamped = dataclasses.replace(
+        lat,
+        clamp_mask=jnp.asarray(known),
+        clamp_value=jnp.asarray(template),
+    )
+    s0 = samplers.random_init(jax.random.key(0), (H, W))
+    run = samplers.chromatic_gibbs(clamped, jax.random.key(1), s0, n_sweeps=400)
+    s = np.asarray(run.s)
+    # clamped half exactly preserved
+    np.testing.assert_array_equal(s[: H // 2], template[: H // 2])
+    # free half should reconstruct the template (ferromagnetic pull)
+    agree = np.mean(s[H // 2 :] * template[H // 2 :])
+    assert agree > 0.9, f"reconstruction agreement too low: {agree}"
+
+
+def test_cal_ground_state():
+    lat = problems.cal_problem()
+    t = problems.cal_template()
+    dense = lat.to_dense()
+    e_template = float(lat.energy(jnp.asarray(t)))
+    e_dense = float(dense.energy(jnp.asarray(t.reshape(-1))))
+    np.testing.assert_allclose(e_template, e_dense, rtol=1e-5)
+    # template energy beats 200 random states (it is the ground state)
+    rng = np.random.default_rng(0)
+    rand = 2.0 * rng.integers(0, 2, (200, 16, 16)) - 1.0
+    e_rand = jax.vmap(lat.energy)(jnp.asarray(rand, jnp.float32))
+    assert e_template < float(jnp.min(e_rand))
+    # sampler finds it
+    s0 = samplers.random_init(jax.random.key(4), (16, 16))
+    run = samplers.chromatic_gibbs(lat, jax.random.key(5), s0, n_sweeps=300)
+    assert abs(float(jnp.mean(run.s * t))) == 1.0
+
+
+def test_lattice_dense_equivalence():
+    """LatticeIsing.energy == its to_dense() energy on random states."""
+    lat = problems.cal_problem()
+    rng = np.random.default_rng(1)
+    dense = lat.to_dense()
+    for _ in range(5):
+        s = 2.0 * rng.integers(0, 2, (16, 16)) - 1.0
+        e1 = float(lat.energy(jnp.asarray(s, jnp.float32)))
+        e2 = float(dense.energy(jnp.asarray(s.reshape(-1), jnp.float32)))
+        np.testing.assert_allclose(e1, e2, rtol=1e-4)
+
+
+def test_maxcut_cut_value():
+    prob = problems.random_maxcut(8, seed=0)
+    states, p = ising.enumerate_boltzmann(prob)
+    cuts = np.asarray(jax.vmap(lambda s: problems.cut_value(prob, s))(jnp.asarray(states, jnp.float32)))
+    # ground state of the Ising encoding == max cut
+    energies = np.asarray(jax.vmap(prob.energy)(jnp.asarray(states, jnp.float32)))
+    assert np.argmin(energies) == np.argmax(cuts)
+
+
+def test_async_beats_sync_tts():
+    """The paper's headline: async TTS << sync TTS at the same per-neuron rate."""
+    prob = problems.random_maxcut(24, seed=3)
+    states = None
+    # target = best energy over a long exact run
+    s0 = samplers.random_init(jax.random.key(0), (prob.n,))
+    long_run = samplers.gibbs_random_scan(prob, jax.random.key(9), s0, n_steps=40_000, sample_every=10)
+    e_target = float(jnp.min(long_run.energies))
+
+    keys = jax.random.split(jax.random.key(1), 16)
+    s0s = jax.vmap(lambda k: samplers.random_init(k, (prob.n,)))(keys)
+
+    t_async, hit_a = jax.vmap(
+        lambda k, s: ctmc.gillespie_first_hit(prob, k, s, e_target, n_events=6000)
+    )(keys, s0s)
+    t_sync, hit_s = jax.vmap(
+        lambda k, s: samplers.gibbs_first_hit(prob, k, s, e_target, n_steps=6000)
+    )(keys, s0s)
+    med_a = float(np.median(np.asarray(t_async)[np.asarray(hit_a)]))
+    med_s = float(np.median(np.asarray(t_sync)[np.asarray(hit_s)]))
+    # n=24 spins -> async should be ~n x faster in model time; allow slack
+    assert med_a * 4 < med_s, f"async {med_a} vs sync {med_s}"

@@ -1,0 +1,151 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.ising import king_color_masks
+from repro.kernels import dense_field as df
+from repro.kernels import lattice_gibbs as lg
+from repro.kernels import ops
+from repro.kernels import ref
+from repro.kernels import tau_leap as tl
+
+
+def _rand_pm1(key, shape, dtype=jnp.float32):
+    return (2 * jax.random.bernoulli(key, 0.5, shape) - 1).astype(dtype)
+
+
+@pytest.mark.parametrize("B,H,W", [(4, 16, 16), (8, 8, 8), (2, 32, 24), (16, 16, 16)])
+def test_lattice_gibbs_kernel_matches_ref(B, H, W):
+    k = jax.random.split(jax.random.key(0), 5)
+    s = _rand_pm1(k[0], (B, H, W))
+    w = jax.random.normal(k[1], (8, H, W)) * 0.5
+    b = jax.random.normal(k[2], (H, W)) * 0.3
+    u = jax.random.uniform(k[3], (4, B, H, W))
+    colors_b = king_color_masks(H, W)
+    colors = colors_b.astype(jnp.float32)
+    frozen_b = jax.random.bernoulli(k[4], 0.2, (H, W))
+    frozen = frozen_b.astype(jnp.float32)
+    clampv = _rand_pm1(jax.random.key(9), (H, W))
+
+    # NOTE: w here is asymmetric (not a valid Ising problem) — fine for the
+    # kernel-vs-oracle comparison, which is pure arithmetic.
+    got = lg.lattice_gibbs_sweep(s, w, b, u, colors, frozen, clampv, interpret=True, block_batch=2)
+    want = ref.lattice_gibbs_sweep_ref(s, w, b, u, colors_b, frozen_b, clampv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0, rtol=0)
+
+
+@pytest.mark.parametrize(
+    "B,N,blocks",
+    [
+        (8, 64, (8, 64, 64)),      # padding path: N < 128
+        (128, 128, (128, 128, 128)),
+        (64, 300, (64, 128, 128)), # non-divisible N -> padded
+        (130, 256, (128, 128, 128)),  # non-divisible B
+    ],
+)
+def test_dense_field_kernel_matches_ref(B, N, blocks):
+    bb, bn, bk = blocks
+    k = jax.random.split(jax.random.key(1), 3)
+    s = _rand_pm1(k[0], (B, N)).astype(jnp.int8)
+    J = jax.random.randint(k[1], (N, N), -127, 128, jnp.int32).astype(jnp.int8)
+    b = jax.random.normal(k[2], (N,))
+    scale = jnp.asarray(0.0173, jnp.float32)
+    got = df.dense_field(s, J, b, scale, block_b=bb, block_n=bn, block_k=bk, interpret=True)
+    want = ref.dense_field_ref(s, J, b, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,N", [(8, 64), (32, 200), (128, 128)])
+def test_tau_leap_kernel_matches_ref(B, N):
+    k = jax.random.split(jax.random.key(2), 4)
+    s = _rand_pm1(k[0], (B, N))
+    J = jax.random.randint(k[1], (N, N), -127, 128, jnp.int32).astype(jnp.int8)
+    b = jax.random.normal(k[2], (N,)) * 0.2
+    u = jax.random.uniform(k[3], (B, N))
+    scale = jnp.asarray(1.0 / 127.0, jnp.float32)
+    dt = jnp.asarray(0.3, jnp.float32)
+    got = tl.tau_leap_step(s, J, b, scale, u, dt, block_b=64, block_n=64, block_k=64, interpret=True)
+    want = ref.tau_leap_step_ref(s, J, b, scale, u, dt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+
+def test_dense_field_int8_exactness():
+    """int8 path is exact integer arithmetic — zero float error vs numpy."""
+    rng = np.random.default_rng(0)
+    B, N = 16, 96
+    s = (2 * rng.integers(0, 2, (B, N)) - 1).astype(np.int8)
+    J = rng.integers(-127, 128, (N, N)).astype(np.int8)
+    acc = s.astype(np.int64) @ J.T.astype(np.int64)
+    got = df.dense_field(
+        jnp.asarray(s), jnp.asarray(J), jnp.zeros((N,)), jnp.asarray(1.0, jnp.float32),
+        block_b=16, block_n=32, block_k=32, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got), acc.astype(np.float32))
+
+
+def test_quantize_dense_roundtrip():
+    rng = np.random.default_rng(3)
+    J = jnp.asarray(rng.normal(0, 0.5, (40, 40)), jnp.float32)
+    codes, scale = ops.quantize_dense(J, 8)
+    deq = codes.astype(jnp.float32) * scale
+    assert float(jnp.max(jnp.abs(deq - J))) <= float(scale) / 2 + 1e-6
+    assert codes.dtype == jnp.int8
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lattice_gibbs_dtype_sweep(dtype):
+    B, H, W = 4, 16, 16
+    k = jax.random.split(jax.random.key(5), 5)
+    s = _rand_pm1(k[0], (B, H, W), dtype)
+    w = (jax.random.normal(k[1], (8, H, W)) * 0.5).astype(dtype)
+    b = (jax.random.normal(k[2], (H, W)) * 0.3).astype(dtype)
+    u = jax.random.uniform(k[3], (4, B, H, W)).astype(dtype)
+    colors = king_color_masks(H, W).astype(dtype)
+    frozen = jnp.zeros((H, W), dtype)
+    clampv = -jnp.ones((H, W), dtype)
+    got = lg.lattice_gibbs_sweep(s, w, b, u, colors, frozen, clampv, interpret=True, block_batch=4)
+    want = ref.lattice_gibbs_sweep_ref(
+        s, w, b, u, colors > 0.5, frozen > 0.5, clampv
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=0
+    )
+
+
+def test_ops_auto_uses_reference_on_cpu():
+    """ops.* 'auto' mode must agree with the kernel path bit-for-bit."""
+    B, N = 8, 64
+    k = jax.random.split(jax.random.key(6), 3)
+    s = _rand_pm1(k[0], (B, N)).astype(jnp.int8)
+    J = jax.random.randint(k[1], (N, N), -127, 128, jnp.int32).astype(jnp.int8)
+    b = jax.random.normal(k[2], (N,))
+    scale = jnp.asarray(0.01, jnp.float32)
+    auto = ops.dense_field(s, J, b, scale)
+    kern = ops.dense_field(s, J, b, scale, mode="kernel", block_b=8, block_n=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(auto), np.asarray(kern), rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "BH,Sq,Sk,d,causal,dtype",
+    [
+        (2, 256, 256, 64, True, jnp.float32),
+        (4, 128, 384, 32, False, jnp.float32),
+        (1, 512, 512, 128, True, jnp.bfloat16),
+        (2, 256, 256, 64, True, jnp.bfloat16),
+    ],
+)
+def test_flash_attention_matches_ref(BH, Sq, Sk, d, causal, dtype):
+    from repro.kernels import flash_attention as fa
+
+    ks = jax.random.split(jax.random.key(7), 3)
+    q = (jax.random.normal(ks[0], (BH, Sq, d)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (BH, Sk, d)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (BH, Sk, d)) * 0.5).astype(dtype)
+    got = fa.flash_attention(q, k, v, causal=causal, block_q=128, block_k=128, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )

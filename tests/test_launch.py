@@ -1,0 +1,128 @@
+"""Launch-layer tests: HLO analyzer, roofline math, mesh/specs plumbing."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_analysis as ha
+from repro.launch import roofline as rl
+
+
+def test_scan_trip_count_multiplies_flops():
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        c, _ = jax.lax.scan(body, x, w)
+        return c
+
+    L, M, K = 7, 8, 64
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((M, K), jnp.float32),
+        jax.ShapeDtypeStruct((L, K, K), jnp.float32),
+    ).compile()
+    s = ha.analyze(comp.as_text())
+    assert s.flops == pytest.approx(2 * M * K * K * L, rel=0.01)
+    assert s.n_while >= 1
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(c, wi):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ wi), None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        c, _ = jax.lax.scan(outer, x, w)
+        return c
+
+    L, M, K = 4, 8, 32
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((M, K), jnp.float32),
+        jax.ShapeDtypeStruct((L, K, K), jnp.float32),
+    ).compile()
+    s = ha.analyze(comp.as_text())
+    assert s.flops == pytest.approx(2 * M * K * K * L * 3, rel=0.01)
+
+
+def test_dus_counted_at_slice_not_buffer():
+    """The decode-cache update must cost O(slice), not O(cache)."""
+    def f(cache, upd):
+        def body(c, u):
+            return jax.lax.dynamic_update_slice_in_dim(c, u, 0, axis=0), None
+        c, _ = jax.lax.scan(body, cache, upd)
+        return c
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((4096, 64), jnp.float32),
+        jax.ShapeDtypeStruct((16, 1, 64), jnp.float32),
+    ).compile()
+    s = ha.analyze(comp.as_text())
+    buffer_bytes = 4096 * 64 * 4
+    # 16 updates of one (1,64) row + XLA's one-time loop-entry copy of the
+    # buffer. Naive counting would charge 16 full buffer passes (~33 MB);
+    # slice-aware counting must stay within a few buffer passes.
+    assert s.hbm_bytes < 4 * buffer_bytes, (s.hbm_bytes, buffer_bytes)
+    assert s.hbm_bytes_upper > 16 * buffer_bytes  # the naive estimate, for contrast
+
+
+def test_shape_parser():
+    e, b = ha._shape_elems_bytes("bf16[16,4096,5120]")
+    assert e == 16 * 4096 * 5120 and b == e * 2
+    e, b = ha._shape_elems_bytes("(f32[8,4]{1,0}, s8[3])")
+    assert e == 32 + 3 and b == 32 * 4 + 3
+
+
+def test_roofline_terms_bottleneck():
+    s = ha.HLOSummary(
+        flops=197e12, hbm_bytes=0, hbm_bytes_upper=0, ici_bytes=0, dcn_bytes=0,
+        coll_by_kind={}, n_while=0,
+    )
+    t = rl.compute_terms_from_summary(s, model_flops_per_chip=100e12)
+    assert t.bottleneck == "compute"
+    assert t.t_compute == pytest.approx(1.0)
+    assert t.useful_ratio == pytest.approx(100 / 197, rel=1e-3)
+
+    s2 = ha.HLOSummary(
+        flops=0, hbm_bytes=819e9, hbm_bytes_upper=0, ici_bytes=50e9, dcn_bytes=0,
+        coll_by_kind={}, n_while=0,
+    )
+    t2 = rl.compute_terms_from_summary(s2, 0)
+    assert t2.t_memory == pytest.approx(1.0)
+    assert t2.t_collective == pytest.approx(1.0)
+
+
+def test_model_flops_moe_uses_active_params():
+    from repro.configs import get_config, SHAPES
+
+    cfg = get_config("olmoe-1b-7b")
+    shape = SHAPES["train_4k"]
+    n_total = 7_000_000_000
+    mf = rl.model_flops(cfg, shape, n_total)
+    # active params strictly fewer than total for a top-8-of-64 MoE
+    assert mf < 6.0 * n_total * shape.global_batch * shape.seq_len
+
+
+def test_collective_classified_dcn_across_pods():
+    txt = """
+ENTRY %main (p: f32[64]) -> f32[64] {
+  %p = f32[64]{0} parameter(0)
+  ROOT %ar = f32[64]{0} all-reduce(%p), replica_groups={{0,256},{1,257}}, to_apply=%add
+}
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+"""
+    s = ha.analyze(txt, pod_size=256)
+    assert s.dcn_bytes > 0 and s.ici_bytes == 0
+
+
+def test_mesh_factory():
+    # cannot build 256-device meshes here (1 real device) but the factory
+    # must be a function, not module state; and the test mesh works.
+    from repro.launch import mesh as m
+
+    assert callable(m.make_production_mesh)
+    tm = m.make_test_mesh(shape=(1, 1))
+    assert tm.axis_names == ("data", "model")

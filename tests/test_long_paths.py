@@ -1,0 +1,107 @@
+"""Equivalence of the long-sequence execution paths with the dense forms.
+
+The 32k/500k cells rely on: blockwise attention (causal / banded /
+bidirectional), chunkwise mLSTM, and ring KV caches. Each must match its
+quadratic/dense reference bit-for-bit up to f32 accumulation noise.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention, xlstm
+from repro.models.attention import _attn_blockwise, _attn_dense, causal_mask
+
+
+def _qkv(key, B, S, H, K, hd):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    return q, k, v
+
+
+class _Cfg:
+    def __init__(self, H, K):
+        self.n_heads = H
+        self.n_kv_heads = K
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 700), (False, 0)])
+def test_blockwise_matches_dense(causal, window, monkeypatch):
+    monkeypatch.setattr(attention, "Q_BLOCK", 512)
+    B, S, H, K, hd = 2, 2048, 4, 2, 16
+    cfg = _Cfg(H, K)
+    q, k, v = _qkv(jax.random.key(0), B, S, H, K, hd)
+    got = _attn_blockwise(q, k, v, cfg, causal=causal, window=window, out_dtype=jnp.float32)
+    if causal:
+        mask = causal_mask(S, S, window)
+    else:
+        mask = jnp.ones((S, S), bool)
+    want = _attn_dense(q, k, v, cfg, mask, jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_mlstm_chunkwise_matches_parallel():
+    cfg = get_config("xlstm-125m", reduced=True)
+    params, _ = xlstm.mlstm_init(jax.random.key(0), cfg, jnp.float32)
+    B, S = 2, 96  # not divisible by 64 -> exercises padding
+    a = jax.random.normal(jax.random.key(1), (B, S, 2 * cfg.d_model)) * 0.5
+    want = xlstm.mlstm_parallel(params, a, cfg.n_heads)
+    got, _ = xlstm.mlstm_chunkwise(params, a, cfg.n_heads, chunk=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_chunkwise_matches_recurrent_state():
+    """Final (C,n,m) from chunkwise == step-by-step recurrence."""
+    cfg = get_config("xlstm-125m", reduced=True)
+    params, _ = xlstm.mlstm_init(jax.random.key(0), cfg, jnp.float32)
+    B, S = 1, 40
+    a = jax.random.normal(jax.random.key(1), (B, S, 2 * cfg.d_model)) * 0.5
+    _, st_chunk = xlstm.mlstm_chunkwise(params, a, cfg.n_heads, chunk=16)
+    st = xlstm.mlstm_init_state(cfg, B)
+    for t in range(S):
+        h, st = xlstm.mlstm_step(params, a[:, t], cfg.n_heads, st)
+    np.testing.assert_allclose(np.asarray(st_chunk.C), np.asarray(st.C), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_chunk.n), np.asarray(st.n), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_chunk.m), np.asarray(st.m), rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_parallel_matches_recurrent_outputs():
+    cfg = get_config("xlstm-125m", reduced=True)
+    params, _ = xlstm.mlstm_init(jax.random.key(0), cfg, jnp.float32)
+    B, S = 1, 24
+    a = jax.random.normal(jax.random.key(1), (B, S, 2 * cfg.d_model)) * 0.5
+    want = xlstm.mlstm_parallel(params, a, cfg.n_heads)
+    st = xlstm.mlstm_init_state(cfg, B)
+    outs = []
+    for t in range(S):
+        h, st = xlstm.mlstm_step(params, a[:, t], cfg.n_heads, st)
+        outs.append(h)
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)
+
+
+def test_ring_cache_matches_full_cache():
+    """Windowed decode with a ring cache of size W == full cache + window
+    mask, beyond the first wrap."""
+    cfg = get_config("recurrentgemma-9b", reduced=True)  # window=32
+    params, _ = attention.attn_init(jax.random.key(0), cfg, jnp.float32)
+    B, W = 1, cfg.window
+    T_total = W + 17  # decode past the wrap point
+    ring = attention.init_cache(cfg, B, W, jnp.float32)
+    full = attention.init_cache(cfg, B, T_total, jnp.float32)
+    outs_r, outs_f = [], []
+    for pos in range(T_total):
+        x = jax.random.normal(jax.random.fold_in(jax.random.key(1), pos), (B, 1, cfg.d_model))
+        o_r, ring = attention.attn_decode(params, x, cfg, jnp.asarray(pos), ring, window=W)
+        o_f, full = attention.attn_decode(params, x, cfg, jnp.asarray(pos), full, window=W)
+        outs_r.append(o_r)
+        outs_f.append(o_f)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs_r, 1)),
+        np.asarray(jnp.concatenate(outs_f, 1)),
+        rtol=1e-5,
+        atol=1e-5,
+    )

@@ -1,0 +1,115 @@
+"""Boltzmann-machine CD training, fly-decision model, observables."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import boltzmann, decision, observables, samplers
+from repro.data import digits
+
+
+def test_pair_correlations_multiplier_free():
+    """XOR/popcount form == naive product form."""
+    rng = np.random.default_rng(0)
+    batch = jnp.asarray(2.0 * rng.integers(0, 2, (32, 8, 8)) - 1.0, jnp.float32)
+    corr = boltzmann.pair_correlations(batch, 8, 8)
+    from repro.core.ising import KING_OFFSETS, shift2d
+
+    for k, (dy, dx) in enumerate(KING_OFFSETS):
+        naive = jnp.mean(batch * shift2d(batch, dy, dx), axis=0)
+        valid = shift2d(jnp.ones((8, 8)), dy, dx) > 0.5
+        np.testing.assert_allclose(
+            np.asarray(corr[k])[np.asarray(valid)],
+            np.asarray(naive)[np.asarray(valid)],
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+
+def test_cd_learns_digit_distribution():
+    """CD on a synthetic digit: data energy drops, mean activation matches."""
+    key = jax.random.key(0)
+    batch = digits.digit_batch(3, n=64, key=jax.random.key(1), flip_prob=0.05)
+    cfg = boltzmann.CDConfig(lr=0.08, n_model_steps=24, n_chains=24, quantize_bits=8)
+    state = boltzmann.init_cd(jax.random.key(2), 16, 16, cfg)
+    e0 = float(boltzmann.free_energy_proxy(state.problem, batch))
+    for i in range(30):
+        key, sub = jax.random.split(key)
+        state = boltzmann.cd_step(state, batch, sub, cfg)
+    e1 = float(boltzmann.free_energy_proxy(state.problem, batch))
+    assert e1 < e0 - 1.0, f"data energy should drop: {e0} -> {e1}"
+    # model mean activation resembles the data mean
+    model_mean = np.asarray(jnp.mean(state.chains, axis=0))
+    data_mean = np.asarray(jnp.mean(batch, axis=0))
+    corr = np.corrcoef(model_mean.ravel(), data_mean.ravel())[0, 1]
+    assert corr > 0.5, f"model/data activation correlation too low: {corr}"
+
+
+def test_reconstruction_clamps_known_half():
+    key = jax.random.key(0)
+    batch = digits.digit_batch(0, n=64, key=jax.random.key(1), flip_prob=0.03)
+    cfg = boltzmann.CDConfig(lr=0.08, n_model_steps=24, n_chains=24)
+    state = boltzmann.init_cd(jax.random.key(2), 16, 16, cfg)
+    for i in range(25):
+        key, sub = jax.random.split(key)
+        state = boltzmann.cd_step(state, batch, sub, cfg)
+    img = np.asarray(batch[0])
+    known = np.zeros((16, 16), bool)
+    known[:8] = True
+    rec = boltzmann.reconstruct(
+        state.problem, jax.random.key(5), jnp.asarray(img), jnp.asarray(known)
+    )
+    rec = np.asarray(rec)
+    np.testing.assert_array_equal(rec[:8], img[:8])
+    # reconstructed half should beat chance vs the clean template
+    template = np.asarray(digits.digit_template(0))
+    agree = np.mean(rec[8:] == template[8:])
+    assert agree > 0.6, f"reconstruction agreement {agree}"
+
+
+def test_decision_bifurcates():
+    """Two-target fly run commits to exactly one target; eta moves the
+    commit point (Fig 5 B-E qualitative check)."""
+    targets = np.array([[-300.0, 1000.0], [300.0, 1000.0]], np.float32)
+    cfg = decision.DecisionConfig(n_neurons=40, eta=1.0, max_steps=160)
+    arrivals = []
+    commit_d = []
+    for seed in range(6):
+        traj = decision.simulate(jax.random.key(seed), targets, cfg)
+        pos = np.asarray(traj.positions)
+        d_final = np.linalg.norm(targets - pos[-1][None], axis=-1).min()
+        arrivals.append(d_final < 150.0)
+        commit_d.append(float(decision.bifurcation_distance(traj.positions, targets)))
+    assert np.mean(arrivals) >= 0.5, f"too few arrivals: {arrivals}"
+
+    # larger eta -> later commitment (farther from origin), on average
+    cfg2 = decision.DecisionConfig(n_neurons=40, eta=4.0, max_steps=160)
+    commit_d2 = []
+    for seed in range(6):
+        traj = decision.simulate(jax.random.key(100 + seed), targets, cfg2)
+        commit_d2.append(float(decision.bifurcation_distance(traj.positions, targets)))
+    assert np.median(commit_d2) > np.median(commit_d), (commit_d, commit_d2)
+
+
+def test_acf_lambda0_extraction():
+    """Free-running neuron trace -> fitted rate ~ 2*lambda0*flip_prob."""
+    # free neuron, h=0: flip prob 0.5, rate lambda0/2; ACF decays at 2*rate
+    from repro.core import ising
+
+    prob = ising.DenseIsing(J=jnp.zeros((1, 1)), b=jnp.zeros((1,)))
+    s0 = jnp.ones((1,))
+    run = samplers.tau_leap_dense(prob, jax.random.key(0), s0, n_steps=200_000, dt=0.05, sample_every=1)
+    trace = np.asarray(run.samples[:, 0])
+    acf = observables.autocorrelation(trace, max_lag=200)
+    rate = observables.fit_lambda0(acf, dt=0.05)
+    # theory: ACF(t)=exp(-2 r t), r = lambda0*sigma(0) = 0.5 -> decay 1.0
+    assert 0.7 < rate < 1.3, rate
+
+
+def test_scaling_fit_recovers_exponent():
+    rng = np.random.default_rng(0)
+    ns = np.array([10, 20, 40, 80])
+    A, B = 1e-3, 0.7
+    trials = [A * np.exp(B * np.sqrt(n)) * rng.lognormal(0, 0.1, 50) for n in ns]
+    fit = observables.fit_scaling(ns, trials, n_boot=200)
+    assert abs(fit.B - B) < 0.1
+    assert fit.B_ci[0] < B < fit.B_ci[1]

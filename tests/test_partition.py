@@ -1,0 +1,62 @@
+"""Sharding partition rules: dedup, divisibility, rule filtering."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_test_mesh
+from repro.sharding import partition
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_test_mesh((1, 1), ("data", "model"))
+
+
+def test_dedup_first_come_first_served():
+    parts = partition._dedup(["model", "model", None, "data"])
+    assert parts == ["model", None, None, "data"]
+    parts2 = partition._dedup([("pod", "data"), "data", "model"])
+    assert parts2 == [("pod", "data"), None, "model"]
+
+
+def test_checked_spec_drops_nondividing(mesh):
+    big = make_test_mesh((1, 1), ("data", "model"))
+    rules = {"heads": "model", "mlp": "model", "batch": "data"}
+    # fake a 16-way model axis via a mesh-shape stub
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    spec = partition.checked_spec(FakeMesh, rules, ("batch", "heads"), (32, 40))
+    assert spec == P("data", None)  # 40 % 16 != 0 -> heads dropped
+    spec2 = partition.checked_spec(FakeMesh, rules, ("batch", "mlp"), (32, 64))
+    assert spec2 == P("data", "model")
+
+
+def test_axis_rules_filters_missing_axes(mesh):
+    with partition.axis_rules(mesh, {"batch": ("pod", "data")}):
+        # "pod" doesn't exist on the 2-axis mesh -> filtered to ("data",)
+        spec = partition.logical_to_spec(("batch", None))
+        assert spec == P(("data",), None)
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    y = partition.constrain(x, ("batch", "model"))
+    assert y is x
+
+
+def test_struct_shardings_tree(mesh):
+    structs = {"a": jax.ShapeDtypeStruct((8, 6), jnp.float32), "b": jax.ShapeDtypeStruct((), jnp.int32)}
+    axes = {"a": ("batch", "mlp"), "b": ()}
+    sh = partition.struct_shardings(structs, axes, mesh)
+    assert sh["a"].spec == P(None, None) or sh["a"].spec == P("data", "model")
+    assert sh["b"].spec == P()
+
+
+def test_constrain_applies_in_jit(mesh):
+    with partition.axis_rules(mesh, None):
+        @jax.jit
+        def f(x):
+            return partition.constrain(x * 2, ("batch", "mlp"))
+        out = f(jnp.ones((4, 4)))
+        assert out.shape == (4, 4)

@@ -1,0 +1,138 @@
+"""Hypothesis property tests for the core invariants."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import glauber, ising, problems, samplers
+
+
+def _random_dense(n, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(0, scale, (n, n))
+    J = np.triu(A, 1)
+    J = J + J.T
+    b = rng.normal(0, scale / 2, n)
+    return ising.DenseIsing(J=jnp.asarray(J, jnp.float32), b=jnp.asarray(b, jnp.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 12), seed=st.integers(0, 2**16))
+def test_energy_flip_identity(n, seed):
+    """E(flip_i(s)) - E(s) == -2 s_i h_i for every site (the identity every
+    incremental-field sampler relies on)."""
+    prob = _random_dense(n, seed)
+    rng = np.random.default_rng(seed + 1)
+    s = jnp.asarray(2.0 * rng.integers(0, 2, n) - 1.0, jnp.float32)
+    e0 = prob.energy(s)
+    h = prob.local_fields(s)
+    for i in range(n):
+        s_f = s.at[i].multiply(-1.0)
+        de = float(prob.energy(s_f) - e0)
+        np.testing.assert_allclose(de, float(-2.0 * s[i] * h[i]), rtol=2e-3, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 10), seed=st.integers(0, 2**16))
+def test_detailed_balance(n, seed):
+    """p(s) P(s->s') == p(s') P(s'->s) for single-flip Glauber transitions."""
+    prob = _random_dense(n, seed, scale=0.8)
+    rng = np.random.default_rng(seed + 2)
+    s = jnp.asarray(2.0 * rng.integers(0, 2, n) - 1.0, jnp.float32)
+    i = int(rng.integers(0, n))
+    s_f = s.at[i].multiply(-1.0)
+    h = prob.local_fields(s)[i]
+    h_f = prob.local_fields(s_f)[i]
+    # transition prob of flipping i given i was selected: sigma(2 h s_i)
+    fwd = float(glauber.flip_prob(h, s[i]))
+    bwd = float(glauber.flip_prob(h_f, s_f[i]))
+    lhs = np.exp(-float(prob.energy(s))) * fwd
+    rhs = np.exp(-float(prob.energy(s_f))) * bwd
+    np.testing.assert_allclose(lhs, rhs, rtol=5e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    H=st.integers(3, 10),
+    W=st.integers(3, 10),
+    seed=st.integers(0, 2**16),
+)
+def test_lattice_energy_matches_dense(H, W, seed):
+    rng = np.random.default_rng(seed)
+    pairs = {}
+    for y in range(H):
+        for x in range(W):
+            for dy, dx in ising.KING_OFFSETS[4:]:
+                yy, xx = y + dy, x + dx
+                if 0 <= yy < H and 0 <= xx < W:
+                    pairs[((y, x), (yy, xx))] = float(rng.normal())
+    lat = ising.lattice_from_pairs(H, W, pairs, biases=rng.normal(size=(H, W)))
+    dense = lat.to_dense()
+    s = 2.0 * rng.integers(0, 2, (H, W)) - 1.0
+    e1 = float(lat.energy(jnp.asarray(s, jnp.float32)))
+    e2 = float(dense.energy(jnp.asarray(s.reshape(-1), jnp.float32)))
+    np.testing.assert_allclose(e1, e2, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), bits=st.sampled_from([4, 6, 8]))
+def test_quantize_on_grid(seed, bits):
+    """Quantized weights land exactly on the chip's fixed-point grid and
+    within the representable range."""
+    rng = np.random.default_rng(seed)
+    pairs = {((0, 0), (0, 1)): float(rng.normal()), ((1, 1), (1, 2)): float(rng.normal())}
+    lat = ising.lattice_from_pairs(4, 4, pairs, biases=rng.normal(size=(4, 4)))
+    q = ising.quantize_lattice(lat, bits)
+    qmax = 2 ** (bits - 1) - 1
+    scale = max(float(jnp.max(jnp.abs(lat.w))), float(jnp.max(jnp.abs(lat.b))))
+    codes_w = np.asarray(q.w) / (scale / qmax)
+    codes_b = np.asarray(q.b) / (scale / qmax)
+    np.testing.assert_allclose(codes_w, np.round(codes_w), atol=1e-3)
+    np.testing.assert_allclose(codes_b, np.round(codes_b), atol=1e-3)
+    assert np.abs(codes_w).max() <= qmax + 1e-3
+    assert np.abs(codes_b).max() <= qmax + 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_clamps_always_respected(seed):
+    """No sampler step may move a clamped or dead neuron."""
+    rng = np.random.default_rng(seed)
+    H = W = 6
+    pairs = {((0, 0), (0, 1)): 1.0, ((2, 2), (3, 3)): -1.0}
+    clamp_mask = rng.random((H, W)) < 0.3
+    clamp_value = 2.0 * rng.integers(0, 2, (H, W)) - 1.0
+    dead = (rng.random((H, W)) < 0.1) & ~clamp_mask
+    lat = ising.lattice_from_pairs(
+        H, W, pairs, clamp_mask=clamp_mask, clamp_value=clamp_value, dead_mask=dead
+    )
+    s0 = samplers.random_init(jax.random.key(seed % 1000), (H, W))
+    for fn in (
+        lambda: samplers.chromatic_gibbs(lat, jax.random.key(1), s0, n_sweeps=20).s,
+        lambda: samplers.tau_leap_lattice(lat, jax.random.key(2), s0, n_steps=20, dt=0.5).s,
+    ):
+        s = np.asarray(fn())
+        np.testing.assert_array_equal(s[clamp_mask], np.asarray(clamp_value)[clamp_mask])
+        np.testing.assert_array_equal(s[np.asarray(dead)], -1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.floats(-5, 5), s=st.sampled_from([-1.0, 1.0]))
+def test_flip_prob_consistency(h, s):
+    """flip_prob == P(resample picks the opposite sign)."""
+    p_up = float(glauber.prob_up(jnp.asarray(h)))
+    p_flip = float(glauber.flip_prob(jnp.asarray(h), jnp.asarray(s)))
+    expected = (1.0 - p_up) if s > 0 else p_up
+    np.testing.assert_allclose(p_flip, expected, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_spin_values_stay_pm1(seed):
+    prob = _random_dense(8, seed)
+    s0 = samplers.random_init(jax.random.key(seed % 997), (8,))
+    run = samplers.tau_leap_dense(prob, jax.random.key(3), s0, n_steps=50, dt=0.3, sample_every=1)
+    vals = np.unique(np.asarray(run.samples))
+    assert set(vals).issubset({-1.0, 1.0})

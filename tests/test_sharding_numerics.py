@@ -1,0 +1,71 @@
+"""Sharding must not change numerics: the same train step on a 2x2 device
+mesh under tp_sp and fsdp_pure rules must produce the same loss/grads as
+the unsharded single-device run.
+
+Runs in a subprocess because XLA fixes the host device count at first
+initialization (the main test process has 1 CPU device).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import dataclasses
+import jax, jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.launch.mesh import make_test_mesh
+from repro.launch import specs as sp
+from repro.configs.base import ShapeConfig
+from repro.sharding import partition
+from repro.train.train_step import TrainConfig, init_state, make_train_step
+
+cfg = get_config("gemma-2b", reduced=True)
+tcfg = TrainConfig()
+pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4))
+batch = pipe.global_batch(0)
+rng = jax.random.key(1)
+
+losses = {}
+
+# unsharded reference
+state, _ = init_state(cfg, tcfg, jax.random.key(0))
+_, m = jax.jit(make_train_step(cfg, tcfg))(state, batch, rng)
+losses["unsharded"] = float(m["loss"])
+
+mesh = make_test_mesh((2, 2), ("data", "model"))
+shape = ShapeConfig("t", 16, 4, "train")
+for strategy in ("tp_sp", "fsdp_pure"):
+    c = dataclasses.replace(cfg, strategy=strategy)
+    rules = sp.rules_for(c, shape, mesh)
+    with partition.axis_rules(mesh, rules):
+        state, axes = init_state(c, tcfg, jax.random.key(0))
+        sh = partition.struct_shardings(state, axes, mesh, rules)
+        state = jax.device_put(state, sh)
+        step = jax.jit(make_train_step(c, tcfg, param_axes=axes.params), in_shardings=(sh, None, None))
+        _, m = step(state, batch, rng)
+        losses[strategy] = float(m["loss"])
+
+print(json.dumps(losses))
+"""
+
+
+@pytest.mark.slow
+def test_strategies_match_unsharded():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True, env=env, timeout=600
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    losses = json.loads(out.stdout.strip().splitlines()[-1])
+    ref = losses["unsharded"]
+    for k, v in losses.items():
+        assert abs(v - ref) < 5e-3, f"{k}: {v} vs unsharded {ref}"
