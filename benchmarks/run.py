@@ -3,15 +3,17 @@
     PYTHONPATH=src python -m benchmarks.run [--only name] [--fast]
 
 Prints `name,us_per_call,derived` CSV rows (derived = the figure's headline
-quantity). Functions:
+quantity). Sampling benchmarks go through the unified driver
+(`sampler_api.run`) with kernels selected by registry name. Functions:
 
-  fig3a_fidelity      — TV(sampled, exact Boltzmann) for each sampler
+  fig3a_fidelity      — TV(sampled, exact Boltzmann) per registered kernel
   figS9_delay_skew    — tau-leap dt sweep == the chip's delay-ratio study
   fig3gh_scaling      — async vs sync TTS scaling + A e^{B sqrt n} fits
   fig3i_solver_comparison — solver zoo TTS on one MaxCut instance
   fig4d_ml_sampling   — time/sample: PASS (flat, model time) vs CPU Gibbs
   fig4e_energy        — energy/sample projection from paper power numbers
   fig5_decision       — bifurcation distance vs eta
+  driver              — run() wall time per kernel + multi-chain batching
   kernels             — Pallas kernel wall time (jit ref path) + exactness
   roofline            — dry-run roofline table from artifacts/
 """
@@ -27,7 +29,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import ctmc, ising, observables, problems, samplers
+from repro.core import ctmc, ising, observables, problems, sampler_api, samplers
 from repro.core.glauber import LAMBDA0_CHIP_HZ
 from repro.data import digits
 
@@ -50,7 +52,8 @@ def _timeit(fn, n=5):
 
 
 def fig3a_fidelity():
-    """TV distance to the exact Boltzmann distribution, per sampler."""
+    """TV distance to the exact Boltzmann distribution, per registered
+    kernel, all through the one sampler_api.run driver."""
     rng = np.random.default_rng(0)
     n = 6
     A = rng.normal(0, 0.6, (n, n))
@@ -64,20 +67,24 @@ def fig3a_fidelity():
     def tv(emp):
         return 0.5 * float(np.abs(np.asarray(emp) - p_exact).sum())
 
-    t0 = time.perf_counter()
-    run = samplers.gibbs_random_scan(prob, jax.random.key(2), s0, n_steps=steps, sample_every=2)
-    emp = ctmc.empirical_distribution(run.samples.reshape(-1, n), n)
-    _row("fig3a_fidelity/sync_gibbs", (time.perf_counter() - t0) * 1e6, f"tv={tv(emp):.4f}")
-
-    t0 = time.perf_counter()
-    crun = ctmc.gillespie(prob, jax.random.key(3), s0, n_events=steps // 3, sample_every=1)
-    w = ctmc.time_weighted_distribution(crun, n)
-    _row("fig3a_fidelity/async_ctmc", (time.perf_counter() - t0) * 1e6, f"tv={tv(w):.4f}")
-
-    t0 = time.perf_counter()
-    trun = samplers.tau_leap_dense(prob, jax.random.key(4), s0, n_steps=steps, dt=0.05, sample_every=2)
-    emp = ctmc.empirical_distribution(trun.samples.reshape(-1, n), n)
-    _row("fig3a_fidelity/tau_leap(dt=0.05)", (time.perf_counter() - t0) * 1e6, f"tv={tv(emp):.4f}")
+    runs = [
+        ("sync_gibbs", "random_scan_gibbs", 2, dict(n_steps=steps, sample_every=2)),
+        ("async_ctmc", "ctmc", 3, dict(n_steps=steps // 3, sample_every=1)),
+        (
+            "tau_leap(dt=0.05)",
+            sampler_api.TauLeap(dt=0.05),
+            4,
+            dict(n_steps=steps, sample_every=2),
+        ),
+    ]
+    for label, kernel, seed, kw in runs:
+        t0 = time.perf_counter()
+        res = sampler_api.run(prob, kernel, jax.random.key(seed), s0=s0, **kw)
+        if label == "async_ctmc":
+            emp = ctmc.time_weighted_distribution(ctmc.CTMCRun.from_result(res), n)
+        else:
+            emp = ctmc.empirical_distribution(res.samples.reshape(-1, n), n)
+        _row(f"fig3a_fidelity/{label}", (time.perf_counter() - t0) * 1e6, f"tv={tv(emp):.4f}")
 
 
 def figS9_delay_skew():
@@ -94,7 +101,10 @@ def figS9_delay_skew():
     for dt in (1.6, 0.8, 0.4, 0.2, 0.1, 0.05):
         steps = int((30_000 if FAST else 100_000) * min(1.0, 0.4 / dt) + 20_000)
         t0 = time.perf_counter()
-        run = samplers.tau_leap_dense(prob, jax.random.key(5), s0, n_steps=steps, dt=dt, sample_every=2)
+        run = sampler_api.run(
+            prob, sampler_api.TauLeap(dt=dt), jax.random.key(5),
+            n_steps=steps, s0=s0, sample_every=2,
+        )
         emp = ctmc.empirical_distribution(run.samples.reshape(-1, n), n)
         tv = 0.5 * float(np.abs(np.asarray(emp) - p_exact).sum())
         _row(f"figS9_delay_skew/dt={dt}", (time.perf_counter() - t0) * 1e6, f"tv={tv:.4f}")
@@ -206,7 +216,7 @@ def fig3i_solver_comparison():
     """Fig 3I analogue: solver zoo on one 60-node MaxCut instance — median
     sweeps-to-best-known for PASS async, annealed-PASS, replica exchange,
     and the serial Gibbs baseline (model-time basis, lambda0=1)."""
-    from repro.core import annealing, tempering
+    from repro.core import tempering
 
     prob = problems.random_maxcut(60, seed=11)
     s0s = jax.vmap(lambda k: samplers.random_init(k, (prob.n,)))(
@@ -239,14 +249,13 @@ def fig3i_solver_comparison():
 
     def annealed():
         n_steps = 600
-        betas = annealing.linear_schedule(0.3, 2.5, n_steps)
-        outs = []
-        for i in range(12):
-            s, e = annealing.annealed_tau_leap_dense(
-                prob, jax.random.key(100 + i), s0s[i], betas, n_steps=n_steps, dt=0.25
-            )
-            outs.append(n_steps * 0.25 if float(e) <= e_star + 1e-6 else np.inf)
-        return np.asarray(outs)
+        res = sampler_api.run(
+            prob, sampler_api.TauLeap(dt=0.25), jax.random.key(100),
+            n_steps=n_steps, s0=s0s, n_chains=12,
+            schedule=sampler_api.linear(0.3, 2.5),
+        )
+        e = np.asarray(jax.vmap(prob.energy)(res.s))
+        return np.where(e <= e_star + 1e-6, n_steps * 0.25, np.inf)
 
     def replica_exchange():
         outs = []
@@ -261,6 +270,48 @@ def fig3i_solver_comparison():
     report("serial_gibbs", sync_gibbs)
     report("annealed_pass", annealed)
     report("replica_exchange_pass", replica_exchange)
+
+
+def driver():
+    """Unified-driver wall time: every registered kernel on a common dense
+    problem, plus the multi-chain batching and Pallas-dispatch paths."""
+    prob = problems.sk_instance(64, seed=0)
+    lat = _random_lattice(16)
+    n_steps = 256 if FAST else 1024
+
+    for name in sampler_api.kernel_names():
+        dense = name in ("random_scan_gibbs", "ctmc", "tau_leap")
+        p = prob if dense else lat
+        steps = n_steps if name != "chromatic_gibbs" else n_steps // 4
+        fn = lambda key: sampler_api.run(p, name, key, n_steps=steps).s
+        us = _timeit(lambda: jax.block_until_ready(fn(jax.random.key(1))), n=5)
+        _row(f"driver/{name}", us, f"us_per_step={us/steps:.3f}")
+
+    for n_chains in (8, 64):
+        fn = lambda key: sampler_api.run(
+            prob, sampler_api.TauLeap(dt=0.25), key,
+            n_steps=n_steps, n_chains=n_chains,
+            schedule=sampler_api.geometric(0.3, 2.0),
+        ).s
+        us = _timeit(lambda: jax.block_until_ready(fn(jax.random.key(2))), n=5)
+        _row(
+            f"driver/tau_leap_chains={n_chains}",
+            us,
+            f"us_per_chain_step={us/(n_steps*n_chains):.4f}",
+        )
+
+    # Pallas dispatch (interpret mode off-TPU: correctness path, not speed)
+    steps_p = 32
+    fn = lambda key: sampler_api.run(
+        prob, sampler_api.TauLeap(dt=0.25), key, n_steps=steps_p, backend="pallas"
+    ).s
+    us = _timeit(lambda: jax.block_until_ready(fn(jax.random.key(3))), n=2)
+    on_tpu = jax.default_backend() == "tpu"
+    _row(
+        "driver/tau_leap_pallas",
+        us,
+        f"us_per_step={us/steps_p:.2f};mode={'compiled' if on_tpu else 'interpret'}",
+    )
 
 
 def fig5_decision():
@@ -354,6 +405,7 @@ ALL = [
     fig4d_ml_sampling,
     fig4e_energy,
     fig5_decision,
+    driver,
     kernels,
     roofline,
 ]

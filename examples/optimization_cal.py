@@ -1,6 +1,8 @@
 """Full-core optimization demo (paper Fig. 3F): a 16x16 king's-move MaxCut
 whose ground state spells C-A-L, solved by the asynchronous PASS dynamics,
-with int8-quantized weights exactly like the silicon.
+with int8-quantized weights exactly like the silicon. The anneal is a
+driver-level `schedule` on the tau-leap kernel (the paper's 'counter that
+uniformly decreases the weights' future-work mode).
 
     PYTHONPATH=src python examples/optimization_cal.py
 """
@@ -8,7 +10,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import annealing, ising, problems, samplers
+from repro.core import ising, problems, sampler_api, samplers
 
 
 def show(s):
@@ -25,10 +27,12 @@ def main():
     print("initial (random) state:")
     show(s0)
 
-    # PASS asynchronous tau-leap dynamics with a gentle anneal (the paper's
-    # 'counter that uniformly decreases the weights' future-work mode)
-    betas = annealing.linear_schedule(0.4, 2.0, 1200)
-    s, e = annealing.annealed_tau_leap_lattice(lat, jax.random.key(1), s0, betas, n_steps=1200)
+    # PASS asynchronous tau-leap dynamics with a gentle anneal
+    res = sampler_api.run(
+        lat, sampler_api.TauLeap(dt=0.25), jax.random.key(1),
+        n_steps=1200, s0=s0, schedule=sampler_api.linear(0.4, 2.0),
+    )
+    s, e = res.s, lat.energy(res.s)
 
     print("\nafter 1200 async steps:")
     show(s)

@@ -1,16 +1,41 @@
 """repro.core — the PASS paper's contribution as a composable JAX library.
 
+The sampling layer is a step-kernel / driver split (`sampler_api`): a small
+`SamplerKernel` protocol — `init(problem, key, s0) -> state`,
+`step(problem, state, key, beta) -> state`, state a pytree — and ONE
+`run()` driver owning the scan loop, observation striding, energy
+recording, beta schedules (constant/linear/geometric), first-hit TTS
+tracking, multi-chain batching (vmap, per-chain keys), and Pallas backend
+dispatch ("ref" | "pallas" | "auto"). Four kernels are registered by name:
+
+    "random_scan_gibbs"  sync serial baseline     (DenseIsing)
+    "chromatic_gibbs"    exact parallel 4-color   (LatticeIsing)
+    "tau_leap"           PASS async model         (both; dense has a Pallas path)
+    "ctmc"               exact Gillespie events   (DenseIsing)
+
+Migration from the legacy entry points (kept as deprecated wrappers):
+
+    samplers.gibbs_random_scan(p, k, s0, n)   -> sampler_api.run(p, "random_scan_gibbs", k, n_steps=n, s0=s0)
+    samplers.gibbs_first_hit(p, k, s0, e, n)  -> sampler_api.run(..., first_hit=e)
+    samplers.chromatic_gibbs(p, k, s0, n)     -> sampler_api.run(p, "chromatic_gibbs", k, n_steps=n, s0=s0)
+    samplers.tau_leap_lattice / _dense        -> sampler_api.run(p, TauLeap(dt=dt), k, n_steps=n, s0=s0)
+    annealing.annealed_tau_leap_*             -> sampler_api.run(..., schedule=linear(b0, b1))
+    ctmc.gillespie / gillespie_first_hit      -> sampler_api.run(p, "ctmc", k, ...)
+    tempering.run                             -> still the PT controller; its replica
+                                                 dynamics are one multi-chain run() round
+
 Public API:
   ising       — problem representations (DenseIsing, LatticeIsing), energies
   glauber     — conditionals, flip rates, sigmoid trims
-  samplers    — sync Gibbs baseline, chromatic Gibbs, tau-leap async (PASS)
-  ctmc        — exact event-driven CTMC (Gillespie), first-hit TTS
+  sampler_api — SamplerKernel protocol, kernel registry, run() driver
+  samplers    — deprecated wrappers (sync Gibbs, chromatic, tau-leap)
+  ctmc        — deprecated wrappers (Gillespie, first-hit) + estimators
   problems    — MaxCut / SK / CAL-letters generators
   boltzmann   — multiplier-free contrastive-divergence training
   decision    — fly neural-decision ring-attractor model
   observables — ACF / lambda0 extraction, TTS scaling fits + bootstrap
-  annealing   — beta-ramped PASS dynamics (the paper's future-work mode)
-  tempering   — replica exchange over the async sampler (beyond-paper)
+  annealing   — deprecated schedule aliases + beta-ramped wrappers
+  tempering   — replica exchange driven by multi-chain run() rounds
 """
 from repro.core import (  # noqa: F401
     annealing,
@@ -21,6 +46,7 @@ from repro.core import (  # noqa: F401
     ising,
     observables,
     problems,
+    sampler_api,
     samplers,
     tempering,
 )

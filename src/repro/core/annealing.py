@@ -2,31 +2,32 @@
 scaling weights during computation == inverse-temperature schedule).
 
 E_beta(s) = beta * E(s); scaling (J, b) by beta is exactly Glauber dynamics
-at inverse temperature beta. `annealed_tau_leap` runs the PASS async model
-while ramping beta — the counter-based simulated-annealing mode sketched in
-the paper's Optimization section (refs 24, 25).
+at inverse temperature beta. Schedules are now a first-class driver feature:
+`sampler_api.run(..., schedule=...)` accepts constant / linear / geometric
+schedules (or a raw beta array) for ANY kernel. The helpers below are kept
+as thin deprecated wrappers — `annealed_tau_leap_*` is just the tau-leap
+kernel under a beta ramp, the counter-based simulated-annealing mode
+sketched in the paper's Optimization section (refs 24, 25).
 """
 from __future__ import annotations
-
-import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import glauber
+from repro.core import sampler_api
 from repro.core.ising import DenseIsing, LatticeIsing
 
 
 def linear_schedule(beta0: float, beta1: float, n_steps: int) -> jax.Array:
-    return jnp.linspace(beta0, beta1, n_steps)
+    """Deprecated alias for sampler_api.linear(beta0, beta1).betas(n_steps)."""
+    return sampler_api.linear(beta0, beta1).betas(n_steps)
 
 
 def geometric_schedule(beta0: float, beta1: float, n_steps: int) -> jax.Array:
-    return beta0 * (beta1 / beta0) ** jnp.linspace(0.0, 1.0, n_steps)
+    """Deprecated alias for sampler_api.geometric(beta0, beta1).betas(n_steps)."""
+    return sampler_api.geometric(beta0, beta1).betas(n_steps)
 
 
-@partial(jax.jit, static_argnames=("n_steps",))
 def annealed_tau_leap_dense(
     problem: DenseIsing,
     key: jax.Array,
@@ -35,22 +36,19 @@ def annealed_tau_leap_dense(
     n_steps: int,
     dt: float = 0.25,
 ) -> tuple[jax.Array, jax.Array]:
-    """tau-leap PASS dynamics with a per-step beta ramp. Returns (s, E(s))."""
-
-    def step(s, inp):
-        key, beta = inp
-        h = beta * problem.local_fields(s)
-        rate = glauber.flip_prob(h, s)
-        p_flip = 1.0 - jnp.exp(-dt * rate)
-        flips = jax.random.uniform(key, s.shape) < p_flip
-        return jnp.where(flips, -s, s), None
-
-    keys = jax.random.split(key, n_steps)
-    s, _ = jax.lax.scan(step, s0, (keys, betas))
-    return s, problem.energy(s)
+    """Deprecated: tau-leap PASS dynamics under a beta ramp; use
+    sampler_api.run(..., schedule=betas). Returns (s, E(s))."""
+    res = sampler_api.run(
+        problem,
+        sampler_api.TauLeap(dt=dt),
+        key,
+        n_steps=n_steps,
+        s0=s0,
+        schedule=betas,
+    )
+    return res.s, problem.energy(res.s)
 
 
-@partial(jax.jit, static_argnames=("n_steps",))
 def annealed_tau_leap_lattice(
     problem: LatticeIsing,
     key: jax.Array,
@@ -59,17 +57,13 @@ def annealed_tau_leap_lattice(
     n_steps: int,
     dt: float = 0.25,
 ) -> tuple[jax.Array, jax.Array]:
-    frozen = problem.frozen_mask
-
-    def step(s, inp):
-        key, beta = inp
-        h = beta * problem.local_fields(s)
-        rate = glauber.flip_prob(h, s)
-        p_flip = jnp.where(frozen, 0.0, 1.0 - jnp.exp(-dt * rate))
-        flips = jax.random.uniform(key, s.shape) < p_flip
-        s = jnp.where(flips, -s, s)
-        return problem.apply_clamps(s), None
-
-    keys = jax.random.split(key, n_steps)
-    s, _ = jax.lax.scan(step, problem.apply_clamps(s0), (keys, betas))
-    return s, problem.energy(s)
+    """Deprecated: lattice form of `annealed_tau_leap_dense`."""
+    res = sampler_api.run(
+        problem,
+        sampler_api.TauLeap(dt=dt),
+        key,
+        n_steps=n_steps,
+        s0=s0,
+        schedule=betas,
+    )
+    return res.s, problem.energy(res.s)

@@ -29,7 +29,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import samplers
+from repro.core import sampler_api
+from repro.core.sampler_api import random_init
 from repro.core.ising import LatticeIsing, KING_OFFSETS, shift2d, quantize_lattice
 
 
@@ -79,25 +80,22 @@ def init_cd(key: jax.Array, H: int = 16, W: int = 16, cfg: CDConfig = CDConfig()
         clamp_value=-jnp.ones((H, W), jnp.float32),
         dead_mask=jnp.zeros((H, W), bool),
     )
-    chains = samplers.random_init(key, (cfg.n_chains, H, W))
+    chains = random_init(key, (cfg.n_chains, H, W))
     return CDState(problem=problem, chains=chains, step=0)
 
 
 def _model_samples(problem: LatticeIsing, chains: jax.Array, key: jax.Array, cfg: CDConfig):
-    keys = jax.random.split(key, chains.shape[0])
+    """Model expectations: the persistent chains advance through the one
+    multi-chain sampling driver ('pass' = tau-leap async, the chip model)."""
     if cfg.sampler == "pass":
-        run = jax.vmap(
-            lambda s0, k: samplers.tau_leap_lattice(
-                problem, k, s0, n_steps=cfg.n_model_steps, dt=cfg.dt
-            )
-        )(chains, keys)
+        kernel = sampler_api.TauLeap(dt=cfg.dt)
     else:
-        run = jax.vmap(
-            lambda s0, k: samplers.chromatic_gibbs(
-                problem, k, s0, n_sweeps=cfg.n_model_steps
-            )
-        )(chains, keys)
-    return run.s
+        kernel = sampler_api.ChromaticGibbs()
+    res = sampler_api.run(
+        problem, kernel, key,
+        n_steps=cfg.n_model_steps, s0=chains, n_chains=chains.shape[0],
+    )
+    return res.s
 
 
 def cd_step(state: CDState, batch: jax.Array, key: jax.Array, cfg: CDConfig) -> CDState:
@@ -137,9 +135,11 @@ def reconstruct(
         clamp_value=partial_image.astype(problem.b.dtype),
     )
     k1, k2 = jax.random.split(key)
-    s0 = samplers.random_init(k1, problem.b.shape)
-    run = samplers.tau_leap_lattice(clamped, k2, s0, n_steps=n_steps, dt=dt)
-    return run.s
+    s0 = random_init(k1, problem.b.shape)
+    res = sampler_api.run(
+        clamped, sampler_api.TauLeap(dt=dt), k2, n_steps=n_steps, s0=s0
+    )
+    return res.s
 
 
 def free_energy_proxy(problem: LatticeIsing, batch: jax.Array) -> jax.Array:

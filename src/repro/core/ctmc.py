@@ -7,17 +7,18 @@ its flip rate lambda_i = lambda0 * sigma(2 h_i s_i). The embedded chain is
 statistically exact — no time-discretization error — and is the fidelity
 reference for the tau-leap sampler and the hardware.
 
-Local fields are maintained incrementally (O(n) per event).
+The step rule lives in `sampler_api.CTMC` (registered as "ctmc"); the
+functions here are thin deprecated wrappers over `sampler_api.run` plus the
+distribution estimators used by tests and benchmarks.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import glauber
+from repro.core import sampler_api
 from repro.core.ising import DenseIsing
 
 
@@ -28,8 +29,14 @@ class CTMCRun(NamedTuple):
     times: jax.Array     # (n_recorded,) event times
     energies: jax.Array  # (n_recorded,)
 
+    @classmethod
+    def from_result(cls, res: sampler_api.RunResult) -> "CTMCRun":
+        """Adapt a driver RunResult (for the estimators below)."""
+        return cls(
+            s=res.s, t=res.t, samples=res.samples, times=res.times, energies=res.energies
+        )
 
-@partial(jax.jit, static_argnames=("n_events", "sample_every"))
+
 def gillespie(
     problem: DenseIsing,
     key: jax.Array,
@@ -38,36 +45,19 @@ def gillespie(
     lambda0: float = 1.0,
     sample_every: int = 0,
 ) -> CTMCRun:
-    """Run n_events exact CTMC flip events."""
-    h0 = problem.local_fields(s0)
-    e0 = problem.energy(s0)
-    J = problem.J
-
-    def event(carry, key):
-        s, h, e, t = carry
-        k_dt, k_site = jax.random.split(key)
-        rates = glauber.flip_rates(h, s, lambda0)
-        total = jnp.sum(rates)
-        dt = jax.random.exponential(k_dt) / total
-        i = jax.random.categorical(k_site, jnp.log(rates + 1e-30))
-        delta = -2.0 * s[i]
-        e = e + delta * h[i]
-        h = h + J[:, i] * delta
-        s = s.at[i].multiply(-1.0)
-        t = t + dt
-        return (s, h, e, t), (s, t, e)
-
-    keys = jax.random.split(key, n_events)
-    (s, h, e, t), (traj, times, energies) = jax.lax.scan(
-        event, (s0, h0, e0, jnp.asarray(0.0)), keys
+    """Deprecated: run n_events exact CTMC flip events; use
+    sampler_api.run(problem, "ctmc", ...)."""
+    res = sampler_api.run(
+        problem,
+        sampler_api.CTMC(lambda0=lambda0),
+        key,
+        n_steps=n_events,
+        s0=s0,
+        sample_every=sample_every,
     )
-    if sample_every > 0:
-        sl = slice(sample_every - 1, None, sample_every)
-        return CTMCRun(s=s, t=t, samples=traj[sl], times=times[sl], energies=energies[sl])
-    return CTMCRun(s=s, t=t, samples=traj[:0], times=times[:0], energies=energies[:0])
+    return CTMCRun.from_result(res)
 
 
-@partial(jax.jit, static_argnames=("n_events",))
 def gillespie_first_hit(
     problem: DenseIsing,
     key: jax.Array,
@@ -76,38 +66,23 @@ def gillespie_first_hit(
     n_events: int,
     lambda0: float = 1.0,
 ) -> tuple[jax.Array, jax.Array]:
-    """(first model time at which energy<=e_target, hit?) — exact CTMC.
+    """Deprecated: (first model time at which energy<=e_target, hit?) — the
+    asynchronous system's time-to-solution; use
+    sampler_api.run(..., first_hit=e_target).
 
-    The asynchronous system's time-to-solution: n flips at total rate
-    sum_i lambda_i means model time advances ~n/(n*lambda0) per event —
-    the n-fold parallelism of the paper's Eq. 16 appears automatically.
+    n flips at total rate sum_i lambda_i means model time advances
+    ~n/(n*lambda0) per event — the n-fold parallelism of the paper's Eq. 16
+    appears automatically.
     """
-    J = problem.J
-    h0 = problem.local_fields(s0)
-    e0 = problem.energy(s0)
-
-    def event(carry, key):
-        s, h, e, t, t_hit, hit = carry
-        k_dt, k_site = jax.random.split(key)
-        rates = glauber.flip_rates(h, s, lambda0)
-        total = jnp.sum(rates)
-        dt = jax.random.exponential(k_dt) / total
-        i = jax.random.categorical(k_site, jnp.log(rates + 1e-30))
-        delta = -2.0 * s[i]
-        e = e + delta * h[i]
-        h = h + J[:, i] * delta
-        s = s.at[i].multiply(-1.0)
-        t = t + dt
-        new_hit = (e <= e_target) & (~hit)
-        t_hit = jnp.where(new_hit, t, t_hit)
-        hit = hit | new_hit
-        return (s, h, e, t, t_hit, hit), None
-
-    keys = jax.random.split(key, n_events)
-    init_hit = e0 <= e_target
-    carry = (s0, h0, e0, jnp.asarray(0.0), jnp.where(init_hit, 0.0, jnp.inf), init_hit)
-    (s, h, e, t, t_hit, hit), _ = jax.lax.scan(event, carry, keys)
-    return t_hit, hit
+    res = sampler_api.run(
+        problem,
+        sampler_api.CTMC(lambda0=lambda0),
+        key,
+        n_steps=n_events,
+        s0=s0,
+        first_hit=e_target,
+    )
+    return res.t_hit, res.hit
 
 
 def empirical_distribution(samples: jax.Array, n: int) -> jax.Array:

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import samplers
+from repro.core import sampler_api
 from repro.core.ising import DenseIsing
 
 
@@ -76,10 +76,11 @@ def simulate(key: jax.Array, targets: np.ndarray, cfg: DecisionConfig) -> Trajec
         pos, s_prev, arrived = carry
         J_cos, ghat = couplings(pos, targets, assign, cfg.eta)
         problem = _dense_problem(J_cos, s_prev, k, n, cfg.alpha_mem)
-        run = samplers.tau_leap_dense(
-            problem, key, s_prev, n_steps=cfg.n_sampler_steps, dt=cfg.dt
+        res = sampler_api.run(
+            problem, sampler_api.TauLeap(dt=cfg.dt), key,
+            n_steps=cfg.n_sampler_steps, s0=s_prev,
         )
-        s = run.s
+        s = res.s
         # Velocity (Eq. 14) with the Boltzmann spin mapped to neural firing:
         # s=+1 -> the neuron votes for its goal vector, s=-1 -> it is silent
         # (a silent neuron contributes nothing; the ±1 literal reading makes

@@ -1,0 +1,555 @@
+"""Unified sampler API: step-kernel / driver split.
+
+The paper's single asynchronous Glauber dynamic serves combinatorial
+optimization, neural simulation, and ML training alike.  This module
+expresses that one dynamic once: a small `SamplerKernel` protocol (how one
+step of a chain advances) and ONE `run()` driver that owns everything every
+sampling entry point used to re-implement — the `lax.scan`, observation
+striding, energy recording, beta schedules, first-hit TTS tracking,
+multi-chain batching, and backend dispatch onto the Pallas kernels.
+
+Kernel protocol (state is a `KernelState` pytree):
+
+    kernel.init(problem, key, s0=None) -> KernelState
+    kernel.step(problem, state, key, beta) -> KernelState
+
+Kernels implemented here, registered by name for config/benchmark selection:
+
+    "random_scan_gibbs" — the paper's SYNCHRONOUS baseline (dense problems):
+        one uniformly random site resampled per step, incremental fields,
+        model time 1/lambda0 per step.
+    "chromatic_gibbs"   — exact parallel Gibbs on the king's-move lattice via
+        the 4-coloring; one step = one sweep = 4 color phases.
+    "tau_leap"          — the PASS ASYNC model (lattice or dense): every
+        neuron flips independently w.p. 1-exp(-dt*lambda_i) per step of
+        model time dt.  dt*lambda0 -> 0 recovers the exact CTMC.  The dense
+        form dispatches to the Pallas `tau_leap_step` kernel via
+        `backend="pallas"` (int8 MXU matmul, fused flip epilogue).
+    "ctmc"              — the exact event-driven CTMC (Gillespie); one step =
+        one flip event, stochastic model-time advance.
+
+Driver:
+
+    run(problem, kernel, key, n_steps=..., schedule=..., n_chains=...,
+        sample_every=..., first_hit=..., backend=...) -> RunResult
+
+`schedule` accepts None (beta=1), a float, a `(n_steps,)` array, a
+`(n_chains, n_steps)` array (per-chain schedules — replica exchange), or a
+Schedule object (`constant` / `linear` / `geometric`).  `backend` is
+`"ref" | "pallas" | "auto"` ("auto": compiled Pallas on TPU, reference
+elsewhere).  The legacy entry points in `samplers` / `annealing` / `ctmc`
+are thin deprecated wrappers over this driver and reproduce their historical
+outputs bit-for-bit at beta=1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional, Protocol, Union, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import glauber
+from repro.core.ising import DenseIsing, LatticeIsing, king_color_masks
+
+
+def random_init(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
+    """Uniform random ±1 initial state (the chip's post-reset state)."""
+    return (2 * jax.random.bernoulli(key, 0.5, shape) - 1).astype(dtype)
+
+
+def state_shape(problem) -> tuple[int, ...]:
+    """Natural spin-array shape for a problem."""
+    return problem.shape if isinstance(problem, LatticeIsing) else (problem.n,)
+
+
+# ---------------------------------------------------------------------------
+# Kernel state & protocol
+# ---------------------------------------------------------------------------
+
+
+class KernelState(NamedTuple):
+    """Pytree carried through the driver's scan.
+
+    s:   spin state (±1), shape = problem's natural shape.
+    t:   model time (seconds of chip time at rate lambda0).
+    e:   running energy E(s) for kernels that maintain it incrementally
+         (random-scan, ctmc); None otherwise — the driver recomputes on
+         demand for first-hit tracking.
+    aux: kernel-private pytree (incremental local fields, quantized weights).
+    """
+
+    s: jax.Array
+    t: jax.Array
+    e: Any
+    aux: Any
+
+
+@runtime_checkable
+class SamplerKernel(Protocol):
+    """One MCMC/CTMC step rule. Implementations are frozen dataclasses
+    registered as pytrees: float/str config is metadata (static under jit),
+    array-valued config (e.g. sigmoid trims) is data."""
+
+    def init(self, problem, key: jax.Array, s0: Optional[jax.Array] = None) -> KernelState:
+        ...
+
+    def step(self, problem, state: KernelState, key: jax.Array, beta: jax.Array) -> KernelState:
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Kernel registry
+# ---------------------------------------------------------------------------
+
+KERNELS: dict[str, type] = {}
+
+
+def register_kernel(name: str):
+    """Class decorator: register a kernel under `name` for by-name lookup
+    (configs, benchmarks, CLI flags)."""
+
+    def deco(cls):
+        KERNELS[name] = cls
+        cls.name = name
+        return cls
+
+    return deco
+
+
+def get_kernel(name: str, **config) -> "SamplerKernel":
+    """Instantiate a registered kernel by name."""
+    if name not in KERNELS:
+        raise KeyError(f"unknown sampler kernel {name!r}; have {sorted(KERNELS)}")
+    return KERNELS[name](**config)
+
+
+def kernel_names() -> list[str]:
+    return sorted(KERNELS)
+
+
+# ---------------------------------------------------------------------------
+# Beta schedules (subsumes annealing.py's ramp zoo)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Base: a schedule maps n_steps -> (n_steps,) array of betas."""
+
+    def betas(self, n_steps: int) -> jax.Array:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class constant(Schedule):
+    beta: float = 1.0
+
+    def betas(self, n_steps: int) -> jax.Array:
+        return jnp.full((n_steps,), self.beta, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class linear(Schedule):
+    beta0: float = 0.3
+    beta1: float = 2.0
+
+    def betas(self, n_steps: int) -> jax.Array:
+        return jnp.linspace(self.beta0, self.beta1, n_steps)
+
+
+@dataclasses.dataclass(frozen=True)
+class geometric(Schedule):
+    beta0: float = 0.3
+    beta1: float = 2.0
+
+    def betas(self, n_steps: int) -> jax.Array:
+        return self.beta0 * (self.beta1 / self.beta0) ** jnp.linspace(0.0, 1.0, n_steps)
+
+
+ScheduleLike = Union[None, float, jax.Array, Schedule]
+
+
+def _tau_leap_flip(s, h, key, dt, trim, frozen):
+    """One tau-leap update given (beta-scaled) fields h: each spin flips
+    w.p. 1-exp(-dt*lambda_i/lambda0); frozen (clamped/dead) sites never do."""
+    rate = glauber.flip_prob(h, s, trim)
+    p_flip = 1.0 - jnp.exp(-dt * rate)
+    if frozen is not None:
+        p_flip = jnp.where(frozen, 0.0, p_flip)
+    flips = jax.random.uniform(key, s.shape) < p_flip
+    return jnp.where(flips, -s, s)
+
+
+def resolve_schedule(schedule: ScheduleLike, n_steps: int) -> jax.Array:
+    """Normalize any accepted schedule form to a beta array.
+
+    Returns (n_steps,) — or (n_chains, n_steps) when given a 2D array of
+    per-chain schedules."""
+    if schedule is None:
+        return jnp.ones((n_steps,), jnp.float32)
+    if isinstance(schedule, Schedule):
+        return schedule.betas(n_steps)
+    if isinstance(schedule, (int, float)):
+        return jnp.full((n_steps,), float(schedule), jnp.float32)
+    betas = jnp.asarray(schedule, jnp.float32)
+    if betas.ndim == 0:  # numpy/jax scalar: constant schedule
+        return jnp.full((n_steps,), betas)
+    if betas.shape[-1] != n_steps:
+        raise ValueError(f"schedule length {betas.shape[-1]} != n_steps {n_steps}")
+    return betas
+
+
+# ---------------------------------------------------------------------------
+# Kernels
+# ---------------------------------------------------------------------------
+
+
+@register_kernel("random_scan_gibbs")
+@partial(jax.tree_util.register_dataclass, data_fields=(), meta_fields=("lambda0",))
+@dataclasses.dataclass(frozen=True)
+class RandomScanGibbs:
+    """Serial random-scan Gibbs on a dense problem — the paper's synchronous
+    baseline. One site per step, dt = 1/lambda0 per step (the chip
+    comparison runs the serial system at the single-neuron rate).
+    Maintains local fields and energy incrementally: O(n) per step."""
+
+    lambda0: float = 1.0
+
+    def init(self, problem: DenseIsing, key, s0=None) -> KernelState:
+        if s0 is None:
+            s0 = random_init(key, state_shape(problem))
+        return KernelState(
+            s=s0,
+            t=jnp.asarray(0.0, jnp.float32),
+            e=problem.energy(s0),
+            aux=problem.local_fields(s0),
+        )
+
+    def step(self, problem: DenseIsing, state, key, beta) -> KernelState:
+        s, h = state.s, state.aux
+        k_site, k_flip = jax.random.split(key)
+        i = jax.random.randint(k_site, (), 0, problem.n)
+        p_up = glauber.prob_up(beta * h[i])
+        new_si = jnp.where(jax.random.uniform(k_flip) < p_up, 1.0, -1.0)
+        delta = new_si - s[i]
+        # dE for changing s_i by delta: delta * h_i (h is the raw, beta-free
+        # field including b and the full J row)
+        e = state.e + delta * h[i]
+        h = h + problem.J[:, i] * delta  # J symmetric, zero diag: h_i untouched
+        s = s.at[i].set(new_si)
+        return KernelState(s=s, t=state.t + 1.0 / self.lambda0, e=e, aux=h)
+
+
+@register_kernel("chromatic_gibbs")
+@partial(jax.tree_util.register_dataclass, data_fields=("trim",), meta_fields=("lambda0",))
+@dataclasses.dataclass(frozen=True)
+class ChromaticGibbs:
+    """Exact parallel Gibbs on the king's-move lattice via the 4-coloring.
+    One step = 4 color phases = one update per neuron, so the equivalent
+    model time per step at per-neuron rate lambda0 is 1/lambda0."""
+
+    lambda0: float = 1.0
+    trim: Optional[glauber.SigmoidTrim] = None
+
+    def init(self, problem: LatticeIsing, key, s0=None) -> KernelState:
+        if s0 is None:
+            s0 = random_init(key, state_shape(problem))
+        s0 = problem.apply_clamps(s0)
+        return KernelState(s=s0, t=jnp.asarray(0.0, jnp.float32), e=None, aux=())
+
+    def step(self, problem: LatticeIsing, state, key, beta) -> KernelState:
+        H, W = problem.shape
+        colors = king_color_masks(H, W)
+        frozen = problem.frozen_mask
+        s = state.s
+        keys = jax.random.split(key, colors.shape[0])
+        for c in range(colors.shape[0]):
+            h = problem.local_fields(s)
+            p_up = glauber.prob_up(beta * h, self.trim)
+            u = jax.random.uniform(keys[c], s.shape)
+            proposal = jnp.where(u < p_up, 1.0, -1.0).astype(s.dtype)
+            upd = colors[c] & (~frozen)
+            s = jnp.where(upd, proposal, s)
+        s = problem.apply_clamps(s)
+        return KernelState(s=s, t=state.t + 1.0 / self.lambda0, e=None, aux=())
+
+
+@register_kernel("tau_leap")
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("trim",),
+    meta_fields=("dt", "lambda0", "backend"),
+)
+@dataclasses.dataclass(frozen=True)
+class TauLeap:
+    """The PASS asynchronous model: every neuron flips independently with
+    prob 1-exp(-dt*lambda_i) per step of model time dt (in units of
+    1/lambda0). Small dt*lambda0 -> exact CTMC; large dt -> 'stale neighbor'
+    distortion, the TPU analogue of the chip's circuit-delay skew (Fig S9).
+
+    Works on LatticeIsing (stencil fields, clamp/dead masks) and DenseIsing.
+    The dense form supports `backend="pallas"`: weights are int8-quantized
+    once at init and every step runs the fused Pallas `tau_leap_step` kernel
+    (MXU matmul -> flip epilogue; compiled on TPU, interpreted elsewhere)."""
+
+    dt: float = 0.1
+    lambda0: float = 1.0
+    backend: str = "ref"  # "ref" | "pallas"
+    trim: Optional[glauber.SigmoidTrim] = None
+
+    def init(self, problem, key, s0=None) -> KernelState:
+        if s0 is None:
+            s0 = random_init(key, state_shape(problem))
+        aux = ()
+        if isinstance(problem, LatticeIsing):
+            s0 = problem.apply_clamps(s0)
+        elif self.backend == "pallas":
+            if self.trim is not None:
+                raise NotImplementedError("pallas tau-leap does not support trims")
+            from repro.kernels import ops
+
+            aux = ops.quantize_dense(problem.J)  # (j_i8, scale), once per run
+        return KernelState(s=s0, t=jnp.asarray(0.0, jnp.float32), e=None, aux=aux)
+
+    def step(self, problem, state, key, beta) -> KernelState:
+        s = state.s
+        if isinstance(problem, LatticeIsing):
+            h = beta * problem.local_fields(s)
+            s = _tau_leap_flip(s, h, key, self.dt, self.trim, problem.frozen_mask)
+            s = problem.apply_clamps(s)
+        elif self.backend == "pallas":
+            from repro.kernels import ops
+
+            j_i8, scale = state.aux
+            u = jax.random.uniform(key, s.shape)
+            # beta scales the field: h_beta = acc*(beta*scale) + beta*b
+            s = ops.tau_leap_step(
+                s[None, :],
+                j_i8,
+                beta * problem.b,
+                beta * scale,
+                u[None, :],
+                jnp.asarray(self.dt, jnp.float32),
+                mode="kernel",
+            )[0]
+        else:
+            h = beta * problem.local_fields(s)
+            s = _tau_leap_flip(s, h, key, self.dt, self.trim, None)
+        return KernelState(
+            s=s, t=state.t + self.dt / self.lambda0, e=None, aux=state.aux
+        )
+
+
+@register_kernel("ctmc")
+@partial(jax.tree_util.register_dataclass, data_fields=(), meta_fields=("lambda0",))
+@dataclasses.dataclass(frozen=True)
+class CTMC:
+    """Exact event-driven continuous-time Glauber dynamics (Gillespie/SSA).
+    One step = one flip event: Exp(sum_i lambda_i) waiting time, site drawn
+    proportionally to lambda_i = lambda0 * sigma(2 beta h_i s_i). The
+    embedded chain is statistically exact — the fidelity reference for the
+    tau-leap kernel and the hardware. Incremental fields: O(n) per event."""
+
+    lambda0: float = 1.0
+
+    def init(self, problem: DenseIsing, key, s0=None) -> KernelState:
+        if s0 is None:
+            s0 = random_init(key, state_shape(problem))
+        return KernelState(
+            s=s0,
+            t=jnp.asarray(0.0, jnp.float32),
+            e=problem.energy(s0),
+            aux=problem.local_fields(s0),
+        )
+
+    def step(self, problem: DenseIsing, state, key, beta) -> KernelState:
+        s, h = state.s, state.aux
+        k_dt, k_site = jax.random.split(key)
+        rates = self.lambda0 * glauber.flip_prob(beta * h, s)
+        total = jnp.sum(rates)
+        dt = jax.random.exponential(k_dt) / total
+        i = jax.random.categorical(k_site, jnp.log(rates + 1e-30))
+        delta = -2.0 * s[i]
+        e = state.e + delta * h[i]
+        h = h + problem.J[:, i] * delta
+        s = s.at[i].multiply(-1.0)
+        return KernelState(s=s, t=state.t + dt, e=e, aux=h)
+
+
+# ---------------------------------------------------------------------------
+# The driver
+# ---------------------------------------------------------------------------
+
+
+class RunResult(NamedTuple):
+    """Result of a `run()` call. With n_chains > 1 every field gains a
+    leading chain dimension.
+
+    s:        final state.
+    t:        final model time (seconds of chip time).
+    samples:  (n_samples, ...) states recorded every `sample_every` steps
+              (empty leading dim when sample_every == 0).
+    times:    (n_samples,) model time at each recorded state.
+    energies: (n_samples,) energy at each recorded state.
+    t_hit:    first model time with energy <= first_hit (inf if never);
+              None when first_hit was not requested.
+    hit:      whether the target was reached; None when not requested.
+    """
+
+    s: jax.Array
+    t: jax.Array
+    samples: jax.Array
+    times: jax.Array
+    energies: jax.Array
+    t_hit: Any = None
+    hit: Any = None
+
+
+def _resolve_backend(backend: Optional[str]) -> Optional[str]:
+    if backend is None or backend in ("ref", "pallas"):
+        return backend
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    raise ValueError(f"backend must be 'ref' | 'pallas' | 'auto', got {backend!r}")
+
+
+def _run_core(problem, kernel, key, s0, betas, e_target, *, n_steps, sample_every, track_hit):
+    """Single-chain scan: the one loop every sampler entry point shares."""
+    if s0 is None:
+        key, k_init = jax.random.split(key)
+    else:
+        k_init = None
+    state = kernel.init(problem, k_init, s0)
+    keys = jax.random.split(key, n_steps)
+
+    e0 = state.e if state.e is not None else problem.energy(state.s)
+    init_hit = (e0 <= e_target) & jnp.asarray(track_hit)
+    t_hit0 = jnp.where(init_hit, 0.0, jnp.inf)
+
+    def step_fn(carry, inp):
+        st, t_hit, hit = carry
+        k, beta = inp
+        st = kernel.step(problem, st, k, beta)
+        if track_hit:
+            e = st.e if st.e is not None else problem.energy(st.s)
+            new_hit = (e <= e_target) & (~hit)
+            t_hit = jnp.where(new_hit, st.t, t_hit)
+            hit = hit | new_hit
+        return (st, t_hit, hit), None
+
+    carry = (state, t_hit0, init_hit)
+
+    track_e = state.e is not None  # static: kernels maintain e incrementally or never
+    if sample_every > 0:
+        n_samples = n_steps // sample_every
+        m = n_samples * sample_every
+        blk = lambda x: x[:m].reshape((n_samples, sample_every) + x.shape[1:])
+
+        def block(carry, inp):
+            carry, _ = jax.lax.scan(step_fn, carry, inp)
+            st = carry[0]
+            return carry, (st.s, st.t, st.e if track_e else ())
+
+        carry, (samples, times, energies) = jax.lax.scan(
+            block, carry, (blk(keys), blk(betas))
+        )
+        if m < n_steps:  # remainder steps after the last observation
+            carry, _ = jax.lax.scan(step_fn, carry, (keys[m:], betas[m:]))
+        if not track_e:
+            energies = jax.vmap(problem.energy)(samples)
+    else:
+        carry, _ = jax.lax.scan(step_fn, carry, (keys, betas))
+        st = carry[0]
+        samples = jnp.zeros((0,) + st.s.shape, st.s.dtype)
+        times = jnp.zeros((0,), jnp.float32)
+        energies = jnp.zeros((0,), st.s.dtype)
+
+    state, t_hit, hit = carry
+    return RunResult(
+        s=state.s,
+        t=state.t,
+        samples=samples,
+        times=times,
+        energies=energies,
+        t_hit=t_hit if track_hit else None,
+        hit=hit if track_hit else None,
+    )
+
+
+@partial(jax.jit, static_argnames=("n_steps", "sample_every", "track_hit"))
+def _run_single(problem, kernel, key, s0, betas, e_target, n_steps, sample_every, track_hit):
+    return _run_core(
+        problem, kernel, key, s0, betas, e_target,
+        n_steps=n_steps, sample_every=sample_every, track_hit=track_hit,
+    )
+
+
+@partial(jax.jit, static_argnames=("n_steps", "sample_every", "track_hit", "n_chains"))
+def _run_batched(problem, kernel, keys, s0, betas, e_target, n_steps, sample_every, track_hit, n_chains):
+    def one(key, s0_c, betas_c):
+        return _run_core(
+            problem, kernel, key, s0_c, betas_c, e_target,
+            n_steps=n_steps, sample_every=sample_every, track_hit=track_hit,
+        )
+
+    in_axes = (0, None if s0 is None else 0, 0 if betas.ndim == 2 else None)
+    return jax.vmap(one, in_axes=in_axes)(keys, s0, betas)
+
+
+def run(
+    problem,
+    kernel: Union[SamplerKernel, str],
+    key: jax.Array,
+    *,
+    n_steps: int,
+    s0: Optional[jax.Array] = None,
+    schedule: ScheduleLike = None,
+    n_chains: int = 1,
+    sample_every: int = 0,
+    first_hit: Optional[Any] = None,
+    backend: Optional[str] = None,
+) -> RunResult:
+    """Run `n_steps` of `kernel` on `problem` — the single sampling driver.
+
+    Args:
+      problem: DenseIsing or LatticeIsing.
+      kernel: a SamplerKernel instance, or a registered kernel name.
+      key: PRNG key; split into one key per step (and per chain).
+      n_steps: kernel steps (sweeps for chromatic, events for ctmc).
+      s0: optional initial state — (n_chains, ...) when n_chains > 1;
+        random ±1 init per chain when omitted.
+      schedule: beta schedule — None (beta=1), float, Schedule object,
+        (n_steps,) array, or (n_chains, n_steps) per-chain array.
+      n_chains: independent chains batched via vmap with per-chain keys.
+      sample_every: observation stride (the chip's FPGA-side observer clock);
+        0 records nothing.
+      first_hit: energy target — tracks (t_hit, hit) per chain.
+      backend: "ref" | "pallas" | "auto" — overrides the kernel's backend
+        field where it has one (dense tau-leap routes through the Pallas
+        kernel under "pallas"; "auto" compiles on TPU, refs elsewhere).
+    """
+    if isinstance(kernel, str):
+        kernel = get_kernel(kernel)
+    resolved = _resolve_backend(backend)
+    if resolved is not None and hasattr(kernel, "backend") and kernel.backend != resolved:
+        kernel = dataclasses.replace(kernel, backend=resolved)
+
+    betas = resolve_schedule(schedule, n_steps)
+    track_hit = first_hit is not None
+    e_target = jnp.asarray(first_hit if track_hit else jnp.inf, jnp.float32)
+
+    if n_chains == 1:
+        if betas.ndim != 1:
+            raise ValueError("per-chain schedule requires n_chains > 1")
+        return _run_single(
+            problem, kernel, key, s0, betas, e_target, n_steps, sample_every, track_hit
+        )
+
+    if betas.ndim == 2 and betas.shape[0] != n_chains:
+        raise ValueError(f"schedule has {betas.shape[0]} rows for {n_chains} chains")
+    keys = jax.random.split(key, n_chains)
+    return _run_batched(
+        problem, kernel, keys, s0, betas, e_target, n_steps, sample_every, track_hit, n_chains
+    )

@@ -1,37 +1,41 @@
-"""Samplers for Ising / Boltzmann problems.
+"""Deprecated sampler entry points — thin wrappers over `sampler_api.run`.
 
-Four samplers, all pure-JAX and jit/vmap friendly:
+The real implementation lives in `repro.core.sampler_api`: a `SamplerKernel`
+protocol (random-scan Gibbs, chromatic Gibbs, tau-leap, CTMC) and one
+`run()` driver owning the scan loop, observation striding, beta schedules,
+first-hit tracking, multi-chain batching, and Pallas backend dispatch.
 
-  * `gibbs_random_scan`   — the paper's SYNCHRONOUS baseline: one uniformly
-    random site resampled per step; model time advances 1/lambda0 per step
-    (the chip comparison runs the serial system at the single-neuron rate).
-  * `chromatic_gibbs`     — exact parallel Gibbs on the king's-move lattice
-    via the 4-coloring; one sweep = 4 color phases = one update per neuron.
-  * `tau_leap_lattice`    — the PASS ASYNC model on the lattice: every neuron
-    flips independently with prob 1-exp(-dt*lambda_i) per step of model time
-    dt. dt*lambda0 -> 0 recovers the exact CTMC (the silicon's concurrency).
-  * `tau_leap_dense`      — same dynamics with a dense J (SK / MaxCut).
+These wrappers preserve the historical signatures and reproduce the old
+state trajectories bit-for-bit (same per-step key splitting, beta = 1); the
+only numerical delta is that recorded energies for energy-tracking kernels
+(random-scan, ctmc) now come from the kernel's incremental accumulator
+instead of a post-hoc recompute (float32 drift ~1e-5). New code should call
+`sampler_api.run` directly:
 
-The exact event-driven CTMC (Gillespie) lives in `repro.core.ctmc`.
-
-All samplers take and return `s` in {-1,+1} and accept a `sample_every`
-stride that mirrors the chip's FPGA-side row sampler (states observed at a
-fixed observer clock, dynamics free-running in between).
+    old                                   new
+    ------------------------------------  -------------------------------------
+    gibbs_random_scan(p, key, s0, n, ...) run(p, "random_scan_gibbs", key,
+                                              n_steps=n, s0=s0, ...)
+    chromatic_gibbs(p, key, s0, n, ...)   run(p, ChromaticGibbs(trim=...), key,
+                                              n_steps=n, s0=s0, ...)
+    tau_leap_lattice / tau_leap_dense     run(p, TauLeap(dt=dt), key, ...)
+    gibbs_first_hit(p, key, s0, e, n)     run(p, "random_scan_gibbs", key,
+                                              n_steps=n, s0=s0, first_hit=e)
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import glauber
-from repro.core.ising import DenseIsing, LatticeIsing, king_color_masks
+from repro.core import glauber, sampler_api
+from repro.core.ising import DenseIsing, LatticeIsing
+from repro.core.sampler_api import random_init  # noqa: F401  (re-export)
 
 
 class SampleRun(NamedTuple):
-    """Result of a sampling run.
+    """Result of a sampling run (legacy shape of sampler_api.RunResult).
 
     s: final state.
     samples: (n_samples, ...) recorded states (empty leading dim if none).
@@ -45,17 +49,10 @@ class SampleRun(NamedTuple):
     energies: jax.Array
 
 
-def random_init(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
-    """Uniform random ±1 initial state (the chip's post-reset state)."""
-    return (2 * jax.random.bernoulli(key, 0.5, shape) - 1).astype(dtype)
+def _legacy(res: sampler_api.RunResult) -> SampleRun:
+    return SampleRun(s=res.s, samples=res.samples, t=res.t, energies=res.energies)
 
 
-# ---------------------------------------------------------------------------
-# Synchronous baseline: random-scan Gibbs (dense problems)
-# ---------------------------------------------------------------------------
-
-
-@partial(jax.jit, static_argnames=("n_steps", "sample_every"))
 def gibbs_random_scan(
     problem: DenseIsing,
     key: jax.Array,
@@ -64,35 +61,16 @@ def gibbs_random_scan(
     lambda0: float = 1.0,
     sample_every: int = 0,
 ) -> SampleRun:
-    """Serial random-scan Gibbs; one site per step, dt = 1/lambda0 per step.
-
-    Maintains local fields incrementally: O(n) per step instead of O(n^2).
-    """
-    J, b = problem.J, problem.b
-    n = problem.n
-    h0 = problem.local_fields(s0)
-
-    def step(carry, key):
-        s, h = carry
-        k_site, k_flip = jax.random.split(key)
-        i = jax.random.randint(k_site, (), 0, n)
-        p_up = glauber.prob_up(h[i])
-        new_si = jnp.where(jax.random.uniform(k_flip) < p_up, 1.0, -1.0)
-        delta = new_si - s[i]
-        h = h + J[:, i] * delta  # J symmetric; diag is zero so h_i untouched
-        s = s.at[i].set(new_si)
-        return (s, h), s
-
-    keys = jax.random.split(key, n_steps)
-    (s, _), traj = jax.lax.scan(step, (s0, h0), keys)
-    t = jnp.asarray(n_steps / lambda0)
-    if sample_every > 0:
-        samples = traj[sample_every - 1 :: sample_every]
-        energies = jax.vmap(problem.energy)(samples)
-    else:
-        samples = traj[:0]
-        energies = jnp.zeros((0,), s.dtype)
-    return SampleRun(s=s, samples=samples, t=t, energies=energies)
+    """Deprecated: serial random-scan Gibbs; use sampler_api.run."""
+    res = sampler_api.run(
+        problem,
+        sampler_api.RandomScanGibbs(lambda0=lambda0),
+        key,
+        n_steps=n_steps,
+        s0=s0,
+        sample_every=sample_every,
+    )
+    return _legacy(res)
 
 
 def gibbs_first_hit(
@@ -103,44 +81,19 @@ def gibbs_first_hit(
     n_steps: int,
     lambda0: float = 1.0,
 ) -> tuple[jax.Array, jax.Array]:
-    """(first model time energy<=e_target, hit?) for the sync baseline."""
-    J = problem.J
-    n = problem.n
-    h0 = problem.local_fields(s0)
-    e0 = problem.energy(s0)
-
-    def step(carry, inp):
-        (s, h, e, t_hit, hit) = carry
-        step_idx, key = inp
-        k_site, k_flip = jax.random.split(key)
-        i = jax.random.randint(k_site, (), 0, n)
-        p_up = glauber.prob_up(h[i])
-        new_si = jnp.where(jax.random.uniform(k_flip) < p_up, 1.0, -1.0)
-        delta = new_si - s[i]
-        # dE for changing s_i by delta: delta * h_i (h includes b and full J row)
-        e = e + delta * h[i]
-        h = h + J[:, i] * delta
-        s = s.at[i].set(new_si)
-        t_now = (step_idx + 1.0) / lambda0
-        new_hit = (e <= e_target) & (~hit)
-        t_hit = jnp.where(new_hit, t_now, t_hit)
-        hit = hit | new_hit
-        return (s, h, e, t_hit, hit), None
-
-    keys = jax.random.split(key, n_steps)
-    idx = jnp.arange(n_steps, dtype=jnp.float32)
-    init_hit = e0 <= e_target
-    carry = (s0, h0, e0, jnp.where(init_hit, 0.0, jnp.inf), init_hit)
-    (s, h, e, t_hit, hit), _ = jax.lax.scan(step, carry, (idx, keys))
-    return t_hit, hit
+    """Deprecated: (first model time energy<=e_target, hit?) for the sync
+    baseline; use sampler_api.run(..., first_hit=e_target)."""
+    res = sampler_api.run(
+        problem,
+        sampler_api.RandomScanGibbs(lambda0=lambda0),
+        key,
+        n_steps=n_steps,
+        s0=s0,
+        first_hit=e_target,
+    )
+    return res.t_hit, res.hit
 
 
-# ---------------------------------------------------------------------------
-# Chromatic (graph-colored) Gibbs on the lattice — exact, parallel per color
-# ---------------------------------------------------------------------------
-
-
-@partial(jax.jit, static_argnames=("n_sweeps", "sample_every"))
 def chromatic_gibbs(
     problem: LatticeIsing,
     key: jax.Array,
@@ -150,54 +103,19 @@ def chromatic_gibbs(
     sample_every: int = 0,
     trim: Optional[glauber.SigmoidTrim] = None,
 ) -> SampleRun:
-    """Exact parallel Gibbs: 4 color phases per sweep on the king's graph."""
-    H, W = problem.shape
-    colors = king_color_masks(H, W)  # (4, H, W)
-    frozen = problem.frozen_mask
-
-    def sweep(s, key):
-        keys = jax.random.split(key, colors.shape[0])
-        for c in range(colors.shape[0]):
-            h = problem.local_fields(s)
-            p_up = glauber.prob_up(h, trim)
-            u = jax.random.uniform(keys[c], s.shape)
-            proposal = jnp.where(u < p_up, 1.0, -1.0).astype(s.dtype)
-            upd = colors[c] & (~frozen)
-            s = jnp.where(upd, proposal, s)
-        s = problem.apply_clamps(s)
-        return s, s
-
-    keys = jax.random.split(key, n_sweeps)
-    s0 = problem.apply_clamps(s0)
-    s, traj = jax.lax.scan(sweep, s0, keys)
-    # One sweep gives each neuron one update; at per-neuron rate lambda0 the
-    # equivalent model time per sweep is 1/lambda0.
-    t = jnp.asarray(n_sweeps / lambda0)
-    if sample_every > 0:
-        samples = traj[sample_every - 1 :: sample_every]
-        energies = jax.vmap(problem.energy)(samples)
-    else:
-        samples = traj[:0]
-        energies = jnp.zeros((0,), s.dtype)
-    return SampleRun(s=s, samples=samples, t=t, energies=energies)
+    """Deprecated: exact parallel Gibbs via the king's-graph 4-coloring;
+    use sampler_api.run."""
+    res = sampler_api.run(
+        problem,
+        sampler_api.ChromaticGibbs(lambda0=lambda0, trim=trim),
+        key,
+        n_steps=n_sweeps,
+        s0=s0,
+        sample_every=sample_every,
+    )
+    return _legacy(res)
 
 
-# ---------------------------------------------------------------------------
-# tau-leap asynchronous PASS model
-# ---------------------------------------------------------------------------
-
-
-def _tau_leap_flip(s, h, key, dt_lambda0, trim, frozen):
-    """One tau-leap step given fields h: flip w.p. 1-exp(-dt*lambda_i)."""
-    rate = glauber.flip_prob(h, s, trim)  # lambda_i / lambda0
-    p_flip = 1.0 - jnp.exp(-dt_lambda0 * rate)
-    if frozen is not None:
-        p_flip = jnp.where(frozen, 0.0, p_flip)
-    flips = jax.random.uniform(key, s.shape) < p_flip
-    return jnp.where(flips, -s, s)
-
-
-@partial(jax.jit, static_argnames=("n_steps", "sample_every"))
 def tau_leap_lattice(
     problem: LatticeIsing,
     key: jax.Array,
@@ -208,34 +126,19 @@ def tau_leap_lattice(
     sample_every: int = 0,
     trim: Optional[glauber.SigmoidTrim] = None,
 ) -> SampleRun:
-    """PASS async dynamics on the chip lattice, tau-leap integration.
-
-    `dt` is in units of 1/lambda0 (i.e. dt_model_seconds = dt / lambda0).
-    Small dt*lambda0 -> exact CTMC; large dt -> 'stale neighbor' distortion,
-    the TPU analogue of the chip's circuit-delay skew (Fig. S9).
-    """
-    frozen = problem.frozen_mask
-
-    def step(s, key):
-        h = problem.local_fields(s)
-        s = _tau_leap_flip(s, h, key, dt, trim, frozen)
-        s = problem.apply_clamps(s)
-        return s, s
-
-    keys = jax.random.split(key, n_steps)
-    s0 = problem.apply_clamps(s0)
-    s, traj = jax.lax.scan(step, s0, keys)
-    t = jnp.asarray(n_steps * dt / lambda0)
-    if sample_every > 0:
-        samples = traj[sample_every - 1 :: sample_every]
-        energies = jax.vmap(problem.energy)(samples)
-    else:
-        samples = traj[:0]
-        energies = jnp.zeros((0,), s.dtype)
-    return SampleRun(s=s, samples=samples, t=t, energies=energies)
+    """Deprecated: PASS async dynamics on the chip lattice; use
+    sampler_api.run with a TauLeap kernel."""
+    res = sampler_api.run(
+        problem,
+        sampler_api.TauLeap(dt=dt, lambda0=lambda0, trim=trim),
+        key,
+        n_steps=n_steps,
+        s0=s0,
+        sample_every=sample_every,
+    )
+    return _legacy(res)
 
 
-@partial(jax.jit, static_argnames=("n_steps", "sample_every"))
 def tau_leap_dense(
     problem: DenseIsing,
     key: jax.Array,
@@ -245,20 +148,15 @@ def tau_leap_dense(
     lambda0: float = 1.0,
     sample_every: int = 0,
 ) -> SampleRun:
-    """PASS async dynamics with a dense coupling matrix (SK, MaxCut)."""
-
-    def step(s, key):
-        h = problem.local_fields(s)
-        s = _tau_leap_flip(s, h, key, dt, None, None)
-        return s, s
-
-    keys = jax.random.split(key, n_steps)
-    s, traj = jax.lax.scan(step, s0, keys)
-    t = jnp.asarray(n_steps * dt / lambda0)
-    if sample_every > 0:
-        samples = traj[sample_every - 1 :: sample_every]
-        energies = jax.vmap(problem.energy)(samples)
-    else:
-        samples = traj[:0]
-        energies = jnp.zeros((0,), s.dtype)
-    return SampleRun(s=s, samples=samples, t=t, energies=energies)
+    """Deprecated: PASS async dynamics with a dense coupling matrix; use
+    sampler_api.run with a TauLeap kernel (backend="pallas" for the fused
+    MXU path)."""
+    res = sampler_api.run(
+        problem,
+        sampler_api.TauLeap(dt=dt, lambda0=lambda0),
+        key,
+        n_steps=n_steps,
+        s0=s0,
+        sample_every=sample_every,
+    )
+    return _legacy(res)

@@ -160,11 +160,31 @@ def _multipliers(comps, entry: str):
     return mult
 
 
+def _split_top(s: str) -> list:
+    """Split an operand list on commas OUTSIDE brackets/braces: shape tokens
+    like f32[8,64]{1,0} contain commas, so a naive split(",") shreds them
+    (and loses every operand name but the last)."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
 def _operand_names(inst: Instruction, op: str) -> list:
     m = re.search(r"\(([^)]*)\)", inst.line[inst.line.index(op + "(") :])
     if not m:
         return []
-    return [o.strip().split(" ")[-1] for o in m.group(1).split(",") if o.strip()]
+    return [o.strip().split(" ")[-1] for o in _split_top(m.group(1)) if o.strip()]
 
 
 def _operand_bytes(operands, shape_of, idx: int) -> float:
@@ -185,10 +205,7 @@ def _fusion_callees(inst: Instruction) -> list:
 def _dot_flops(inst: Instruction, shape_of) -> float:
     """2 x prod(result dims) x prod(contracting dims of lhs)."""
     res_elems, _ = _shape_elems_bytes(inst.result_type)
-    m = re.search(r"\(([^)]*)\)", inst.line[inst.line.index(inst.op + "(") :])
-    if not m:
-        return 0.0
-    operands = [o.strip().split(" ")[-1] for o in m.group(1).split(",")]
+    operands = _operand_names(inst, inst.op)
     lhs = operands[0] if operands else None
     lhs_type = shape_of.get(lhs, "")
     dims_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.line)

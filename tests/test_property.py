@@ -4,6 +4,9 @@ import dataclasses
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev dependency; see requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import glauber, ising, problems, samplers

@@ -1,0 +1,207 @@
+"""The unified sampler API: kernel registry, the run() driver (schedules,
+striding, multi-chain batching, first-hit), and Pallas backend dispatch."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ising, problems, sampler_api, samplers
+from repro.core.sampler_api import (
+    ChromaticGibbs,
+    RandomScanGibbs,
+    TauLeap,
+    constant,
+    geometric,
+    linear,
+    resolve_schedule,
+    run,
+)
+
+
+def _dense_problem(n=12, seed=0, scale=0.6):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(0, scale, (n, n))
+    J = np.triu(A, 1)
+    J = J + J.T
+    b = rng.normal(0, scale / 2, n)
+    return ising.DenseIsing(J=jnp.asarray(J, jnp.float32), b=jnp.asarray(b, jnp.float32))
+
+
+def _grid_exact_problem(n=48, seed=0):
+    """Dense problem whose J sits exactly on the int8 grid, so the Pallas
+    path's quantization is lossless and ref/pallas are comparable."""
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(-126, 127, (n, n))
+    codes = np.triu(codes, 1)
+    codes = codes + codes.T
+    codes[0, 1] = codes[1, 0] = 127  # pin max-abs: quantize round-trips exactly
+    J = jnp.asarray(codes / 127.0, jnp.float32)
+    b = jnp.asarray(rng.normal(0, 0.2, n), jnp.float32)
+    return ising.DenseIsing(J=J, b=b)
+
+
+def test_registry_has_all_kernels():
+    names = sampler_api.kernel_names()
+    for want in ("random_scan_gibbs", "chromatic_gibbs", "tau_leap", "ctmc"):
+        assert want in names, names
+    assert isinstance(sampler_api.get_kernel("tau_leap", dt=0.5), TauLeap)
+    with pytest.raises(KeyError):
+        sampler_api.get_kernel("metropolis_lights_out")
+
+
+@pytest.mark.parametrize("name", ["random_scan_gibbs", "tau_leap", "ctmc"])
+def test_dense_kernels_run_through_driver(name):
+    prob = _dense_problem()
+    res = run(prob, name, jax.random.key(0), n_steps=64, sample_every=8)
+    assert res.s.shape == (prob.n,)
+    assert res.samples.shape == (8, prob.n)
+    assert res.times.shape == (8,)
+    assert res.energies.shape == (8,)
+    assert set(np.unique(res.samples)).issubset({-1.0, 1.0})
+    assert float(res.t) > 0.0
+    # recorded model times are nondecreasing and end at/below the final time
+    t = np.asarray(res.times)
+    assert np.all(np.diff(t) >= 0) and t[-1] <= float(res.t) + 1e-6
+
+
+@pytest.mark.parametrize("name", ["chromatic_gibbs", "tau_leap"])
+def test_lattice_kernels_run_through_driver(name):
+    lat = problems.cal_problem(coupling=0.5)
+    res = run(lat, name, jax.random.key(0), n_steps=20, sample_every=5)
+    assert res.s.shape == lat.shape
+    assert res.samples.shape == (4,) + lat.shape
+    # clamp/dead masks respected at every observation
+    frozen = np.asarray(lat.frozen_mask)
+    if frozen.any():
+        want = np.asarray(lat.apply_clamps(res.s))[frozen]
+        np.testing.assert_array_equal(np.asarray(res.s)[frozen], want)
+
+
+def test_pallas_backend_matches_ref_dense_tau_leap():
+    """Acceptance: backend='pallas' (interpret mode on CPU) must match
+    backend='ref' for dense tau-leap. On a grid-exact problem the int8
+    field matmul is exact, so the two trajectories agree everywhere except
+    (measure-zero) uniforms within float-rounding of a flip threshold."""
+    prob = _grid_exact_problem()
+    s0 = sampler_api.random_init(jax.random.key(1), (prob.n,))
+    kw = dict(n_steps=200, s0=s0, sample_every=10)
+    r_ref = run(prob, TauLeap(dt=0.25), jax.random.key(2), backend="ref", **kw)
+    r_pal = run(prob, TauLeap(dt=0.25), jax.random.key(2), backend="pallas", **kw)
+    assert float(np.mean(np.asarray(r_ref.s) == np.asarray(r_pal.s))) > 0.99
+    assert float(np.mean(np.asarray(r_ref.samples) == np.asarray(r_pal.samples))) > 0.99
+    np.testing.assert_allclose(
+        np.asarray(r_ref.energies), np.asarray(r_pal.energies), rtol=1e-3, atol=1e-2
+    )
+
+
+def test_auto_backend_is_ref_off_tpu():
+    prob = _dense_problem()
+    s0 = sampler_api.random_init(jax.random.key(1), (prob.n,))
+    r_auto = run(prob, TauLeap(dt=0.3), jax.random.key(3), n_steps=50, s0=s0, backend="auto")
+    r_ref = run(prob, TauLeap(dt=0.3), jax.random.key(3), n_steps=50, s0=s0, backend="ref")
+    np.testing.assert_array_equal(np.asarray(r_auto.s), np.asarray(r_ref.s))
+
+
+def test_multi_chain_with_schedule():
+    """Acceptance: n_chains > 1 under a geometric annealing schedule."""
+    prob = problems.random_maxcut(24, seed=3)
+    n_chains, n_steps = 6, 400
+    res = run(
+        prob,
+        TauLeap(dt=0.25),
+        jax.random.key(0),
+        n_steps=n_steps,
+        n_chains=n_chains,
+        schedule=geometric(0.3, 2.5),
+        sample_every=40,
+    )
+    assert res.s.shape == (n_chains, prob.n)
+    assert res.samples.shape == (n_chains, n_steps // 40, prob.n)
+    assert res.energies.shape == (n_chains, n_steps // 40)
+    # chains are independent (per-chain keys): not all identical
+    assert len(np.unique(np.asarray(res.s), axis=0)) > 1
+    # annealing toward beta=2.5 lowers energy vs the hot start
+    e = np.asarray(res.energies)
+    assert e[:, -1].mean() < e[:, 0].mean()
+
+
+def test_per_chain_schedules():
+    """(n_chains, n_steps) schedules: the replica-exchange layout. The cold
+    chain should end lower in energy than the hot chain on average."""
+    prob = problems.sk_instance(16, seed=7)
+    betas = jnp.stack(
+        [jnp.full((300,), 0.1), jnp.full((300,), 3.0)]
+    )
+    res = run(
+        prob, TauLeap(dt=0.2), jax.random.key(4),
+        n_steps=300, n_chains=2, schedule=betas, sample_every=30,
+    )
+    e = np.asarray(res.energies)
+    assert e[1, -5:].mean() < e[0, -5:].mean()
+    with pytest.raises(ValueError):
+        run(prob, TauLeap(dt=0.2), jax.random.key(4), n_steps=300, n_chains=3, schedule=betas)
+    with pytest.raises(ValueError):
+        run(prob, TauLeap(dt=0.2), jax.random.key(4), n_steps=300, schedule=betas)
+
+
+def test_first_hit_multi_chain():
+    prob = problems.random_maxcut(16, seed=1)
+    ref = run(prob, "random_scan_gibbs", jax.random.key(9), n_steps=4000, sample_every=50)
+    e_target = float(np.median(np.asarray(ref.energies)))  # easy target
+    res = run(
+        prob, "ctmc", jax.random.key(5), n_steps=500, n_chains=4, first_hit=e_target
+    )
+    assert res.t_hit.shape == (4,) and res.hit.shape == (4,)
+    hit = np.asarray(res.hit)
+    t_hit = np.asarray(res.t_hit)
+    assert np.all(np.isfinite(t_hit[hit]))
+    assert np.all(np.isinf(t_hit[~hit]))
+    assert hit.any()  # median-energy target is reachable in 500 events
+
+
+def test_schedule_resolution_forms():
+    assert resolve_schedule(None, 5).shape == (5,)
+    np.testing.assert_allclose(resolve_schedule(2.0, 3), [2.0, 2.0, 2.0])
+    np.testing.assert_allclose(resolve_schedule(constant(0.5), 2), [0.5, 0.5])
+    lin = resolve_schedule(linear(0.0, 1.0), 5)
+    np.testing.assert_allclose(lin, np.linspace(0, 1, 5), rtol=1e-6)
+    geo = np.asarray(resolve_schedule(geometric(0.1, 1.0), 4))
+    np.testing.assert_allclose(geo[0], 0.1, rtol=1e-5)
+    np.testing.assert_allclose(geo[-1], 1.0, rtol=1e-5)
+    with pytest.raises(ValueError):
+        resolve_schedule(jnp.ones((7,)), 5)
+    with pytest.raises(ValueError):
+        sampler_api._resolve_backend("cuda")
+
+
+def test_legacy_wrappers_are_thin():
+    """The deprecated samplers.* entry points must agree bit-for-bit with
+    the driver they wrap (beta=1, same per-step key splitting)."""
+    prob = _dense_problem(n=8, seed=4)
+    s0 = sampler_api.random_init(jax.random.key(0), (prob.n,))
+    old = samplers.gibbs_random_scan(prob, jax.random.key(1), s0, n_steps=200, sample_every=10)
+    new = run(
+        prob, RandomScanGibbs(), jax.random.key(1), n_steps=200, s0=s0, sample_every=10
+    )
+    np.testing.assert_array_equal(np.asarray(old.s), np.asarray(new.s))
+    np.testing.assert_array_equal(np.asarray(old.samples), np.asarray(new.samples))
+
+    lat = problems.cal_problem(coupling=0.5)
+    sl0 = sampler_api.random_init(jax.random.key(2), lat.shape)
+    old = samplers.chromatic_gibbs(lat, jax.random.key(3), sl0, n_sweeps=15, sample_every=3)
+    new = run(lat, ChromaticGibbs(), jax.random.key(3), n_steps=15, s0=sl0, sample_every=3)
+    np.testing.assert_array_equal(np.asarray(old.samples), np.asarray(new.samples))
+
+
+def test_remainder_steps_after_last_observation():
+    """n_steps not divisible by sample_every: the tail still advances the
+    chain (old traj[k-1::k] semantics)."""
+    prob = _dense_problem(n=6, seed=2)
+    s0 = sampler_api.random_init(jax.random.key(0), (prob.n,))
+    full = run(prob, RandomScanGibbs(), jax.random.key(1), n_steps=17, s0=s0)
+    strided = run(
+        prob, RandomScanGibbs(), jax.random.key(1), n_steps=17, s0=s0, sample_every=5
+    )
+    assert strided.samples.shape == (3, prob.n)
+    np.testing.assert_array_equal(np.asarray(full.s), np.asarray(strided.s))
+    np.testing.assert_allclose(float(strided.t), float(full.t), rtol=1e-6)
