@@ -1,0 +1,16 @@
+"""Benchmark subsystem: problem-zoo suites, runner, and JSON reporting.
+
+    PYTHONPATH=src python -m benchmarks.run --smoke        # CI smoke suite
+    PYTHONPATH=src python -m benchmarks.run --suite full   # nightly suite
+    PYTHONPATH=src python -m benchmarks.run --figures      # paper figures
+
+Modules:
+  suites  — SuiteEntry grid definitions (problems x kernels x backends)
+            with deterministic per-entry seeding.
+  runner  — executes one entry through `sampler_api.run(..., timeit=True)`,
+            measuring throughput, wall/compile time, first-hit TTS against
+            the zoo reference energy, and the energy-gap trajectory.
+  report  — schema-versioned BENCH_<tag>.json writer + baseline regression
+            comparison (gates CI).
+  figures — the paper-figure reproductions (Fig 3/4/5, kernels, roofline).
+"""

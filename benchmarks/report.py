@@ -1,0 +1,185 @@
+"""Schema-versioned benchmark reports and baseline regression gating.
+
+Report files are named `BENCH_<tag>.json` and live at the repo root (the
+benchmark trajectory of the project); `benchmarks/baseline.json` is the
+committed throughput baseline CI compares against.
+
+Schema (version 2):
+
+    {
+      "schema_version": 2,
+      "tag": "...", "suite": "smoke", "created_unix": 1e9,
+      "host": {"platform": ..., "python": ..., "jax": ..., "backend": ...},
+      "records": [ {<runner.run_entry record>}, ... ]
+    }
+
+The baseline holds the same header plus per-id throughput numbers only.
+Regression policy: CI fails when the *geometric mean* over per-record
+`chain_steps_per_s` ratios (new/baseline) drops below `1 - threshold`
+(default 30%). Per-record ratios are reported for diagnosis but do not gate
+individually — single records are too noisy on shared CI runners.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import sys
+import time
+
+import jax
+
+SCHEMA_VERSION = 2
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "baseline.json")
+DEFAULT_THRESHOLD = 0.30
+
+
+def host_info() -> dict:
+    return {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": sys.version.split()[0],
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        # True when produced by a GitHub Actions runner: only then are the
+        # absolute throughput numbers comparable to later CI runs, and only
+        # then does the regression gate fail hard (see compare_to_baseline).
+        "ci": bool(os.environ.get("GITHUB_ACTIONS")),
+    }
+
+
+def make_report(tag: str, suite: str, records: list[dict]) -> dict:
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "tag": tag,
+        "suite": suite,
+        "created_unix": time.time(),
+        "created": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "host": host_info(),
+        "records": records,
+    }
+
+
+def report_path(tag: str, out_dir: str = REPO_ROOT) -> str:
+    return os.path.join(out_dir, f"BENCH_{tag}.json")
+
+
+def write_report(report: dict, out_dir: str = REPO_ROOT) -> str:
+    path = report_path(report["tag"], out_dir)
+    with open(path, "w") as f:
+        # allow_nan=False: reports must be strict RFC-8259 JSON (no
+        # Infinity/NaN tokens) so jq/JS consumers of the CI artifact parse.
+        json.dump(report, f, indent=1, sort_keys=True, allow_nan=False)
+        f.write("\n")
+    return path
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        report = json.load(f)
+    version = report.get("schema_version")
+    if version != SCHEMA_VERSION:
+        raise ValueError(
+            f"{path}: schema_version {version!r} != supported {SCHEMA_VERSION} "
+            "(refresh with `python -m benchmarks.run --smoke --update-baseline`)"
+        )
+    return report
+
+
+def to_baseline(report: dict) -> dict:
+    """Slim a full report down to the committed throughput baseline."""
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "tag": report["tag"],
+        "suite": report["suite"],
+        "created": report.get("created"),
+        "host": report["host"],
+        "throughput": {
+            r["id"]: {
+                "chain_steps_per_s": r["chain_steps_per_s"],
+                "steps_per_s": r["steps_per_s"],
+                "wall_s": r["wall_s"],
+            }
+            for r in report["records"]
+        },
+    }
+
+
+def compare_to_baseline(
+    report: dict, baseline: dict, threshold: float = DEFAULT_THRESHOLD
+) -> tuple[bool, dict]:
+    """Gate `report` against `baseline` throughput.
+
+    Returns (ok, summary). summary["ratios"] maps record id ->
+    new/baseline chain_steps_per_s; summary["geomean_ratio"] is the gate
+    quantity; ids present on only one side are listed, not gated. A report
+    with NO overlapping ids fails outright — an id-scheme change must not
+    turn the gate vacuous. When the baseline was not produced in CI
+    (host.ci false — e.g. a dev machine), absolute throughput is not
+    comparable to CI runners: a regression is reported as advisory
+    (summary["advisory"] = True) and ok stays True.
+    """
+    base = baseline["throughput"]
+    ratios, missing, new_ids = {}, [], []
+    for rec in report["records"]:
+        rid = rec["id"]
+        if rid in base:
+            ratios[rid] = rec["chain_steps_per_s"] / max(base[rid]["chain_steps_per_s"], 1e-12)
+        else:
+            new_ids.append(rid)
+    report_ids = {r["id"] for r in report["records"]}
+    missing = sorted(set(base) - report_ids)
+
+    if ratios:
+        import numpy as np
+
+        geomean = float(np.exp(np.mean(np.log(np.maximum(list(ratios.values()), 1e-12)))))
+        passed = geomean >= 1.0 - threshold
+        error = None
+    else:
+        geomean = None
+        passed = False
+        error = ("no overlapping record ids between report and baseline — "
+                 "the gate would be vacuous; refresh the baseline")
+    advisory = (not passed) and error is None and not baseline["host"].get("ci", False)
+    summary = {
+        "geomean_ratio": geomean,
+        "threshold": threshold,
+        "ok": passed or advisory,
+        "passed": passed,
+        "advisory": advisory,
+        "error": error,
+        "ratios": ratios,
+        "new_ids": new_ids,
+        "missing_ids": missing,
+        "worst": min(ratios, key=ratios.get) if ratios else None,
+    }
+    return summary["ok"], summary
+
+
+def format_comparison(summary: dict) -> str:
+    lines = []
+    for rid, ratio in sorted(summary["ratios"].items(), key=lambda kv: kv[1]):
+        flag = " <-- slow" if ratio < 1.0 - summary["threshold"] else ""
+        lines.append(f"  {ratio:6.2f}x  {rid}{flag}")
+    for rid in summary["new_ids"]:
+        lines.append(f"     new  {rid}")
+    for rid in summary["missing_ids"]:
+        lines.append(f" missing  {rid}")
+    if summary["error"]:
+        lines.append(f"ERROR: {summary['error']}")
+    else:
+        if summary["passed"]:
+            verdict = "OK"
+        elif summary["advisory"]:
+            verdict = ("REGRESSION vs a non-CI baseline — ADVISORY ONLY "
+                       "(absolute throughput not comparable across machines; "
+                       "refresh the baseline from a CI artifact to arm the gate)")
+        else:
+            verdict = "REGRESSION"
+        lines.append(
+            f"throughput geomean ratio {summary['geomean_ratio']:.3f} "
+            f"(gate: >= {1.0 - summary['threshold']:.2f}) -> {verdict}"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,125 @@
+"""Execute suite entries through the unified sampling driver.
+
+One `run_entry` call produces a flat JSON-ready record: identity fields from
+the `SuiteEntry`, the zoo reference energy, throughput (`timeit=True` wall
+clock, separated into compile and steady-state), first-hit time-to-solution
+against the reference target, and a downsampled best-so-far energy-gap
+trajectory in model time.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import problems, sampler_api
+from benchmarks.suites import SuiteEntry
+
+# Max points kept in each record's energy-gap trajectory.
+TRAJECTORY_POINTS = 40
+
+
+def _best_so_far_gap(times: np.ndarray, energies: np.ndarray, ref: float):
+    """[[model_time, best_energy_so_far - ref], ...] across all chains.
+
+    times/energies: (n_chains, n_samples). Observations are pooled in model
+    time; the gap is the running best over everything observed so far.
+    """
+    if energies.size == 0:
+        return []
+    t = times.reshape(-1)
+    e = energies.reshape(-1)
+    order = np.argsort(t, kind="stable")
+    t, e = t[order], e[order]
+    best = np.minimum.accumulate(e)
+    if len(t) > TRAJECTORY_POINTS:
+        idx = np.linspace(0, len(t) - 1, TRAJECTORY_POINTS).round().astype(int)
+        t, best = t[idx], best[idx]
+    return [[float(a), float(b - ref)] for a, b in zip(t, best)]
+
+
+def run_entry(entry: SuiteEntry, zoo: Optional[problems.ZooProblem] = None) -> dict:
+    """Run one benchmark entry and return its record dict.
+
+    `zoo` lets the caller reuse an instantiated problem across the entries
+    that share it (generation includes reference-energy estimation).
+    """
+    if zoo is None:
+        zoo = entry.make_problem()
+    target = zoo.target_energy(entry.rel_gap)
+
+    res = sampler_api.run(
+        zoo.problem,
+        entry.make_kernel(),
+        entry.key(),
+        n_steps=entry.n_steps,
+        n_chains=entry.n_chains,
+        sample_every=entry.sample_every,
+        schedule=entry.resolve_schedule(),
+        first_hit=target,
+        backend=entry.backend,
+        timeit=True,
+    )
+
+    # Normalize to a leading chain axis for uniform reduction.
+    lead = lambda x: np.asarray(x)[None] if entry.n_chains == 1 else np.asarray(x)
+    energies = lead(res.energies)
+    times = lead(res.times)
+    hit = lead(res.hit)
+    t_hit = lead(res.t_hit)
+    final_e = lead(zoo.problem.energy(res.s))
+
+    best_energy = float(min(energies.min(), final_e.min())) if energies.size else float(final_e.min())
+    hits = np.asarray(hit, bool)
+    # None (JSON null), not inf: reports must stay strict RFC-8259 JSON.
+    tts = float(np.median(t_hit[hits])) if hits.any() else None
+
+    timing = res.timing
+    return {
+        "id": entry.id,
+        "problem": entry.problem,
+        "instance": zoo.instance,
+        "size": entry.size,
+        "seed": entry.seed,
+        "n_spins": zoo.n,
+        "kernel": entry.kernel,
+        "kernel_args": dict(entry.kernel_args),
+        "backend": entry.backend,
+        "schedule": list(entry.schedule) if entry.schedule else None,
+        "n_steps": entry.n_steps,
+        "n_chains": entry.n_chains,
+        "sample_every": entry.sample_every,
+        "ref_energy": zoo.ref_energy,
+        "ref_kind": zoo.ref_kind,
+        "rel_gap": entry.rel_gap,
+        "target_energy": target,
+        # throughput
+        "compile_s": timing.compile_s,
+        "wall_s": timing.wall_s,
+        "steps_per_s": timing.steps_per_s,
+        "chain_steps_per_s": timing.chain_steps_per_s,
+        # solution quality
+        "best_energy": best_energy,
+        "final_gap": best_energy - zoo.ref_energy,
+        "hit_rate": float(hits.mean()),
+        "tts_model_time": tts,
+        "gap_trajectory": _best_so_far_gap(times, energies, zoo.ref_energy),
+    }
+
+
+def run_suite(entries: list[SuiteEntry], log=print) -> list[dict]:
+    """Run a whole suite, reusing zoo instances across same-problem entries."""
+    cache: dict[tuple, problems.ZooProblem] = {}
+    records = []
+    for i, entry in enumerate(entries):
+        pkey = (entry.problem, entry.size, entry.seed)
+        if pkey not in cache:
+            cache[pkey] = entry.make_problem()
+        rec = run_entry(entry, cache[pkey])
+        records.append(rec)
+        log(
+            f"[{i + 1}/{len(entries)}] {rec['id']}: "
+            f"{rec['chain_steps_per_s']:.0f} chain-steps/s, "
+            f"gap={rec['final_gap']:.3f}, hit_rate={rec['hit_rate']:.2f}"
+        )
+    return records

@@ -1,0 +1,150 @@
+"""Benchmark suite definitions: problems x kernels x backends grids.
+
+A suite is a list of `SuiteEntry` — one measured sampler configuration on
+one zoo instance. Entries are deterministic: the PRNG key is derived from a
+stable hash of the entry id, so re-running a suite reproduces trajectories
+exactly (modulo wall-clock).
+
+Kernel/problem compatibility (see `repro.core.sampler_api`):
+
+    random_scan_gibbs, ctmc  — dense problems only
+    chromatic_gibbs          — lattice problems only
+    tau_leap                 — both; dense also under backend="pallas"
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Optional
+
+import jax
+
+from repro.core import problems, sampler_api
+
+DENSE_KERNELS = ("random_scan_gibbs", "ctmc", "tau_leap")
+LATTICE_KERNELS = ("chromatic_gibbs", "tau_leap")
+
+
+def stable_seed(s: str) -> int:
+    """Platform/run-stable 32-bit seed from a string id."""
+    return zlib.crc32(s.encode("utf-8"))
+
+
+@dataclasses.dataclass(frozen=True)
+class SuiteEntry:
+    """One benchmark point: a zoo problem under one kernel/backend config.
+
+    schedule is a plain tuple — ("constant", b) | ("linear", b0, b1) |
+    ("geometric", b0, b1) | None — kept JSON-serializable; `resolve_schedule`
+    turns it into a sampler_api Schedule.
+    """
+
+    problem: str
+    size: int
+    seed: int
+    kernel: str
+    backend: str = "ref"  # "ref" | "pallas"
+    n_steps: int = 500
+    n_chains: int = 4
+    sample_every: int = 20
+    schedule: Optional[tuple] = ("geometric", 0.5, 2.5)
+    kernel_args: tuple = ()  # (("dt", 0.25),) — hashable dict items
+    rel_gap: float = 0.05  # first-hit target: ref + rel_gap * |ref|
+
+    @property
+    def id(self) -> str:
+        args = ",".join(f"{k}={v}" for k, v in self.kernel_args)
+        kern = f"{self.kernel}({args})" if args else self.kernel
+        return f"{self.problem}-n{self.size}-s{self.seed}/{kern}/{self.backend}"
+
+    def key(self) -> jax.Array:
+        return jax.random.key(stable_seed(self.id))
+
+    def make_kernel(self) -> sampler_api.SamplerKernel:
+        return sampler_api.get_kernel(self.kernel, **dict(self.kernel_args))
+
+    def make_problem(self) -> problems.ZooProblem:
+        return problems.get_problem(self.problem, self.size, self.seed)
+
+    def resolve_schedule(self) -> sampler_api.ScheduleLike:
+        if self.schedule is None:
+            return None
+        name, *args = self.schedule
+        return {
+            "constant": sampler_api.constant,
+            "linear": sampler_api.linear,
+            "geometric": sampler_api.geometric,
+        }[name](*args)
+
+
+def _grid(problem_specs, *, steps_dense, steps_lattice, n_chains, sample_every,
+          pallas: bool, dt: float = 0.25) -> list[SuiteEntry]:
+    """Cross problems with their compatible kernels (and backends)."""
+    entries = []
+    for name, size, seed in problem_specs:
+        lattice = problems.problem_kind(name) == "lattice"
+        kernels = LATTICE_KERNELS if lattice else DENSE_KERNELS
+        n_steps = steps_lattice if lattice else steps_dense
+        for kernel in kernels:
+            kernel_args = (("dt", dt),) if kernel == "tau_leap" else ()
+            entries.append(
+                SuiteEntry(
+                    problem=name, size=size, seed=seed, kernel=kernel,
+                    backend="ref", n_steps=n_steps, n_chains=n_chains,
+                    sample_every=sample_every, kernel_args=kernel_args,
+                )
+            )
+            if pallas and kernel == "tau_leap" and not lattice:
+                entries.append(
+                    SuiteEntry(
+                        problem=name, size=size, seed=seed, kernel=kernel,
+                        backend="pallas", n_steps=max(32, n_steps // 8),
+                        n_chains=1, sample_every=sample_every,
+                        kernel_args=kernel_args,
+                    )
+                )
+    return entries
+
+
+def smoke_suite() -> list[SuiteEntry]:
+    """Tiny CI suite: every zoo family x every compatible kernel, sizes and
+    step counts chosen to finish in a few CPU minutes (compiles dominate).
+    Pallas entries run in interpret mode off-TPU — correctness/trend signal,
+    not kernel speed — and are shortened accordingly."""
+    specs = [
+        ("maxcut", 32, 0),
+        ("sk", 32, 0),
+        ("factorization", 143, 0),
+        ("ferromagnet", 8, 0),
+        ("boltzmann_ml", 10, 0),
+    ]
+    return _grid(
+        specs, steps_dense=400, steps_lattice=120, n_chains=4,
+        sample_every=20, pallas=True,
+    )
+
+
+def full_suite() -> list[SuiteEntry]:
+    """Nightly suite: larger instances, more chains, longer runs, two seeds
+    for the disordered families."""
+    specs = [
+        ("maxcut", 64, 0), ("maxcut", 128, 1),
+        ("sk", 64, 0), ("sk", 128, 1),
+        ("factorization", 143, 0), ("factorization", 899, 0),
+        ("ferromagnet", 16, 0),
+        ("cal", 16, 0),
+        ("boltzmann_ml", 16, 0),
+    ]
+    return _grid(
+        specs, steps_dense=4000, steps_lattice=800, n_chains=16,
+        sample_every=50, pallas=True,
+    )
+
+
+SUITES = {"smoke": smoke_suite, "full": full_suite}
+
+
+def get_suite(name: str) -> list[SuiteEntry]:
+    if name not in SUITES:
+        raise KeyError(f"unknown suite {name!r}; have {sorted(SUITES)}")
+    return SUITES[name]()

@@ -1,4 +1,18 @@
-"""Problem generators: MaxCut, Sherrington-Kirkpatrick, CAL-letters lattice.
+"""Problem zoo: registered-by-name generators with reference energies.
+
+Every generator is registered under a short name (`register_problem`) and
+returns a `ZooProblem` — the problem instance plus a known/estimated
+ground-state energy for time-to-solution accounting, mirroring the kernel
+registry in `sampler_api`. The zoo covers the paper's three workload
+families:
+
+  combinatorial optimization — "maxcut" (Gset-style random graphs),
+      "sk" (Sherrington-Kirkpatrick spin glass),
+      "factorization" (integer factorization as a planted Ising instance);
+  neural simulation          — "ferromagnet" (uniform king's-move lattice),
+      "cal" (the Fig. 3F CAL-letters lattice);
+  machine learning           — "boltzmann_ml" (Hebbian lattice Boltzmann
+      machine over the synthetic digit set).
 
 Mapping conventions (for E(s) = sum_{i<j} J_ij s_i s_j + b.s, p ∝ e^{-E}):
 
@@ -6,13 +20,37 @@ Mapping conventions (for E(s) = sum_{i<j} J_ij s_i s_j + b.s, p ∝ e^{-E}):
     Maximizing the cut == minimizing sum w_ij s_i s_j == ground state of
     J = +w (antiferromagnetic), b = 0.
   * SK spin glass: J_ij ~ N(0, 1)/sqrt(n), b = 0.
+  * Factorization of an odd semiprime N = p*q: minimize (N - p(x) q(y))^2
+    over odd binary factors, quadratized with Rosenberg product variables
+    z_ij = x_i y_j; the planted factorization is the exact ground state.
+
+Reference-energy kinds:
+
+  "exact"     — provably the ground-state energy (ferromagnet, cal; maxcut/sk
+                at n <= EXACT_ENUM_MAX via exhaustive enumeration).
+  "planted"   — energy of a constructed solution known to be optimal
+                (factorization: H >= planted energy for every state).
+  "estimated" — best of multi-restart greedy descent (deterministic in the
+                instance seed); samplers may occasionally beat it, so gaps
+                computed against it can go slightly negative.
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Union
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.ising import DenseIsing, LatticeIsing, lattice_from_pairs, KING_OFFSETS
+from repro.core.ising import (
+    DenseIsing,
+    LatticeIsing,
+    lattice_from_pairs,
+    KING_OFFSETS,
+)
+
+# Largest n for which exact enumeration (2^n states) is used for references.
+EXACT_ENUM_MAX = 16
 
 
 def random_maxcut(n: int, seed: int, density: float = 1.0, weights: str = "unit") -> DenseIsing:
@@ -96,3 +134,370 @@ def cal_problem(coupling: float = 1.0) -> LatticeIsing:
                     same = t[y, x] == t[yy, xx]
                     pairs[((y, x), (yy, xx))] = -coupling if same else coupling
     return lattice_from_pairs(H, W, pairs)
+
+
+# ---------------------------------------------------------------------------
+# Reference-energy machinery
+# ---------------------------------------------------------------------------
+
+
+def exact_ground_energy(problem: DenseIsing) -> float:
+    """Exhaustive ground-state energy for small dense problems (n <= 20)."""
+    n = problem.n
+    assert n <= 20, "exhaustive ground energy limited to 20 spins"
+    J = np.asarray(problem.J, np.float64)
+    b = np.asarray(problem.b, np.float64)
+    codes = np.arange(2**n, dtype=np.int64)
+    bits = (codes[:, None] >> np.arange(n)[None, :]) & 1
+    states = (2 * bits - 1).astype(np.float64)
+    E = 0.5 * np.einsum("si,ij,sj->s", states, J, states) + states @ b
+    return float(E.min())
+
+
+def greedy_descent_dense(
+    J: np.ndarray, b: np.ndarray, s0: np.ndarray, max_sweeps: int = 64
+) -> tuple[np.ndarray, float]:
+    """Sequential iterated-conditional-modes descent to a local minimum.
+
+    Each site is set to s_i = -sign(h_i) in order; a sweep with no change is
+    a 1-flip-stable local minimum. Deterministic. Returns (state, energy).
+    """
+    s = s0.astype(np.float64).copy()
+    n = len(s)
+    for _ in range(max_sweeps):
+        changed = False
+        for i in range(n):
+            h_i = J[i] @ s + b[i]
+            want = -1.0 if h_i > 0 else 1.0
+            if want != s[i]:
+                s[i] = want
+                changed = True
+        if not changed:
+            break
+    e = 0.5 * s @ (J @ s) + b @ s
+    return s, float(e)
+
+
+def estimate_reference(
+    problem: Union[DenseIsing, LatticeIsing],
+    seed: int,
+    n_restarts: int = 8,
+    starts: Any = None,
+) -> float:
+    """Best energy over greedy descents from random (+ optional given) starts.
+
+    Lattice problems descend through their dense form (clamp/dead masks are
+    ignored — zoo lattice instances are unclamped). Deterministic in `seed`.
+    """
+    dense = problem.to_dense() if isinstance(problem, LatticeIsing) else problem
+    J = np.asarray(dense.J, np.float64)
+    b = np.asarray(dense.b, np.float64)
+    n = dense.n
+    rng = np.random.default_rng(seed)
+    s_starts = [2.0 * rng.integers(0, 2, n) - 1.0 for _ in range(n_restarts)]
+    if starts is not None:
+        s_starts += [np.asarray(s, np.float64).reshape(-1) for s in starts]
+    best = np.inf
+    for s0 in s_starts:
+        _, e = greedy_descent_dense(J, b, s0)
+        best = min(best, e)
+    return float(best)
+
+
+# ---------------------------------------------------------------------------
+# Zoo registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ZooProblem:
+    """A zoo instance: the problem plus its TTS reference energy.
+
+    name:       registry name of the generator.
+    instance:   unique id, e.g. "maxcut-n32-s0" (stable across runs).
+    problem:    DenseIsing | LatticeIsing.
+    ref_energy: ground-state energy (see ref_kind).
+    ref_kind:   "exact" | "planted" | "estimated".
+    meta:       generator-specific extras (planted factors, edge counts...).
+    """
+
+    name: str
+    instance: str
+    problem: Union[DenseIsing, LatticeIsing]
+    ref_energy: float
+    ref_kind: str
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n(self) -> int:
+        return self.problem.n
+
+    @property
+    def kind(self) -> str:
+        return "lattice" if isinstance(self.problem, LatticeIsing) else "dense"
+
+    def target_energy(self, rel_gap: float) -> float:
+        """First-hit target: ref + rel_gap * |ref| (== ref when ref == 0)."""
+        return self.ref_energy + rel_gap * abs(self.ref_energy)
+
+
+PROBLEMS: dict[str, Callable[..., ZooProblem]] = {}
+PROBLEM_KINDS: dict[str, str] = {}
+
+
+def register_problem(name: str, kind: str):
+    """Decorator: register a `(size, seed, **kw) -> ZooProblem` generator.
+
+    `kind` ("dense" | "lattice") is registry metadata — benchmark suites use
+    it to pick the compatible kernel set without re-stating it anywhere.
+    """
+    if kind not in ("dense", "lattice"):
+        raise ValueError(f"kind must be 'dense' or 'lattice', got {kind!r}")
+
+    def deco(fn):
+        PROBLEMS[name] = fn
+        PROBLEM_KINDS[name] = kind
+        fn.zoo_name = name
+        return fn
+
+    return deco
+
+
+def get_problem(name: str, size: int, seed: int = 0, **kw) -> ZooProblem:
+    """Instantiate a registered zoo problem by name."""
+    if name not in PROBLEMS:
+        raise KeyError(f"unknown zoo problem {name!r}; have {sorted(PROBLEMS)}")
+    return PROBLEMS[name](size, seed, **kw)
+
+
+def problem_kind(name: str) -> str:
+    """Registered kind ("dense" | "lattice") of a zoo problem."""
+    if name not in PROBLEM_KINDS:
+        raise KeyError(f"unknown zoo problem {name!r}; have {sorted(PROBLEM_KINDS)}")
+    return PROBLEM_KINDS[name]
+
+
+def problem_names() -> list[str]:
+    return sorted(PROBLEMS)
+
+
+def _dense_reference(problem: DenseIsing, seed: int) -> tuple[float, str]:
+    if problem.n <= EXACT_ENUM_MAX:
+        return exact_ground_energy(problem), "exact"
+    return estimate_reference(problem, seed), "estimated"
+
+
+@register_problem("maxcut", kind="dense")
+def maxcut_zoo(size: int, seed: int = 0, density: float = 0.5, weights: str = "unit") -> ZooProblem:
+    """Gset-style random MaxCut: edges drawn i.i.d. with prob `density`."""
+    problem = random_maxcut(size, seed, density=density, weights=weights)
+    ref, kind = _dense_reference(problem, seed)
+    n_edges = int(np.count_nonzero(np.triu(np.asarray(problem.J), k=1)))
+    return ZooProblem(
+        name="maxcut",
+        instance=f"maxcut-n{size}-s{seed}",
+        problem=problem,
+        ref_energy=ref,
+        ref_kind=kind,
+        meta={"density": density, "n_edges": n_edges,
+              "best_cut": float(0.5 * (np.sum(np.triu(np.asarray(problem.J), 1)) - ref))},
+    )
+
+
+@register_problem("sk", kind="dense")
+def sk_zoo(size: int, seed: int = 0) -> ZooProblem:
+    """Sherrington-Kirkpatrick spin glass, J ~ N(0, 1/n)."""
+    problem = sk_instance(size, seed)
+    ref, kind = _dense_reference(problem, seed)
+    return ZooProblem(
+        name="sk",
+        instance=f"sk-n{size}-s{seed}",
+        problem=problem,
+        ref_energy=ref,
+        ref_kind=kind,
+        meta={"e_per_spin": ref / size},
+    )
+
+
+# --- integer factorization as a planted Ising instance ----------------------
+
+
+def _factor_odd_semiprime(N: int) -> tuple[int, int]:
+    if N < 9 or N % 2 == 0:
+        raise ValueError(f"need an odd composite N >= 9, got {N}")
+    for p in range(3, int(N**0.5) + 1, 2):
+        if N % p == 0:
+            return p, N // p
+    raise ValueError(f"{N} is prime — nothing to factor")
+
+
+def factorization_ising(N: int) -> tuple[DenseIsing, np.ndarray, dict]:
+    """Encode factoring the odd semiprime N as a DenseIsing ground state.
+
+    Odd factors p = 1 + sum_{i>=1} 2^i x_i, q = 1 + sum_{j>=1} 2^j y_j with
+    nb bits each; products z_ij = x_i y_j enter via Rosenberg penalties
+    P*(3z + xy - 2zx - 2zy) >= 0 (zero iff z = xy), so
+
+        H = (N - p q)^2 + penalties >= 0,
+
+    with equality exactly at consistent factorizations — the planted (p, q)
+    [and its (q, p) mirror] is a global ground state. The QUBO is converted
+    to ±1 spins and rescaled to max|J|, max|b| <= 1.
+
+    Returns (problem, planted ±1 state, meta with N/p/q/bit layout).
+    """
+    p, q = _factor_odd_semiprime(N)
+    nb = max((p - 1).bit_length(), (q - 1).bit_length()) - 1
+    n = 2 * nb + nb * nb  # x bits, y bits, z products
+    ix = lambda i: i                      # x_i,      i in [0, nb)
+    iy = lambda j: nb + j                 # y_j,      j in [0, nb)
+    iz = lambda i, j: 2 * nb + i * nb + j  # z_ij = x_i y_j
+
+    # Linear coefficients of N - p q = A0 - sum_k a_k v_k over 0/1 vars v.
+    a = np.zeros(n)
+    for i in range(nb):
+        a[ix(i)] = 2.0 ** (i + 1)
+        a[iy(i)] = 2.0 ** (i + 1)
+        for j in range(nb):
+            a[iz(i, j)] = 2.0 ** (i + j + 2)
+    A0 = float(N - 1)
+
+    # QUBO: H = v^T Q v (upper tri) + c.v + const, using v^2 = v.
+    Q = np.zeros((n, n))
+    c = a * a - 2.0 * A0 * a
+    for k in range(n):
+        Q[k, k + 1:] += 2.0 * a[k] * a[k + 1:]
+    P = float(N)  # any P > 0 keeps the planted state globally optimal
+    for i in range(nb):
+        for j in range(nb):
+            t, u, w = iz(i, j), ix(i), iy(j)
+            c[t] += 3.0 * P
+            Q[min(u, w), max(u, w)] += P
+            Q[min(t, u), max(t, u)] -= 2.0 * P
+            Q[min(t, w), max(t, w)] -= 2.0 * P
+
+    # 0/1 -> ±1: v = (1+s)/2. Pair Q_kl v_k v_l -> J_kl = Q_kl/4 plus linear
+    # spill Q_kl/4 onto both b_k and b_l; linear c_k v_k -> b_k += c_k/2.
+    J = (Q + Q.T) / 4.0
+    b = c / 2.0 + J.sum(axis=1)
+    np.fill_diagonal(J, 0.0)
+
+    scale = max(np.abs(J).max(), np.abs(b).max(), 1e-12)
+    problem = DenseIsing(
+        J=jnp.asarray(J / scale, jnp.float32), b=jnp.asarray(b / scale, jnp.float32)
+    )
+
+    v = np.zeros(n)
+    for i in range(nb):
+        v[ix(i)] = (p - 1) >> (i + 1) & 1
+        v[iy(i)] = (q - 1) >> (i + 1) & 1
+    for i in range(nb):
+        for j in range(nb):
+            v[iz(i, j)] = v[ix(i)] * v[iy(j)]
+    s_planted = 2.0 * v - 1.0
+    meta = {"N": N, "p": p, "q": q, "n_bits": nb, "penalty": P, "scale": scale}
+    return problem, s_planted, meta
+
+
+@register_problem("factorization", kind="dense")
+def factorization_zoo(size: int, seed: int = 0) -> ZooProblem:
+    """Factor the odd semiprime `size` (seed is ignored — the instance is
+    determined by N; it stays in the signature for registry uniformity)."""
+    problem, s_planted, meta = factorization_ising(size)
+    ref = float(problem.energy(jnp.asarray(s_planted, jnp.float32)))
+    return ZooProblem(
+        name="factorization",
+        instance=f"factorization-N{size}",
+        problem=problem,
+        ref_energy=ref,
+        ref_kind="planted",
+        meta=meta,
+    )
+
+
+@register_problem("ferromagnet", kind="lattice")
+def ferromagnet_zoo(size: int, seed: int = 0, coupling: float = 1.0) -> ZooProblem:
+    """Uniform king's-move lattice ferromagnet (size x size), J = -coupling.
+    Exact ground states: all-up / all-down."""
+    pairs = {}
+    for y in range(size):
+        for x in range(size):
+            for dy, dx in KING_OFFSETS[4:]:
+                yy, xx = y + dy, x + dx
+                if 0 <= yy < size and 0 <= xx < size:
+                    pairs[((y, x), (yy, xx))] = -coupling
+    problem = lattice_from_pairs(size, size, pairs)
+    ref = float(problem.energy(jnp.ones((size, size), jnp.float32)))
+    return ZooProblem(
+        name="ferromagnet",
+        instance=f"ferromagnet-L{size}-c{coupling:g}",
+        problem=problem,
+        ref_energy=ref,
+        ref_kind="exact",
+        meta={"coupling": coupling, "n_edges": len(pairs)},
+    )
+
+
+@register_problem("cal", kind="lattice")
+def cal_zoo(size: int = 16, seed: int = 0, coupling: float = 1.0) -> ZooProblem:
+    """The Fig. 3F CAL-letters lattice (gauge-transformed ferromagnet);
+    exact ground states ±cal_template(). size must be 16."""
+    if size != 16:
+        raise ValueError("cal is fixed to the 16x16 core")
+    problem = cal_problem(coupling=coupling)
+    t = jnp.asarray(cal_template())
+    ref = float(problem.energy(t))
+    return ZooProblem(
+        name="cal",
+        instance=f"cal-16x16-c{coupling:g}",
+        problem=problem,
+        ref_energy=ref,
+        ref_kind="exact",
+        meta={"coupling": coupling},
+    )
+
+
+@register_problem("boltzmann_ml", kind="lattice")
+def boltzmann_ml_zoo(
+    size: int = 16,
+    seed: int = 0,
+    digits: tuple = (0, 1, 2),
+    n_each: int = 16,
+    flip_prob: float = 0.05,
+    scale: float = 1.0,
+) -> ZooProblem:
+    """Hebbian lattice Boltzmann machine — the paper's ML workload (Fig. 4).
+
+    Couplings are the one-shot multiplier-free CD limit: J = -scale * E[s s']
+    over a noisy digit batch (negative J favors the data correlations),
+    biases b = -scale * E[s]. size <= 16 crops the 16x16 digit canvas.
+    """
+    if size > 16:
+        raise ValueError("digit templates are 16x16; size must be <= 16")
+    import jax as _jax
+
+    from repro.core.boltzmann import pair_correlations
+    from repro.data import digits as digit_data
+
+    batch = digit_data.mixed_batch(list(digits), n_each, _jax.random.key(seed), flip_prob)
+    batch = batch[:, :size, :size]
+    corr = pair_correlations(batch, size, size)
+    w = -scale * corr
+    b = -scale * jnp.mean(batch, axis=0)
+    problem = LatticeIsing(
+        w=w.astype(jnp.float32),
+        b=b.astype(jnp.float32),
+        clamp_mask=jnp.zeros((size, size), bool),
+        clamp_value=-jnp.ones((size, size), jnp.float32),
+        dead_mask=jnp.zeros((size, size), bool),
+    )
+    starts = [np.asarray(digit_data.digit_template(d))[:size, :size] for d in digits]
+    ref = estimate_reference(problem, seed, n_restarts=8, starts=starts)
+    return ZooProblem(
+        name="boltzmann_ml",
+        instance=f"boltzmann_ml-L{size}-s{seed}",
+        problem=problem,
+        ref_energy=ref,
+        ref_kind="estimated",
+        meta={"digits": list(digits), "n_each": n_each, "flip_prob": flip_prob},
+    )

@@ -44,6 +44,7 @@ outputs bit-for-bit at beta=1.
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Any, NamedTuple, Optional, Protocol, Union, runtime_checkable
 
@@ -383,6 +384,23 @@ class CTMC:
 # ---------------------------------------------------------------------------
 
 
+class RunTiming(NamedTuple):
+    """Host-side wall-clock accounting for one `run(..., timeit=True)` call.
+
+    compile_s:         first-call overhead (trace + compile), estimated as
+                       first_call_wall - steady_state_wall, floored at 0.
+    wall_s:            steady-state wall time of one full driver call.
+    steps_per_s:       n_steps / wall_s (per chain).
+    chain_steps_per_s: n_steps * n_chains / wall_s — the throughput figure
+                       benchmarks gate on.
+    """
+
+    compile_s: float
+    wall_s: float
+    steps_per_s: float
+    chain_steps_per_s: float
+
+
 class RunResult(NamedTuple):
     """Result of a `run()` call. With n_chains > 1 every field gains a
     leading chain dimension.
@@ -396,6 +414,7 @@ class RunResult(NamedTuple):
     t_hit:    first model time with energy <= first_hit (inf if never);
               None when first_hit was not requested.
     hit:      whether the target was reached; None when not requested.
+    timing:   RunTiming when run(..., timeit=True); None otherwise.
     """
 
     s: jax.Array
@@ -405,6 +424,7 @@ class RunResult(NamedTuple):
     energies: jax.Array
     t_hit: Any = None
     hit: Any = None
+    timing: Any = None
 
 
 def _resolve_backend(backend: Optional[str]) -> Optional[str]:
@@ -510,6 +530,7 @@ def run(
     sample_every: int = 0,
     first_hit: Optional[Any] = None,
     backend: Optional[str] = None,
+    timeit: bool = False,
 ) -> RunResult:
     """Run `n_steps` of `kernel` on `problem` — the single sampling driver.
 
@@ -529,6 +550,10 @@ def run(
       backend: "ref" | "pallas" | "auto" — overrides the kernel's backend
         field where it has one (dense tau-leap routes through the Pallas
         kernel under "pallas"; "auto" compiles on TPU, refs elsewhere).
+      timeit: measure wall-clock throughput — the call runs twice (compile
+        pass then steady-state pass, identical results: same key) and the
+        result carries a `RunTiming` in `.timing`. The benchmark harness's
+        hook; off by default.
     """
     if isinstance(kernel, str):
         kernel = get_kernel(kernel)
@@ -543,13 +568,31 @@ def run(
     if n_chains == 1:
         if betas.ndim != 1:
             raise ValueError("per-chain schedule requires n_chains > 1")
-        return _run_single(
+        call = lambda: _run_single(
             problem, kernel, key, s0, betas, e_target, n_steps, sample_every, track_hit
         )
+    else:
+        if betas.ndim == 2 and betas.shape[0] != n_chains:
+            raise ValueError(f"schedule has {betas.shape[0]} rows for {n_chains} chains")
+        keys = jax.random.split(key, n_chains)
+        call = lambda: _run_batched(
+            problem, kernel, keys, s0, betas, e_target, n_steps, sample_every, track_hit,
+            n_chains,
+        )
 
-    if betas.ndim == 2 and betas.shape[0] != n_chains:
-        raise ValueError(f"schedule has {betas.shape[0]} rows for {n_chains} chains")
-    keys = jax.random.split(key, n_chains)
-    return _run_batched(
-        problem, kernel, keys, s0, betas, e_target, n_steps, sample_every, track_hit, n_chains
+    if not timeit:
+        return call()
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(call())
+    first_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = jax.block_until_ready(call())
+    wall_s = max(time.perf_counter() - t0, 1e-9)
+    timing = RunTiming(
+        compile_s=max(0.0, first_s - wall_s),
+        wall_s=wall_s,
+        steps_per_s=n_steps / wall_s,
+        chain_steps_per_s=n_steps * n_chains / wall_s,
     )
+    return res._replace(timing=timing)

@@ -1,0 +1,235 @@
+"""Benchmark harness: suite grids, the entry runner, JSON reports, and the
+baseline regression gate (what CI's bench-smoke job exercises)."""
+import json
+
+import numpy as np
+import pytest
+
+from benchmarks import report as report_mod
+from benchmarks import run as run_cli
+from benchmarks import runner, suites
+
+
+def _tiny_entry(**kw):
+    base = dict(
+        problem="ferromagnet", size=4, seed=0, kernel="tau_leap",
+        backend="ref", n_steps=24, n_chains=2, sample_every=6,
+        schedule=("geometric", 0.5, 2.0), kernel_args=(("dt", 0.25),),
+        rel_gap=0.1,
+    )
+    base.update(kw)
+    return suites.SuiteEntry(**base)
+
+
+def test_smoke_suite_coverage():
+    """The acceptance grid: >= 4 problems x >= 3 kernels, unique ids."""
+    entries = suites.smoke_suite()
+    probs = {e.problem for e in entries}
+    kernels = {e.kernel for e in entries}
+    assert len(probs) >= 4, probs
+    assert len(kernels) >= 3, kernels
+    ids = [e.id for e in entries]
+    assert len(ids) == len(set(ids))
+    # kernel/problem compatibility respected (kind from the zoo registry)
+    from repro.core import problems
+
+    for e in entries:
+        lattice = problems.problem_kind(e.problem) == "lattice"
+        assert e.kernel in (suites.LATTICE_KERNELS if lattice else suites.DENSE_KERNELS)
+        if e.backend == "pallas":
+            assert e.kernel == "tau_leap" and not lattice
+
+
+def test_suite_registry_and_deterministic_seeding():
+    assert set(suites.SUITES) >= {"smoke", "full"}
+    with pytest.raises(KeyError):
+        suites.get_suite("warp")
+    e = _tiny_entry()
+    assert suites.stable_seed(e.id) == suites.stable_seed(e.id)
+    assert suites.stable_seed("a") != suites.stable_seed("b")
+    np.testing.assert_array_equal(
+        np.asarray(jax_key_data(e.key())), np.asarray(jax_key_data(_tiny_entry().key()))
+    )
+
+
+def jax_key_data(key):
+    import jax
+
+    return jax.random.key_data(key)
+
+
+def test_run_entry_record_schema():
+    rec = runner.run_entry(_tiny_entry())
+    for field in (
+        "id", "problem", "instance", "kernel", "backend", "n_steps", "n_chains",
+        "ref_energy", "ref_kind", "target_energy", "compile_s", "wall_s",
+        "steps_per_s", "chain_steps_per_s", "best_energy", "final_gap",
+        "hit_rate", "tts_model_time", "gap_trajectory",
+    ):
+        assert field in rec, field
+    assert rec["steps_per_s"] > 0 and rec["chain_steps_per_s"] > 0
+    assert rec["chain_steps_per_s"] == pytest.approx(rec["steps_per_s"] * 2, rel=1e-6)
+    assert 0.0 <= rec["hit_rate"] <= 1.0
+    # best-so-far gap trajectory is nonincreasing, in model time
+    traj = np.asarray(rec["gap_trajectory"])
+    assert traj.shape[1] == 2
+    assert np.all(np.diff(traj[:, 1]) <= 1e-6)
+    assert np.all(np.diff(traj[:, 0]) >= -1e-6)
+    json.dumps(rec)  # JSON-serializable end to end
+
+
+def test_run_entry_single_chain_and_suite_cache():
+    recs = runner.run_suite(
+        [_tiny_entry(n_chains=1), _tiny_entry(n_chains=1, kernel="chromatic_gibbs",
+                                              kernel_args=())],
+        log=lambda m: None,
+    )
+    assert len(recs) == 2
+    assert recs[0]["ref_energy"] == recs[1]["ref_energy"]
+    assert recs[0]["n_chains"] == 1
+
+
+def test_report_roundtrip_and_schema_version(tmp_path):
+    rec = runner.run_entry(_tiny_entry())
+    rep = report_mod.make_report("unit", "smoke", [rec])
+    assert rep["schema_version"] == report_mod.SCHEMA_VERSION
+    path = report_mod.write_report(rep, str(tmp_path))
+    assert path.endswith("BENCH_unit.json")
+    loaded = report_mod.load(path)
+    assert loaded["records"][0]["id"] == rec["id"]
+
+    bad = dict(rep, schema_version=1)
+    bad_path = tmp_path / "BENCH_bad.json"
+    bad_path.write_text(json.dumps(bad))
+    with pytest.raises(ValueError, match="schema_version"):
+        report_mod.load(str(bad_path))
+
+
+def _fake_report(throughputs: dict) -> dict:
+    recs = [
+        {"id": rid, "chain_steps_per_s": v, "steps_per_s": v, "wall_s": 1.0}
+        for rid, v in throughputs.items()
+    ]
+    return report_mod.make_report("fake", "smoke", recs)
+
+
+def test_baseline_regression_gate():
+    baseline = report_mod.to_baseline(_fake_report({"a": 100.0, "b": 100.0}))
+    baseline["host"]["ci"] = True  # CI-produced baseline: the gate is armed
+    ok, summary = report_mod.compare_to_baseline(
+        _fake_report({"a": 90.0, "b": 95.0}), baseline, threshold=0.30
+    )
+    assert ok and summary["geomean_ratio"] > 0.9
+
+    ok, summary = report_mod.compare_to_baseline(
+        _fake_report({"a": 40.0, "b": 50.0}), baseline, threshold=0.30
+    )
+    assert not ok and summary["geomean_ratio"] < 0.7
+    assert summary["worst"] == "a"
+    assert "REGRESSION" in report_mod.format_comparison(summary)
+
+    # new + missing ids are reported but do not gate
+    ok, summary = report_mod.compare_to_baseline(
+        _fake_report({"a": 100.0, "c": 1.0}), baseline, threshold=0.30
+    )
+    assert ok
+    assert summary["new_ids"] == ["c"] and summary["missing_ids"] == ["b"]
+    assert "REGRESSION" not in report_mod.format_comparison(summary)
+
+
+def test_baseline_gate_advisory_for_non_ci_baseline():
+    """A regression vs a dev-machine baseline (host.ci false) must be loud
+    but non-fatal: absolute throughput is not runner-comparable."""
+    baseline = report_mod.to_baseline(_fake_report({"a": 100.0}))
+    baseline["host"]["ci"] = False
+    ok, summary = report_mod.compare_to_baseline(
+        _fake_report({"a": 10.0}), baseline, threshold=0.30
+    )
+    assert ok and summary["advisory"] and not summary["passed"]
+    assert "ADVISORY" in report_mod.format_comparison(summary)
+
+
+def test_baseline_gate_fails_on_zero_overlap():
+    """An id-scheme change must not turn the gate vacuous."""
+    baseline = report_mod.to_baseline(_fake_report({"a": 100.0}))
+    ok, summary = report_mod.compare_to_baseline(
+        _fake_report({"renamed": 100.0}), baseline, threshold=0.30
+    )
+    assert not ok and summary["error"] is not None
+    assert "ERROR" in report_mod.format_comparison(summary)
+
+
+def test_reports_are_strict_json(tmp_path):
+    """No-hit entries serialize tts as null, never the Infinity token."""
+    rec = runner.run_entry(_tiny_entry(n_steps=2, rel_gap=0.0))
+    rep = report_mod.make_report("strict", "smoke", [rec])
+    path = report_mod.write_report(rep, str(tmp_path))
+    text = open(path).read()
+    assert "Infinity" not in text and "NaN" not in text
+    json.loads(text)
+
+
+def test_cli_end_to_end_tiny_suite(tmp_path, monkeypatch):
+    """`python -m benchmarks.run --suite <tiny>` writes a schema-versioned
+    report, updates a baseline, and the check gate passes against itself."""
+    monkeypatch.setitem(suites.SUITES, "tiny", lambda: [_tiny_entry()])
+    baseline = tmp_path / "baseline.json"
+    rc = run_cli.main([
+        "--suite", "tiny", "--tag", "t0", "--out", str(tmp_path),
+        "--update-baseline", "--baseline", str(baseline),
+    ])
+    assert rc == 0
+    rep = report_mod.load(str(tmp_path / "BENCH_t0.json"))
+    assert rep["suite"] == "tiny" and len(rep["records"]) == 1
+
+    rc = run_cli.main([
+        "--suite", "tiny", "--tag", "t1", "--out", str(tmp_path),
+        "--check-baseline", "--baseline", str(baseline), "--threshold", "0.95",
+    ])
+    assert rc == 0
+
+    # an impossible threshold-violating CI baseline forces exit code 1
+    blob = json.loads(baseline.read_text())
+    blob["host"]["ci"] = True
+    for v in blob["throughput"].values():
+        v["chain_steps_per_s"] *= 1e9
+    baseline.write_text(json.dumps(blob))
+    rc = run_cli.main([
+        "--suite", "tiny", "--tag", "t2", "--out", str(tmp_path),
+        "--check-baseline", "--baseline", str(baseline),
+    ])
+    assert rc == 1
+
+    # --update-baseline + --check-baseline: the check must run against the
+    # OLD (still-impossible) baseline, not the one written from this run
+    rc = run_cli.main([
+        "--suite", "tiny", "--tag", "t3", "--out", str(tmp_path),
+        "--check-baseline", "--update-baseline", "--baseline", str(baseline),
+    ])
+    assert rc == 1  # still compared against the 1e9x baseline
+    # ...which has now been replaced by this run's numbers:
+    assert json.loads(baseline.read_text())["tag"] == "t3"
+
+
+def test_cli_baseline_from_adopts_report(tmp_path, monkeypatch, capsys):
+    """--baseline-from turns an existing report (e.g. a CI artifact) into
+    the baseline without running a suite, preserving host.ci."""
+    monkeypatch.setitem(suites.SUITES, "tiny", lambda: [_tiny_entry()])
+    out_base = tmp_path / "baseline.json"
+    rec = runner.run_entry(_tiny_entry())
+    rep = report_mod.make_report("ci-artifact", "smoke", [rec])
+    rep["host"]["ci"] = True
+    path = report_mod.write_report(rep, str(tmp_path))
+
+    rc = run_cli.main(["--baseline-from", path, "--baseline", str(out_base)])
+    assert rc == 0
+    blob = json.loads(out_base.read_text())
+    assert blob["host"]["ci"] is True and blob["tag"] == "ci-artifact"
+    assert "ARMED" in capsys.readouterr().out
+
+
+def test_cli_smoke_suite_conflict():
+    with pytest.raises(SystemExit):
+        run_cli.main(["--smoke", "--suite", "full"])
+    with pytest.raises(SystemExit):  # --only without --figures
+        run_cli.main(["--only", "fig3a"])

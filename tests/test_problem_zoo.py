@@ -1,0 +1,164 @@
+"""Problem zoo: registry lookup, generated-coupling shapes/symmetry, and
+reference-energy sanity (exact, planted, and estimated kinds)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ising, problems
+
+
+def test_registry_lookup():
+    names = problems.problem_names()
+    for want in ("maxcut", "sk", "factorization", "ferromagnet", "cal", "boltzmann_ml"):
+        assert want in names, names
+    zp = problems.get_problem("sk", 10, seed=3)
+    assert isinstance(zp, problems.ZooProblem)
+    assert zp.instance == "sk-n10-s3"
+    with pytest.raises(KeyError, match="unknown zoo problem"):
+        problems.get_problem("travelling_salesman", 10)
+
+
+@pytest.mark.parametrize("name,size", [("maxcut", 14), ("sk", 14), ("factorization", 35)])
+def test_dense_zoo_shapes_and_symmetry(name, size):
+    zp = problems.get_problem(name, size, seed=1)
+    assert zp.kind == "dense"
+    J = np.asarray(zp.problem.J)
+    assert J.shape == (zp.n, zp.n)
+    np.testing.assert_allclose(J, J.T, atol=1e-6)
+    np.testing.assert_allclose(np.diag(J), 0.0, atol=1e-6)
+    assert zp.problem.J.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("name,size", [("ferromagnet", 6), ("cal", 16), ("boltzmann_ml", 8)])
+def test_lattice_zoo_shapes_and_symmetry(name, size):
+    zp = problems.get_problem(name, size, seed=0)
+    assert zp.kind == "lattice"
+    assert zp.problem.w.shape == (8, size, size)
+    # the coupling planes must satisfy the lattice symmetry constraint:
+    # flattening to dense gives a symmetric matrix
+    J = np.asarray(zp.problem.to_dense().J)
+    np.testing.assert_allclose(J, J.T, atol=1e-5)
+    assert not bool(np.asarray(zp.problem.frozen_mask).any())
+
+
+def test_exact_references_match_enumeration():
+    for name in ("maxcut", "sk"):
+        zp = problems.get_problem(name, 12, seed=2)
+        assert zp.ref_kind == "exact"
+        assert zp.ref_energy == pytest.approx(
+            problems.exact_ground_energy(zp.problem), abs=1e-4
+        )
+
+
+def test_ferromagnet_reference_is_all_up_state():
+    zp = problems.get_problem("ferromagnet", 5, seed=0)
+    assert zp.ref_kind == "exact"
+    ones = jnp.ones((5, 5), jnp.float32)
+    assert zp.ref_energy == pytest.approx(float(zp.problem.energy(ones)))
+    assert zp.ref_energy == pytest.approx(-zp.meta["n_edges"])
+    # exhaustive check on the dense form (25 spins too many; use 3x3)
+    small = problems.get_problem("ferromagnet", 3, seed=0)
+    assert small.ref_energy == pytest.approx(
+        problems.exact_ground_energy(small.problem.to_dense()), abs=1e-4
+    )
+
+
+def test_cal_reference_is_template_energy_both_signs():
+    zp = problems.get_problem("cal", 16)
+    t = jnp.asarray(problems.cal_template())
+    assert zp.ref_energy == pytest.approx(float(zp.problem.energy(t)))
+    assert zp.ref_energy == pytest.approx(float(zp.problem.energy(-t)))
+    with pytest.raises(ValueError):
+        problems.get_problem("cal", 8)
+
+
+def test_factorization_planted_state_is_global_minimum():
+    """Exhaustive optimality at N=35 (8 spins): the planted factorization
+    (and its p<->q mirror) are the only ground states."""
+    zp = problems.get_problem("factorization", 35)
+    assert zp.ref_kind == "planted"
+    assert zp.meta["p"] * zp.meta["q"] == 35
+    n = zp.n
+    codes = np.arange(2**n)
+    bits = (codes[:, None] >> np.arange(n)[None, :]) & 1
+    states = (2 * bits - 1).astype(np.float32)
+    E = np.asarray(jax.vmap(zp.problem.energy)(jnp.asarray(states)))
+    assert E.min() == pytest.approx(zp.ref_energy, abs=1e-4)
+    assert int((E <= E.min() + 1e-4).sum()) == 2  # (p,q) and (q,p)
+
+
+def test_factorization_rejects_bad_n():
+    with pytest.raises(ValueError):
+        problems.factorization_ising(36)  # even
+    with pytest.raises(ValueError):
+        problems.factorization_ising(37)  # prime
+
+
+def test_estimated_reference_is_one_flip_stable():
+    """Greedy descent must end in a 1-flip-stable local minimum, and the
+    estimated reference must beat every random state it started from."""
+    zp = problems.get_problem("sk", 24, seed=5)
+    assert zp.ref_kind == "estimated"
+    J = np.asarray(zp.problem.J, np.float64)
+    b = np.asarray(zp.problem.b, np.float64)
+    rng = np.random.default_rng(0)
+    s0 = 2.0 * rng.integers(0, 2, 24) - 1.0
+    s, e = problems.greedy_descent_dense(J, b, s0)
+    h = J @ s + b
+    # flipping spin i changes E by -2 s_i h_i: stability means s_i h_i <= 0
+    assert np.all(s * h <= 1e-9)
+    randoms = 2.0 * rng.integers(0, 2, (64, 24)) - 1.0
+    e_rand = np.asarray(jax.vmap(zp.problem.energy)(jnp.asarray(randoms, jnp.float32)))
+    assert zp.ref_energy <= e_rand.min() + 1e-6
+
+
+def test_boltzmann_ml_generator():
+    zp = problems.get_problem("boltzmann_ml", 8, seed=1)
+    assert zp.problem.b.shape == (8, 8)
+    assert np.all(np.abs(np.asarray(zp.problem.w)) <= 1.0 + 1e-6)
+    with pytest.raises(ValueError):
+        problems.get_problem("boltzmann_ml", 20)
+    # deterministic in (size, seed)
+    again = problems.get_problem("boltzmann_ml", 8, seed=1)
+    np.testing.assert_array_equal(np.asarray(zp.problem.w), np.asarray(again.problem.w))
+    assert zp.ref_energy == pytest.approx(again.ref_energy)
+
+
+def test_target_energy_rel_gap():
+    zp = problems.get_problem("maxcut", 12, seed=0)
+    assert zp.target_energy(0.0) == pytest.approx(zp.ref_energy)
+    assert zp.target_energy(0.1) == pytest.approx(zp.ref_energy + 0.1 * abs(zp.ref_energy))
+    z = problems.ZooProblem(
+        name="x", instance="x", problem=zp.problem, ref_energy=0.0, ref_kind="exact"
+    )
+    assert z.target_energy(0.5) == 0.0
+
+
+def test_zoo_problems_run_through_sampler_api():
+    """Every zoo family drives the unified driver (the benchmark contract)."""
+    from repro.core import sampler_api
+
+    for name, size, kernel in [
+        ("maxcut", 10, "random_scan_gibbs"),
+        ("factorization", 35, "ctmc"),
+        ("ferromagnet", 5, "chromatic_gibbs"),
+        ("boltzmann_ml", 6, "tau_leap"),
+    ]:
+        zp = problems.get_problem(name, size)
+        res = sampler_api.run(
+            zp.problem, kernel, jax.random.key(0), n_steps=20,
+            sample_every=5, first_hit=zp.target_energy(0.5),
+        )
+        assert np.isfinite(float(res.t))
+        assert res.hit is not None
+
+
+def test_legacy_generators_still_exported():
+    """Pre-zoo entry points remain importable and unchanged in convention."""
+    p = problems.random_maxcut(8, seed=0)
+    assert isinstance(p, ising.DenseIsing)
+    s = jnp.ones((8,), jnp.float32)
+    assert float(problems.cut_value(p, s)) == pytest.approx(0.0)
+    assert isinstance(problems.sk_instance(8, 0), ising.DenseIsing)
+    assert isinstance(problems.cal_problem(), ising.LatticeIsing)

@@ -174,6 +174,43 @@ def test_schedule_resolution_forms():
         sampler_api._resolve_backend("cuda")
 
 
+def test_timeit_reports_throughput_and_identical_results():
+    """run(..., timeit=True) attaches RunTiming without changing results
+    (same key both passes) — the benchmark harness hook."""
+    prob = _dense_problem(n=10, seed=1)
+    s0 = sampler_api.random_init(jax.random.key(0), (prob.n,))
+    kw = dict(n_steps=60, s0=s0, sample_every=10)
+    plain = run(prob, TauLeap(dt=0.25), jax.random.key(1), **kw)
+    timed = run(prob, TauLeap(dt=0.25), jax.random.key(1), timeit=True, **kw)
+    assert plain.timing is None
+    t = timed.timing
+    assert isinstance(t, sampler_api.RunTiming)
+    assert t.wall_s > 0 and t.compile_s >= 0
+    assert t.steps_per_s == pytest.approx(60 / t.wall_s)
+    assert t.chain_steps_per_s == pytest.approx(t.steps_per_s)  # n_chains=1
+    np.testing.assert_array_equal(np.asarray(plain.s), np.asarray(timed.s))
+    np.testing.assert_array_equal(np.asarray(plain.samples), np.asarray(timed.samples))
+
+    chains = run(
+        prob, TauLeap(dt=0.25), jax.random.key(2), n_steps=40, n_chains=3, timeit=True
+    )
+    assert chains.timing.chain_steps_per_s == pytest.approx(
+        3 * chains.timing.steps_per_s
+    )
+
+
+def test_run_error_paths():
+    prob = _dense_problem(n=8, seed=0)
+    with pytest.raises(KeyError, match="unknown sampler kernel"):
+        run(prob, "metropolis_lights_out", jax.random.key(0), n_steps=10)
+    with pytest.raises(ValueError, match="backend"):
+        run(prob, TauLeap(), jax.random.key(0), n_steps=10, backend="cuda")
+    with pytest.raises(ValueError, match="schedule length"):
+        run(prob, TauLeap(), jax.random.key(0), n_steps=10, schedule=jnp.ones((7,)))
+    with pytest.raises(ValueError):  # 2D schedule without chains
+        run(prob, TauLeap(), jax.random.key(0), n_steps=4, schedule=jnp.ones((2, 4)))
+
+
 def test_legacy_wrappers_are_thin():
     """The deprecated samplers.* entry points must agree bit-for-bit with
     the driver they wrap (beta=1, same per-step key splitting)."""
