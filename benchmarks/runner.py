@@ -1,15 +1,18 @@
 """Execute suite entries through the unified sampling driver.
 
 One `run_entry` call produces a flat JSON-ready record: identity fields from
-the `SuiteEntry`, the zoo reference energy, throughput (`timeit=True` wall
-clock, separated into compile and steady-state), first-hit time-to-solution
+the `SuiteEntry`, the zoo reference energy, throughput (cold-call compile
+estimate plus the median steady-state wall clock over `TIMING_REPEATS`
+warm end-to-end `run()` calls), first-hit time-to-solution
 against the reference target, and a downsampled best-so-far energy-gap
 trajectory in model time.
 """
 from __future__ import annotations
 
+import time
 from typing import Optional
 
+import jax
 import numpy as np
 
 from repro.core import problems, sampler_api
@@ -17,6 +20,16 @@ from benchmarks.suites import SuiteEntry
 
 # Max points kept in each record's energy-gap trajectory.
 TRAJECTORY_POINTS = 40
+
+# Steady-state timing measurements per entry (median taken). Smoke entries
+# finish in milliseconds, where single-shot wall clocks have shown multi-x
+# run-to-run swings — far above the CI gate's 30% margin. Repeats reuse the
+# warm jit cache, so they cost steady-state wall time only. Entries whose
+# warm wall already exceeds REPEAT_MAX_WALL_S (full-suite scale) keep one
+# sample: long walls self-average, and repeating them would multiply
+# nightly compute for nothing.
+TIMING_REPEATS = 3
+REPEAT_MAX_WALL_S = 1.0
 
 
 def _best_so_far_gap(times: np.ndarray, energies: np.ndarray, ref: float):
@@ -48,17 +61,40 @@ def run_entry(entry: SuiteEntry, zoo: Optional[problems.ZooProblem] = None) -> d
         zoo = entry.make_problem()
     target = zoo.target_energy(entry.rel_gap)
 
-    res = sampler_api.run(
-        zoo.problem,
-        entry.make_kernel(),
-        entry.key(),
-        n_steps=entry.n_steps,
-        n_chains=entry.n_chains,
-        sample_every=entry.sample_every,
-        schedule=entry.resolve_schedule(),
-        first_hit=target,
-        backend=entry.backend,
-        timeit=True,
+    def timed():
+        t0 = time.perf_counter()
+        res = jax.block_until_ready(
+            sampler_api.run(
+                zoo.problem,
+                entry.make_kernel(),
+                entry.key(),
+                n_steps=entry.n_steps,
+                n_chains=entry.n_chains,
+                sample_every=entry.sample_every,
+                schedule=entry.resolve_schedule(),
+                first_hit=target,
+                backend=entry.backend,
+            )
+        )
+        return res, max(time.perf_counter() - t0, 1e-9)
+
+    # Median steady-state wall time over repeats (identical keys -> identical
+    # results; only the clock varies). Every sample times the same thing —
+    # one full end-to-end run() call — so the median is apples-to-apples;
+    # compile_s is the cold call's excess over the warm median (the same
+    # estimator RunTiming documents). NOTE compile_s is process-level:
+    # entries sharing a jit signature warm each other's cache, so only the
+    # first such entry in a suite reports the real compile cost.
+    res, cold_s = timed()
+    walls = [timed()[1]]
+    if walls[0] < REPEAT_MAX_WALL_S:
+        walls += [timed()[1] for _ in range(TIMING_REPEATS - 1)]
+    wall_s = float(np.median(walls))
+    timing = sampler_api.RunTiming(
+        compile_s=max(0.0, cold_s - wall_s),
+        wall_s=wall_s,
+        steps_per_s=entry.n_steps / wall_s,
+        chain_steps_per_s=entry.n_steps * entry.n_chains / wall_s,
     )
 
     # Normalize to a leading chain axis for uniform reduction.
@@ -74,7 +110,6 @@ def run_entry(entry: SuiteEntry, zoo: Optional[problems.ZooProblem] = None) -> d
     # None (JSON null), not inf: reports must stay strict RFC-8259 JSON.
     tts = float(np.median(t_hit[hits])) if hits.any() else None
 
-    timing = res.timing
     return {
         "id": entry.id,
         "problem": entry.problem,

@@ -7,9 +7,13 @@ exactly (modulo wall-clock).
 
 Kernel/problem compatibility (see `repro.core.sampler_api`):
 
-    random_scan_gibbs, ctmc  — dense problems only
-    chromatic_gibbs          — lattice problems only
+    random_scan_gibbs, ctmc  — dense problems only (ref backend only)
+    chromatic_gibbs          — lattice problems only; also backend="pallas"
+                               (the fused lattice_gibbs_sweep kernel)
     tau_leap                 — both; dense also under backend="pallas"
+
+Requesting backend="pallas" on any other combination raises ValueError in
+the driver — the suite grids below only emit honorable entries.
 """
 from __future__ import annotations
 
@@ -94,11 +98,25 @@ def _grid(problem_specs, *, steps_dense, steps_lattice, n_chains, sample_every,
                     sample_every=sample_every, kernel_args=kernel_args,
                 )
             )
+            # Pallas entries run in interpret mode off-TPU (correctness and
+            # trend signal, not kernel speed) and are shortened accordingly.
             if pallas and kernel == "tau_leap" and not lattice:
                 entries.append(
                     SuiteEntry(
                         problem=name, size=size, seed=seed, kernel=kernel,
                         backend="pallas", n_steps=max(32, n_steps // 8),
+                        n_chains=1, sample_every=sample_every,
+                        kernel_args=kernel_args,
+                    )
+                )
+            # chromatic sweeps are cheap even interpreted (small lattices,
+            # stencil math): keep the ref entry's step count so per-call
+            # host overhead amortizes and ref/pallas are comparable.
+            if pallas and kernel == "chromatic_gibbs":
+                entries.append(
+                    SuiteEntry(
+                        problem=name, size=size, seed=seed, kernel=kernel,
+                        backend="pallas", n_steps=n_steps,
                         n_chains=1, sample_every=sample_every,
                         kernel_args=kernel_args,
                     )

@@ -169,14 +169,20 @@ class LatticeIsing:
         return DenseIsing(J=jnp.asarray(J), b=jnp.asarray(b))
 
     def apply_clamps(self, s: jax.Array) -> jax.Array:
-        s = jnp.where(self.clamp_mask, self.clamp_value.astype(s.dtype), s)
-        s = jnp.where(self.dead_mask, jnp.asarray(-1, s.dtype), s)
-        return s
+        return jnp.where(self.frozen_mask, self.frozen_values.astype(s.dtype), s)
 
     @property
     def frozen_mask(self) -> jax.Array:
         """Sites that never update (clamped or dead)."""
         return self.clamp_mask | self.dead_mask
+
+    @property
+    def frozen_values(self) -> jax.Array:
+        """Value read at frozen sites: clamp_value where clamped, -1 where
+        dead — dead wins where both (the chip reads dead neurons as -1)."""
+        return jnp.where(
+            self.dead_mask, jnp.asarray(-1, self.clamp_value.dtype), self.clamp_value
+        )
 
 
 def shift2d(s: jax.Array, dy: int, dx: int) -> jax.Array:

@@ -19,7 +19,11 @@ Kernels implemented here, registered by name for config/benchmark selection:
         one uniformly random site resampled per step, incremental fields,
         model time 1/lambda0 per step.
     "chromatic_gibbs"   — exact parallel Gibbs on the king's-move lattice via
-        the 4-coloring; one step = one sweep = 4 color phases.
+        the 4-coloring; one step = one sweep = 4 color phases.  Under
+        `backend="pallas"` the whole sweep runs as ONE fused Pallas
+        `lattice_gibbs_sweep` call (lattice + weights VMEM-resident), the
+        chip's colored update groups; the ref path recomputes the stencil
+        field per color phase.
     "tau_leap"          — the PASS ASYNC model (lattice or dense): every
         neuron flips independently w.p. 1-exp(-dt*lambda_i) per step of
         model time dt.  dt*lambda0 -> 0 recovers the exact CTMC.  The dense
@@ -36,9 +40,12 @@ Driver:
 `schedule` accepts None (beta=1), a float, a `(n_steps,)` array, a
 `(n_chains, n_steps)` array (per-chain schedules — replica exchange), or a
 Schedule object (`constant` / `linear` / `geometric`).  `backend` is
-`"ref" | "pallas" | "auto"` ("auto": compiled Pallas on TPU, reference
-elsewhere).  The legacy entry points in `samplers` / `annealing` / `ctmc`
-are thin deprecated wrappers over this driver and reproduce their historical
+`"ref" | "pallas" | "auto"`: an explicit "pallas" request on a kernel (or
+kernel/problem combination) with no Pallas path raises ValueError instead
+of silently running the ref path; "auto" picks the best backend the kernel
+supports on this platform (compiled Pallas on TPU, reference elsewhere).
+The legacy entry points in `samplers` / `annealing` / `ctmc` are thin
+deprecated wrappers over this driver and reproduce their historical
 outputs bit-for-bit at beta=1.
 """
 from __future__ import annotations
@@ -244,17 +251,39 @@ class RandomScanGibbs:
 
 
 @register_kernel("chromatic_gibbs")
-@partial(jax.tree_util.register_dataclass, data_fields=("trim",), meta_fields=("lambda0",))
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("trim",),
+    meta_fields=("lambda0", "backend"),
+)
 @dataclasses.dataclass(frozen=True)
 class ChromaticGibbs:
     """Exact parallel Gibbs on the king's-move lattice via the 4-coloring.
     One step = 4 color phases = one update per neuron, so the equivalent
-    model time per step at per-neuron rate lambda0 is 1/lambda0."""
+    model time per step at per-neuron rate lambda0 is 1/lambda0.
+
+    `backend="pallas"` routes the whole sweep through the fused Pallas
+    `lattice_gibbs_sweep` kernel (all 4 color phases with lattice + weights
+    resident in VMEM; compiled on TPU, interpreted elsewhere). The ref path
+    recomputes the full stencil field once per color phase in plain jnp.
+    Both paths draw the same per-color uniforms from the same key split, so
+    they agree bit-for-bit in interpret mode."""
+
+    backends = ("ref", "pallas")
 
     lambda0: float = 1.0
     trim: Optional[glauber.SigmoidTrim] = None
+    backend: str = "ref"  # "ref" | "pallas"
+
+    def backends_for(self, problem) -> tuple[str, ...]:
+        # trims are a ref-only feature, so "auto" must not pick pallas
+        return ("ref",) if self.trim is not None else self.backends
 
     def init(self, problem: LatticeIsing, key, s0=None) -> KernelState:
+        if self.backend == "pallas" and self.trim is not None:
+            raise NotImplementedError(
+                "pallas chromatic gibbs does not support trims"
+            )
         if s0 is None:
             s0 = random_init(key, state_shape(problem))
         s0 = problem.apply_clamps(s0)
@@ -266,14 +295,33 @@ class ChromaticGibbs:
         frozen = problem.frozen_mask
         s = state.s
         keys = jax.random.split(key, colors.shape[0])
-        for c in range(colors.shape[0]):
-            h = problem.local_fields(s)
-            p_up = glauber.prob_up(beta * h, self.trim)
-            u = jax.random.uniform(keys[c], s.shape)
-            proposal = jnp.where(u < p_up, 1.0, -1.0).astype(s.dtype)
-            upd = colors[c] & (~frozen)
-            s = jnp.where(upd, proposal, s)
-        s = problem.apply_clamps(s)
+        if self.backend == "pallas":
+            # trim is rejected in init(), which every driver path runs first
+            from repro.kernels import ops
+
+            u = jnp.stack(
+                [jax.random.uniform(keys[c], s.shape) for c in range(colors.shape[0])]
+            )
+            s = ops.lattice_gibbs_sweep(
+                s[None],
+                problem.w,
+                problem.b,
+                u[:, None],
+                colors.astype(s.dtype),
+                frozen.astype(s.dtype),
+                problem.frozen_values.astype(s.dtype),
+                beta=beta,
+                mode="kernel",
+            )[0]
+        else:
+            for c in range(colors.shape[0]):
+                h = problem.local_fields(s)
+                p_up = glauber.prob_up(beta * h, self.trim)
+                u = jax.random.uniform(keys[c], s.shape)
+                proposal = jnp.where(u < p_up, 1.0, -1.0).astype(s.dtype)
+                upd = colors[c] & (~frozen)
+                s = jnp.where(upd, proposal, s)
+            s = problem.apply_clamps(s)
         return KernelState(s=s, t=state.t + 1.0 / self.lambda0, e=None, aux=())
 
 
@@ -295,16 +343,30 @@ class TauLeap:
     once at init and every step runs the fused Pallas `tau_leap_step` kernel
     (MXU matmul -> flip epilogue; compiled on TPU, interpreted elsewhere)."""
 
+    backends = ("ref", "pallas")
+
     dt: float = 0.1
     lambda0: float = 1.0
     backend: str = "ref"  # "ref" | "pallas"
     trim: Optional[glauber.SigmoidTrim] = None
+
+    def backends_for(self, problem) -> tuple[str, ...]:
+        # lattice tau-leap has no Pallas kernel; trims are ref-only
+        if isinstance(problem, LatticeIsing) or self.trim is not None:
+            return ("ref",)
+        return self.backends
 
     def init(self, problem, key, s0=None) -> KernelState:
         if s0 is None:
             s0 = random_init(key, state_shape(problem))
         aux = ()
         if isinstance(problem, LatticeIsing):
+            if self.backend == "pallas":
+                raise NotImplementedError(
+                    "pallas tau-leap supports dense problems only; the lattice "
+                    "form has no Pallas kernel (use chromatic_gibbs for the "
+                    "fused lattice sweep)"
+                )
             s0 = problem.apply_clamps(s0)
         elif self.backend == "pallas":
             if self.trim is not None:
@@ -343,6 +405,13 @@ class TauLeap:
         )
 
 
+# Total-rate floor for the CTMC: below this the chain is treated as frozen
+# (the dwell time is clamped to ~1e30 and no flip is performed). Shared by
+# the denominator clamp and the aliveness test; above it the dwell time and
+# the exact-log categorical site draw are both unclamped and exact.
+RATE_FLOOR = 1e-30
+
+
 @register_kernel("ctmc")
 @partial(jax.tree_util.register_dataclass, data_fields=(), meta_fields=("lambda0",))
 @dataclasses.dataclass(frozen=True)
@@ -369,13 +438,22 @@ class CTMC:
         s, h = state.s, state.aux
         k_dt, k_site = jax.random.split(key)
         rates = self.lambda0 * glauber.flip_prob(beta * h, s)
+        # At large beta every sigma(2 beta h_i s_i) underflows toward 0 in a
+        # frozen cold chain. Dividing by the raw sum would give dt=inf (NaN
+        # model time), so clamp the denominator and suppress the flip below
+        # RATE_FLOOR. log(rates) without an additive floor keeps the site
+        # draw exactly proportional however small the rates get (log(0) is
+        # -inf = zero probability; an additive floor would flip a near-
+        # uniformly random site once rates drop near it); all-zero rates
+        # degenerate to site 0, which `alive` then discards.
         total = jnp.sum(rates)
-        dt = jax.random.exponential(k_dt) / total
-        i = jax.random.categorical(k_site, jnp.log(rates + 1e-30))
-        delta = -2.0 * s[i]
+        alive = total > RATE_FLOOR
+        dt = jax.random.exponential(k_dt) / jnp.maximum(total, RATE_FLOOR)
+        i = jax.random.categorical(k_site, jnp.log(rates))
+        delta = jnp.where(alive, -2.0 * s[i], 0.0)
         e = state.e + delta * h[i]
         h = h + problem.J[:, i] * delta
-        s = s.at[i].multiply(-1.0)
+        s = s.at[i].add(delta)
         return KernelState(s=s, t=state.t + dt, e=e, aux=h)
 
 
@@ -427,12 +505,43 @@ class RunResult(NamedTuple):
     timing: Any = None
 
 
-def _resolve_backend(backend: Optional[str]) -> Optional[str]:
-    if backend is None or backend in ("ref", "pallas"):
-        return backend
+def kernel_backends(kernel, problem=None) -> tuple[str, ...]:
+    """Backends a kernel can actually execute ("ref" always works).
+
+    Kernels whose support depends on their own config (trims are ref-only)
+    or on the problem class (tau-leap: Pallas kernel for dense only) narrow
+    the answer via an optional `backends_for(problem)` method; it must
+    accept problem=None, answering for the kernel config alone.
+    """
+    fn = getattr(kernel, "backends_for", None)
+    if fn is not None:
+        return fn(problem)
+    return getattr(type(kernel), "backends", ("ref",))
+
+
+def _resolve_backend(backend: Optional[str], kernel=None, problem=None) -> Optional[str]:
+    """Resolve a requested backend against what `kernel` supports.
+
+    An explicit "pallas" request on a kernel with no Pallas path raises
+    ValueError — it used to silently run the ref path, which turned every
+    backend benchmark/test into a potential no-op. "auto" picks the best
+    backend the kernel supports on this platform (so it stays usable for
+    ref-only kernels).
+    """
+    if backend is None:
+        return None
+    if backend not in ("ref", "pallas", "auto"):
+        raise ValueError(f"backend must be 'ref' | 'pallas' | 'auto', got {backend!r}")
+    supported = ("ref", "pallas") if kernel is None else kernel_backends(kernel, problem)
     if backend == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "ref"
-    raise ValueError(f"backend must be 'ref' | 'pallas' | 'auto', got {backend!r}")
+        return "pallas" if jax.default_backend() == "tpu" and "pallas" in supported else "ref"
+    if backend not in supported:
+        name = getattr(kernel, "name", type(kernel).__name__)
+        raise ValueError(
+            f"kernel {name!r} does not support backend {backend!r}; "
+            f"supported backends: {supported}"
+        )
+    return backend
 
 
 def _run_core(problem, kernel, key, s0, betas, e_target, *, n_steps, sample_every, track_hit):
@@ -548,16 +657,20 @@ def run(
         0 records nothing.
       first_hit: energy target — tracks (t_hit, hit) per chain.
       backend: "ref" | "pallas" | "auto" — overrides the kernel's backend
-        field where it has one (dense tau-leap routes through the Pallas
-        kernel under "pallas"; "auto" compiles on TPU, refs elsewhere).
+        field where it has one (dense tau-leap and chromatic gibbs route
+        through their fused Pallas kernels under "pallas"; "auto" compiles
+        on TPU, refs elsewhere). Requesting "pallas" on a kernel or
+        kernel/problem combination without Pallas support raises ValueError
+        — no silent ref fallback.
       timeit: measure wall-clock throughput — the call runs twice (compile
         pass then steady-state pass, identical results: same key) and the
-        result carries a `RunTiming` in `.timing`. The benchmark harness's
-        hook; off by default.
+        result carries a `RunTiming` in `.timing`. One-shot convenience;
+        the benchmark harness times whole `run()` calls itself with median
+        repeats (`benchmarks.runner`). Off by default.
     """
     if isinstance(kernel, str):
         kernel = get_kernel(kernel)
-    resolved = _resolve_backend(backend)
+    resolved = _resolve_backend(backend, kernel, problem)
     if resolved is not None and hasattr(kernel, "backend") and kernel.backend != resolved:
         kernel = dataclasses.replace(kernel, backend=resolved)
 

@@ -14,6 +14,10 @@ TTS experiments require).
 
 The stencil is computed with explicit pad+slice shifts (no gather), which
 maps to cheap VPU vector shifts on TPU.
+
+The inverse temperature `beta` rides along as an SMEM scalar (like `dt` in
+the tau-leap kernel), so annealed schedules drive the fused sweep without
+retracing: p_up = sigma(-2*beta*h).
 """
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.ising import KING_OFFSETS, N_KING_COLORS
 
@@ -46,16 +51,19 @@ def _fields(s: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
     return acc + b
 
 
-def _sweep_kernel(s_ref, w_ref, b_ref, u_ref, colors_ref, frozen_ref, clampv_ref, out_ref):
+def _sweep_kernel(s_ref, w_ref, b_ref, u_ref, colors_ref, frozen_ref, clampv_ref, beta_ref, out_ref):
     s = s_ref[...]            # (BB, H, W) f32 ±1
     w = w_ref[...]            # (8, H, W)
     b = b_ref[...]            # (H, W)
     frozen = frozen_ref[...]  # (H, W) f32 {0,1}
     colors = colors_ref[...]  # (4, H, W) f32 {0,1}
+    beta = beta_ref[0]        # () f32 SMEM — inverse temperature
     free = 1.0 - frozen
     for c in range(N_KING_COLORS):
         h = _fields(s, w, b[None])
-        p_up = jax.nn.sigmoid(-2.0 * h)
+        # sigma(-2*(beta*h)): multiply order matches glauber.prob_up(beta*h)
+        # so ref-backend trajectories reproduce bit-for-bit.
+        p_up = jax.nn.sigmoid(-2.0 * (beta * h))
         proposal = jnp.where(u_ref[c] < p_up, 1.0, -1.0).astype(s.dtype)
         upd = (colors[c] * free)[None] > 0.5
         s = jnp.where(upd, proposal, s)
@@ -72,13 +80,24 @@ def lattice_gibbs_sweep(
     colors: jax.Array,     # (4, H, W) f32 {0,1}
     frozen: jax.Array,     # (H, W) f32 {0,1}
     clamp_value: jax.Array,  # (H, W) f32 ±1
+    beta=None,             # () f32 inverse temperature (None -> 1.0)
     *,
     block_batch: int = 8,
     interpret: bool = True,
 ) -> jax.Array:
     B, H, W = s.shape
     bb = min(block_batch, B)
-    assert B % bb == 0, f"batch {B} not divisible by block {bb}"
+    # ValueError, not assert: must fail fast with a readable message (and
+    # survive `python -O`) instead of an opaque Pallas grid error.
+    if B % bb != 0:
+        raise ValueError(
+            f"lattice_gibbs_sweep: batch {B} is not divisible by "
+            f"block_batch {bb}; pass a block_batch that divides the batch "
+            f"(or a batch that is a multiple of block_batch)"
+        )
+    if beta is None:
+        beta = jnp.ones((), jnp.float32)
+    beta = jnp.asarray(beta, jnp.float32).reshape(1)
     grid = (B // bb,)
     return pl.pallas_call(
         _sweep_kernel,
@@ -91,8 +110,9 @@ def lattice_gibbs_sweep(
             pl.BlockSpec((N_KING_COLORS, H, W), lambda i: (0, 0, 0)),
             pl.BlockSpec((H, W), lambda i: (0, 0)),
             pl.BlockSpec((H, W), lambda i: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec((bb, H, W), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, W), s.dtype),
         interpret=interpret,
-    )(s, w, b, uniforms, colors, frozen, clamp_value)
+    )(s, w, b, uniforms, colors, frozen, clamp_value, beta)

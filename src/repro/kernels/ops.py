@@ -23,13 +23,17 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def lattice_gibbs_sweep(s, w, b, uniforms, colors, frozen, clamp_value, mode: str = "auto", **kw):
+def lattice_gibbs_sweep(
+    s, w, b, uniforms, colors, frozen, clamp_value, beta=None, mode: str = "auto", **kw
+):
     if mode == "reference" or (mode == "auto" and not _on_tpu()):
         cm = colors > 0.5
         fz = frozen > 0.5
-        return _ref.lattice_gibbs_sweep_ref(s, w, b, uniforms, cm, fz, clamp_value)
+        return _ref.lattice_gibbs_sweep_ref(s, w, b, uniforms, cm, fz, clamp_value, beta)
+    # batch/block_batch divisibility is validated inside the kernel wrapper
+    # (a readable ValueError at call/trace time, not a Pallas grid error)
     return _lg.lattice_gibbs_sweep(
-        s, w, b, uniforms, colors, frozen, clamp_value, interpret=not _on_tpu(), **kw
+        s, w, b, uniforms, colors, frozen, clamp_value, beta, interpret=not _on_tpu(), **kw
     )
 
 

@@ -27,15 +27,21 @@ def lattice_gibbs_sweep_ref(
     color_masks: jax.Array,
     frozen: jax.Array,
     clamp_value: jax.Array,
+    beta=None,
 ) -> jax.Array:
-    """One full 4-color chromatic Gibbs sweep.
+    """One full 4-color chromatic Gibbs sweep at inverse temperature beta.
 
     s: (B,H,W) ±1; uniforms: (4,B,H,W); color_masks: (4,H,W) bool;
-    frozen: (H,W) bool; clamp_value: (H,W) ±1 (applied where frozen).
+    frozen: (H,W) bool; clamp_value: (H,W) ±1 (applied where frozen);
+    beta: () scalar (None -> 1.0).
     """
+    if beta is None:
+        beta = jnp.ones((), jnp.float32)
+    beta = jnp.asarray(beta, jnp.float32)
     for c in range(color_masks.shape[0]):
         h = lattice_fields_ref(s, w, b)
-        p_up = jax.nn.sigmoid(-2.0 * h)
+        # multiply order matches glauber.prob_up(beta*h): sigma(-2*(beta*h))
+        p_up = jax.nn.sigmoid(-2.0 * (beta * h))
         proposal = jnp.where(uniforms[c] < p_up, 1.0, -1.0).astype(s.dtype)
         upd = color_masks[c][None] & (~frozen)[None]
         s = jnp.where(upd, proposal, s)

@@ -37,7 +37,15 @@ def test_smoke_suite_coverage():
         lattice = problems.problem_kind(e.problem) == "lattice"
         assert e.kernel in (suites.LATTICE_KERNELS if lattice else suites.DENSE_KERNELS)
         if e.backend == "pallas":
-            assert e.kernel == "tau_leap" and not lattice
+            # only kernel/problem combinations the driver can honor (it now
+            # raises on the rest): dense tau-leap, lattice chromatic gibbs
+            assert (e.kernel == "tau_leap" and not lattice) or (
+                e.kernel == "chromatic_gibbs" and lattice
+            )
+    # the fused lattice sweep is in the measured grid (ROADMAP open item 2)
+    assert any(
+        e.kernel == "chromatic_gibbs" and e.backend == "pallas" for e in entries
+    )
 
 
 def test_suite_registry_and_deterministic_seeding():

@@ -94,6 +94,77 @@ def test_quantize_dense_roundtrip():
     assert codes.dtype == jnp.int8
 
 
+@pytest.mark.parametrize("beta", [0.3, 1.0, 3.0])
+def test_lattice_gibbs_kernel_matches_ref_beta(beta):
+    """Beta-threaded sweep: ref <-> pallas(interpret) bit-parity at every
+    scheduled inverse temperature, with frozen AND clamp masks active."""
+    B, H, W = 4, 12, 12
+    k = jax.random.split(jax.random.key(11), 6)
+    s = _rand_pm1(k[0], (B, H, W))
+    w = jax.random.normal(k[1], (8, H, W)) * 0.5
+    b = jax.random.normal(k[2], (H, W)) * 0.3
+    u = jax.random.uniform(k[3], (4, B, H, W))
+    colors_b = king_color_masks(H, W)
+    frozen_b = jax.random.bernoulli(k[4], 0.25, (H, W))
+    clampv = _rand_pm1(k[5], (H, W))
+    beta_arr = jnp.asarray(beta, jnp.float32)
+
+    got = lg.lattice_gibbs_sweep(
+        s, w, b, u, colors_b.astype(jnp.float32), frozen_b.astype(jnp.float32),
+        clampv, beta_arr, interpret=True, block_batch=2,
+    )
+    want = ref.lattice_gibbs_sweep_ref(s, w, b, u, colors_b, frozen_b, clampv, beta_arr)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # frozen sites read the clamp value regardless of beta
+    np.testing.assert_array_equal(
+        np.asarray(got)[:, np.asarray(frozen_b)],
+        np.broadcast_to(np.asarray(clampv)[np.asarray(frozen_b)], (B, int(frozen_b.sum()))),
+    )
+
+
+def test_lattice_gibbs_beta_default_is_one():
+    """Omitting beta must reproduce the historical beta=1 arithmetic."""
+    B, H, W = 2, 8, 8
+    k = jax.random.split(jax.random.key(12), 4)
+    s = _rand_pm1(k[0], (B, H, W))
+    w = jax.random.normal(k[1], (8, H, W)) * 0.5
+    b = jax.random.normal(k[2], (H, W)) * 0.3
+    u = jax.random.uniform(k[3], (4, B, H, W))
+    colors_b = king_color_masks(H, W)
+    frozen = jnp.zeros((H, W))
+    clampv = -jnp.ones((H, W))
+    got_none = lg.lattice_gibbs_sweep(
+        s, w, b, u, colors_b.astype(jnp.float32), frozen, clampv, interpret=True
+    )
+    got_one = lg.lattice_gibbs_sweep(
+        s, w, b, u, colors_b.astype(jnp.float32), frozen, clampv,
+        jnp.asarray(1.0, jnp.float32), interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got_none), np.asarray(got_one))
+
+
+def test_ops_lattice_gibbs_eager_block_batch_validation():
+    """mode='kernel' with a batch the block doesn't divide must fail fast
+    with a readable ValueError, not an opaque Pallas grid error at trace."""
+    B, H, W = 6, 8, 8
+    s = jnp.ones((B, H, W))
+    w = jnp.zeros((8, H, W))
+    b = jnp.zeros((H, W))
+    u = jnp.zeros((4, B, H, W))
+    colors = king_color_masks(H, W).astype(jnp.float32)
+    frozen = jnp.zeros((H, W))
+    clampv = jnp.ones((H, W))
+    with pytest.raises(ValueError, match="block_batch"):
+        ops.lattice_gibbs_sweep(
+            s, w, b, u, colors, frozen, clampv, mode="kernel", block_batch=4
+        )
+    # a dividing block is fine
+    out = ops.lattice_gibbs_sweep(
+        s, w, b, u, colors, frozen, clampv, mode="kernel", block_batch=3
+    )
+    assert out.shape == (B, H, W)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_lattice_gibbs_dtype_sweep(dtype):
     B, H, W = 4, 16, 16
