@@ -62,7 +62,15 @@ def make_report(tag: str, suite: str, records: list[dict]) -> dict:
 
 
 def report_path(tag: str, out_dir: str = REPO_ROOT) -> str:
-    return os.path.join(out_dir, f"BENCH_{tag}.json")
+    path = os.path.join(out_dir, f"BENCH_{tag}.json")
+    if os.path.abspath(path) == os.path.abspath(NIGHTLY_PATH):
+        raise ValueError(
+            "tag 'nightly' is reserved: BENCH_nightly.json at the repo root "
+            "is the committed trajectory that --append-nightly extends; "
+            "writing a full report there would destroy it (pick another "
+            "tag, e.g. 'nightly-full')"
+        )
+    return path
 
 
 def write_report(report: dict, out_dir: str = REPO_ROOT) -> str:
@@ -106,6 +114,81 @@ def to_baseline(report: dict) -> dict:
     }
 
 
+NIGHTLY_PATH = os.path.join(REPO_ROOT, "BENCH_nightly.json")
+
+
+def _geomean(values) -> float:
+    """Floored geometric mean — the one statistic both the regression gate
+    and the nightly trajectory report, so they can never diverge."""
+    import numpy as np
+
+    return float(np.exp(np.mean(np.log(np.maximum(list(values), 1e-12)))))
+
+
+def nightly_record(report: dict) -> dict:
+    """Trim a full report to one nightly-trajectory point: geomean
+    throughput and TTS hit rate per kernel, plus enough host identity to
+    attribute runner variance. Full per-entry records stay in the run's
+    artifact; the committed trajectory only needs the trend."""
+    import numpy as np
+
+    per_kernel: dict = {}
+    for rec in report["records"]:
+        per_kernel.setdefault(rec["kernel"], []).append(rec)
+    kernels = {}
+    for kernel, recs in sorted(per_kernel.items()):
+        kernels[kernel] = {
+            "entries": len(recs),
+            "geomean_chain_steps_per_s": _geomean(
+                r["chain_steps_per_s"] for r in recs
+            ),
+            "hit_rate": float(np.mean([r["hit_rate"] for r in recs])),
+        }
+    return {
+        "tag": report["tag"],
+        "suite": report["suite"],
+        "created": report.get("created"),
+        "host": {
+            k: report["host"].get(k) for k in ("platform", "python", "jax", "ci")
+        },
+        "n_records": len(report["records"]),
+        "kernels": kernels,
+    }
+
+
+def append_nightly(report: dict, path: str = NIGHTLY_PATH) -> dict:
+    """Append `report`'s trimmed record to the committed nightly trajectory.
+
+    The trajectory file holds {"schema_version", "records": [...]} ordered
+    oldest-first — successive nightly runs make runner variance visible
+    instead of leaving reviewers to guess it from two baselines.
+    """
+    if os.path.exists(path):
+        with open(path) as f:
+            trajectory = json.load(f)
+        version = trajectory.get("schema_version")
+        if version != SCHEMA_VERSION:
+            raise ValueError(
+                f"{path}: schema_version {version!r} != supported {SCHEMA_VERSION}"
+            )
+        # Full suite reports share schema_version and a "records" key;
+        # appending onto one would silently destroy the trajectory. Trimmed
+        # trajectory records are distinguishable by their "kernels" rollup.
+        if any("kernels" not in r for r in trajectory["records"]):
+            raise ValueError(
+                f"{path} holds full per-entry records, not a nightly "
+                "trajectory — refusing to append (was a full report written "
+                "over the trajectory file?)"
+            )
+    else:
+        trajectory = {"schema_version": SCHEMA_VERSION, "records": []}
+    trajectory["records"].append(nightly_record(report))
+    with open(path, "w") as f:
+        json.dump(trajectory, f, indent=1, sort_keys=True, allow_nan=False)
+        f.write("\n")
+    return trajectory
+
+
 def compare_to_baseline(
     report: dict, baseline: dict, threshold: float = DEFAULT_THRESHOLD
 ) -> tuple[bool, dict]:
@@ -132,9 +215,7 @@ def compare_to_baseline(
     missing = sorted(set(base) - report_ids)
 
     if ratios:
-        import numpy as np
-
-        geomean = float(np.exp(np.mean(np.log(np.maximum(list(ratios.values()), 1e-12)))))
+        geomean = _geomean(ratios.values())
         passed = geomean >= 1.0 - threshold
         error = None
     else:

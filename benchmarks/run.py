@@ -19,8 +19,10 @@
         baseline without running anything. A report produced in CI carries
         host.ci=true, which arms the hard regression gate.
 
-    PYTHONPATH=src python -m benchmarks.run --suite full --tag nightly
-        The nightly suite.
+    PYTHONPATH=src python -m benchmarks.run --suite full --tag nightly-full --append-nightly
+        The nightly suite; --append-nightly extends the committed
+        BENCH_nightly.json trajectory with a trimmed per-kernel record.
+        (The tag "nightly" itself is reserved for the trajectory file.)
 
     PYTHONPATH=src python -m benchmarks.run --figures [--only fig3a] [--fast]
         The legacy per-paper-figure benchmarks (CSV to stdout).
@@ -58,6 +60,11 @@ def main(argv: list[str] | None = None) -> int:
                          "the hard gate")
     ap.add_argument("--threshold", type=float, default=report_mod.DEFAULT_THRESHOLD,
                     help="max allowed geomean throughput drop (default 0.30)")
+    ap.add_argument("--append-nightly", nargs="?", const=report_mod.NIGHTLY_PATH,
+                    default=None, metavar="PATH",
+                    help="append this run's trimmed record (per-kernel geomean "
+                         "throughput + hit rates) to the committed nightly "
+                         "trajectory (default: BENCH_nightly.json)")
     ap.add_argument("--figures", action="store_true",
                     help="run the paper-figure benchmarks instead of a suite")
     ap.add_argument("--only", default=None, help="(--figures) substring filter")
@@ -98,6 +105,11 @@ def main(argv: list[str] | None = None) -> int:
     rep = report_mod.make_report(tag, suite_name, records)
     path = report_mod.write_report(rep, args.out)
     print(f"wrote {path}")
+
+    if args.append_nightly:
+        trajectory = report_mod.append_nightly(rep, args.append_nightly)
+        print(f"appended nightly record #{len(trajectory['records'])} "
+              f"to {args.append_nightly}")
 
     if args.update_baseline:
         with open(args.baseline, "w") as f:

@@ -74,6 +74,7 @@ def run_entry(entry: SuiteEntry, zoo: Optional[problems.ZooProblem] = None) -> d
                 schedule=entry.resolve_schedule(),
                 first_hit=target,
                 backend=entry.backend,
+                unroll=entry.unroll,
             )
         )
         return res, max(time.perf_counter() - t0, 1e-9)
@@ -120,6 +121,7 @@ def run_entry(entry: SuiteEntry, zoo: Optional[problems.ZooProblem] = None) -> d
         "kernel": entry.kernel,
         "kernel_args": dict(entry.kernel_args),
         "backend": entry.backend,
+        "unroll": entry.unroll,
         "schedule": list(entry.schedule) if entry.schedule else None,
         "n_steps": entry.n_steps,
         "n_chains": entry.n_chains,

@@ -54,12 +54,14 @@ class SuiteEntry:
     schedule: Optional[tuple] = ("geometric", 0.5, 2.5)
     kernel_args: tuple = ()  # (("dt", 0.25),) — hashable dict items
     rel_gap: float = 0.05  # first-hit target: ref + rel_gap * |ref|
+    unroll: object = "auto"  # run(unroll=...): event-block size, "auto" | int
 
     @property
     def id(self) -> str:
         args = ",".join(f"{k}={v}" for k, v in self.kernel_args)
         kern = f"{self.kernel}({args})" if args else self.kernel
-        return f"{self.problem}-n{self.size}-s{self.seed}/{kern}/{self.backend}"
+        tail = "" if self.unroll == "auto" else f"/u{self.unroll}"
+        return f"{self.problem}-n{self.size}-s{self.seed}/{kern}/{self.backend}{tail}"
 
     def key(self) -> jax.Array:
         return jax.random.key(stable_seed(self.id))
@@ -124,6 +126,26 @@ def _grid(problem_specs, *, steps_dense, steps_lattice, n_chains, sample_every,
     return entries
 
 
+def _ctmc_site_draw_entries(size: int, *, n_steps: int, n_chains: int,
+                            sample_every: int, seed: int = 0) -> list[SuiteEntry]:
+    """Head-to-head CTMC event-selection entries on one big dense instance:
+    the O(n) categorical draw ("scan") vs the sum-tree descent ("tree"),
+    plus a tree entry with explicit event-block unrolling. unroll is PINNED
+    to 1 on the first two — "auto" would give the tree path an event block
+    at n >= CTMC_TREE_BLOCK_MIN_N while scan stays at 1, confounding the
+    comparison — so the per-event site-draw cost is the only variable;
+    the third entry isolates the event-block effect on top of tree."""
+    common = dict(
+        problem="sk", size=size, seed=seed, kernel="ctmc", backend="ref",
+        n_steps=n_steps, n_chains=n_chains, sample_every=sample_every,
+    )
+    return [
+        SuiteEntry(kernel_args=(("site_draw", "scan"),), unroll=1, **common),
+        SuiteEntry(kernel_args=(("site_draw", "tree"),), unroll=1, **common),
+        SuiteEntry(kernel_args=(("site_draw", "tree"),), unroll=4, **common),
+    ]
+
+
 def smoke_suite() -> list[SuiteEntry]:
     """Tiny CI suite: every zoo family x every compatible kernel, sizes and
     step counts chosen to finish in a few CPU minutes (compiles dominate).
@@ -139,7 +161,7 @@ def smoke_suite() -> list[SuiteEntry]:
     return _grid(
         specs, steps_dense=400, steps_lattice=120, n_chains=4,
         sample_every=20, pallas=True,
-    )
+    ) + _ctmc_site_draw_entries(256, n_steps=400, n_chains=4, sample_every=20)
 
 
 def full_suite() -> list[SuiteEntry]:
@@ -156,7 +178,7 @@ def full_suite() -> list[SuiteEntry]:
     return _grid(
         specs, steps_dense=4000, steps_lattice=800, n_chains=16,
         sample_every=50, pallas=True,
-    )
+    ) + _ctmc_site_draw_entries(512, n_steps=2000, n_chains=8, sample_every=50)
 
 
 SUITES = {"smoke": smoke_suite, "full": full_suite}

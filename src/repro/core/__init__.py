@@ -28,6 +28,7 @@ Public API:
   ising       — problem representations (DenseIsing, LatticeIsing), energies
   glauber     — conditionals, flip rates, sigmoid trims
   sampler_api — SamplerKernel protocol, kernel registry, run() driver
+  event_tree  — sum-tree event selection for the CTMC (build/update/descend)
   samplers    — deprecated wrappers (sync Gibbs, chromatic, tau-leap)
   ctmc        — deprecated wrappers (Gillespie, first-hit) + estimators
   problems    — MaxCut / SK / CAL-letters generators
@@ -42,6 +43,7 @@ from repro.core import (  # noqa: F401
     boltzmann,
     ctmc,
     decision,
+    event_tree,
     glauber,
     ising,
     observables,

@@ -98,9 +98,24 @@ def time_weighted_distribution(run: CTMCRun, n: int) -> jax.Array:
     Event-sampled states form the embedded chain, whose stationary law is
     rate-biased; weighting each visited state by its holding time recovers
     the true Boltzmann distribution (used by fidelity tests/benchmarks).
+
+    The state recorded at times[k] holds until the next event at
+    times[k+1]; the LAST recorded state holds until the end of the run, so
+    its dwell interval is `run.t - run.times[-1]` — appending times[-1]
+    itself (the old code) gave the final state zero weight. With strided
+    sampling that threw away the entire final stride's dwell (~1/n_samples
+    of the run, NaN when only one state was recorded); with sample_every=1
+    the run ends exactly AT the last event (run.t == times[-1]), the final
+    dwell is genuinely censored at zero, and the estimator is unchanged.
+    If every dwell is zero (e.g. a single recorded event under
+    sample_every=1), fall back to the embedded-chain visit counts instead
+    of returning 0/0 NaN.
     """
     bits = (run.samples > 0).astype(jnp.int32)
     codes = jnp.sum(bits * (2 ** jnp.arange(n, dtype=jnp.int32)), axis=-1)
-    dts = jnp.diff(run.times, append=run.times[-1:])
+    t_end = jnp.reshape(jnp.asarray(run.t, run.times.dtype), (1,))
+    dts = jnp.diff(run.times, append=t_end)
     w = jnp.zeros((2**n,)).at[codes].add(dts)
-    return w / jnp.sum(w)
+    counts = jnp.zeros((2**n,)).at[codes].add(1.0)
+    total = jnp.sum(w)
+    return jnp.where(total > 0, w / total, counts / jnp.sum(counts))

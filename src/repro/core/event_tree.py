@@ -1,0 +1,125 @@
+"""Sum-tree (binary indexed tree) event selection for the exact CTMC.
+
+The Gillespie step draws the next flip site with probability proportional
+to its rate lambda_i. Doing that with `jax.random.categorical(log(rates))`
+costs O(n) *random bits* per event (one Gumbel per site); the sum tree
+replaces it with ONE uniform and an O(log n) root-to-leaf descent — the
+standard trick sparse Ising machines use to make per-event work scale with
+degree, not system size.
+
+Layout (Pallas-ready): one flat float32 array of length 2*m, m the next
+power of two >= n.
+
+    tree[0]        unused (keeps 1-based heap indexing: children of k are
+                   2k and 2k+1)
+    tree[1]        root = total rate
+    tree[m : 2m]   leaves: rates, zero-padded beyond n
+
+A power-of-two, pointer-free flat array keeps every level contiguous and
+the descent a fixed log2(m)-step gather chain — the same layout a Pallas
+kernel would hold in VMEM (levels are aligned slices; no host-side
+structure to marshal).
+
+All ops are pure jnp and jit/vmap/scan-safe; `m` is static (derived from
+array shapes), site indices may be traced.
+
+Ops:
+
+    build(rates)           O(n) full rebuild (vectorized level reductions)
+    update(tree, i, rate)  O(log n) single-leaf path update
+    descend(tree, u)       O(log n) draw: leaf index with P(i) = rate_i/total
+    total(tree)            root sum
+    leaves(tree, n)        the first n leaf rates back
+
+For DENSE couplings every local field — hence every rate — changes at each
+flip event, so the per-event "incremental" maintenance degenerates to
+`build` (still one fused O(n) reduction, with no per-site random bits).
+`update` is the O(deg) primitive a sparse-coupling step rule composes
+instead; it is exact against `build` (tested) and ready for a sparse
+problem class.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def leaf_count(n: int) -> int:
+    """Next power of two >= n (static)."""
+    if n < 1:
+        raise ValueError(f"need at least one site, got n={n}")
+    return 1 << (n - 1).bit_length()
+
+
+def tree_size(n: int) -> int:
+    """Length of the flat tree array for n sites."""
+    return 2 * leaf_count(n)
+
+
+def depth(tree: jnp.ndarray) -> int:
+    """Number of descent levels, log2(m) (static, from the array shape)."""
+    m = tree.shape[-1] // 2
+    return m.bit_length() - 1
+
+
+def build(rates: jnp.ndarray) -> jnp.ndarray:
+    """Full O(n) rebuild from a (n,) rate vector.
+
+    Levels are computed bottom-up as pairwise-sum reductions and packed
+    root-first into the flat layout; index 0 carries a zero placeholder.
+    """
+    n = rates.shape[-1]
+    m = leaf_count(n)
+    level = jnp.zeros((m,), rates.dtype).at[:n].set(rates)
+    levels = [level]
+    while levels[-1].shape[0] > 1:
+        levels.append(levels[-1].reshape(-1, 2).sum(axis=-1))
+    return jnp.concatenate([jnp.zeros((1,), rates.dtype)] + levels[::-1])
+
+
+def total(tree: jnp.ndarray) -> jnp.ndarray:
+    """Total rate (the root)."""
+    return tree[1]
+
+
+def leaves(tree: jnp.ndarray, n: int) -> jnp.ndarray:
+    """The (n,) leaf rates."""
+    m = tree.shape[-1] // 2
+    return tree[m : m + n]
+
+
+def update(tree: jnp.ndarray, i: jnp.ndarray, rate: jnp.ndarray) -> jnp.ndarray:
+    """Set leaf i to `rate` and repair the root path: O(log n).
+
+    The whole leaf-to-root index chain is `(m + i) >> level`, so the repair
+    is one vectorized scatter-add of the leaf delta — no loop-carried
+    dependence for a Pallas port to serialize.
+    """
+    m = tree.shape[-1] // 2
+    leaf = m + i
+    delta = rate - tree[leaf]
+    path = leaf >> jnp.arange(depth(tree) + 1)
+    return tree.at[path].add(delta)
+
+
+def descend(tree: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Draw a leaf with P(i) = rate_i / total from ONE uniform u in [0, 1).
+
+    Classic inverse-CDF tree descent: walk down comparing the remaining
+    target mass against the left child's subtree sum. log2(m) fixed
+    iterations (statically unrolled), two gathers each.
+
+    Float addition is not associative, so at subtree boundaries the
+    comparison can land one leaf off (measure ~ulp); callers that must
+    never see a zero-padded leaf clamp the result to n-1. A zero-total
+    tree degenerates to the last leaf — gate on `total(tree)` as the CTMC
+    does with its RATE_FLOOR aliveness check.
+    """
+    target = u * tree[1]
+    idx = jnp.asarray(1, jnp.int32)
+    m = tree.shape[-1] // 2
+    for _ in range(depth(tree)):
+        left = tree[2 * idx]
+        go_right = target >= left
+        target = jnp.where(go_right, target - left, target)
+        idx = 2 * idx + go_right.astype(jnp.int32)
+    return idx - m

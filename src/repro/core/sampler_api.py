@@ -30,7 +30,10 @@ Kernels implemented here, registered by name for config/benchmark selection:
         form dispatches to the Pallas `tau_leap_step` kernel via
         `backend="pallas"` (int8 MXU matmul, fused flip epilogue).
     "ctmc"              — the exact event-driven CTMC (Gillespie); one step =
-        one flip event, stochastic model-time advance.
+        one flip event, stochastic model-time advance.  `site_draw` selects
+        event selection: the O(n) categorical ("scan") or the sum-tree
+        descent ("tree": ONE uniform + O(log n), tree maintained in the
+        kernel state — see `repro.core.event_tree`); "auto" picks by size.
 
 Driver:
 
@@ -58,7 +61,7 @@ from typing import Any, NamedTuple, Optional, Protocol, Union, runtime_checkable
 import jax
 import jax.numpy as jnp
 
-from repro.core import glauber
+from repro.core import event_tree, glauber
 from repro.core.ising import DenseIsing, LatticeIsing, king_color_masks
 
 
@@ -190,11 +193,16 @@ def _tau_leap_flip(s, h, key, dt, trim, frozen):
     return jnp.where(flips, -s, s)
 
 
-def resolve_schedule(schedule: ScheduleLike, n_steps: int) -> jax.Array:
+def resolve_schedule(
+    schedule: ScheduleLike, n_steps: int, n_chains: Optional[int] = None
+) -> jax.Array:
     """Normalize any accepted schedule form to a beta array.
 
     Returns (n_steps,) — or (n_chains, n_steps) when given a 2D array of
-    per-chain schedules."""
+    per-chain schedules. When `n_chains` is given (as `run()` does), a 2D
+    schedule's row count is validated against it HERE, with an error naming
+    both numbers — not left to surface as a vmap axis error deep in the
+    driver."""
     if schedule is None:
         return jnp.ones((n_steps,), jnp.float32)
     if isinstance(schedule, Schedule):
@@ -204,8 +212,24 @@ def resolve_schedule(schedule: ScheduleLike, n_steps: int) -> jax.Array:
     betas = jnp.asarray(schedule, jnp.float32)
     if betas.ndim == 0:  # numpy/jax scalar: constant schedule
         return jnp.full((n_steps,), betas)
+    if betas.ndim > 2:
+        raise ValueError(
+            f"schedule must be scalar, (n_steps,), or (n_chains, n_steps); "
+            f"got shape {betas.shape}"
+        )
     if betas.shape[-1] != n_steps:
         raise ValueError(f"schedule length {betas.shape[-1]} != n_steps {n_steps}")
+    if betas.ndim == 2 and n_chains is not None:
+        if n_chains == 1:
+            raise ValueError(
+                f"per-chain schedule of shape {betas.shape} requires "
+                f"n_chains > 1 (got n_chains=1)"
+            )
+        if betas.shape[0] != n_chains:
+            raise ValueError(
+                f"per-chain schedule has {betas.shape[0]} rows but run() was "
+                f"asked for n_chains={n_chains}"
+            )
     return betas
 
 
@@ -408,53 +432,132 @@ class TauLeap:
 # Total-rate floor for the CTMC: below this the chain is treated as frozen
 # (the dwell time is clamped to ~1e30 and no flip is performed). Shared by
 # the denominator clamp and the aliveness test; above it the dwell time and
-# the exact-log categorical site draw are both unclamped and exact.
+# the site draw (exact-log categorical or sum-tree descent) are both
+# unclamped and exact.
 RATE_FLOOR = 1e-30
+
+# site_draw="auto" switches to the sum-tree draw at this problem size. The
+# tree wins on CPU at every measured size (its draw needs ONE uniform vs one
+# Gumbel per site), but below this the scan draw is already cheap and "auto"
+# keeps the historical random stream that small-scale statistical tests and
+# the legacy gillespie() wrappers pinned.
+TREE_SITE_DRAW_MIN_N = 64
+
+# Event-block size "auto" unrolling picks for the tree path on big problems
+# (see CTMC.preferred_unroll).
+CTMC_TREE_BLOCK_EVENTS = 2
+CTMC_TREE_BLOCK_MIN_N = 512
 
 
 @register_kernel("ctmc")
-@partial(jax.tree_util.register_dataclass, data_fields=(), meta_fields=("lambda0",))
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=(),
+    meta_fields=("lambda0", "site_draw"),
+)
 @dataclasses.dataclass(frozen=True)
 class CTMC:
     """Exact event-driven continuous-time Glauber dynamics (Gillespie/SSA).
     One step = one flip event: Exp(sum_i lambda_i) waiting time, site drawn
     proportionally to lambda_i = lambda0 * sigma(2 beta h_i s_i). The
     embedded chain is statistically exact — the fidelity reference for the
-    tau-leap kernel and the hardware. Incremental fields: O(n) per event."""
+    tau-leap kernel and the hardware. Incremental fields: O(n) per event.
+
+    site_draw selects the event-selection mechanism (statistically
+    identical laws, different random streams):
+
+      "scan" — `jax.random.categorical` over log(rates): one Gumbel per
+          site per event, O(n) random bits. The historical path.
+      "tree" — `event_tree` sum-tree: the draw costs ONE uniform and an
+          O(log n) descent. aux carries (h, tree) where the tree is, by
+          definition, the rate tree the state's MOST RECENT event was drawn
+          from (pre-flip rates at that event's beta) in its flat
+          Pallas-ready layout — it fixes the tree-path state layout for the
+          planned sparse O(deg) incremental step rule. step() rebuilds
+          before every draw (with dense couplings every rate changes per
+          event and a scheduled beta rescales every leaf): one fused O(n)
+          build, no per-site randomness — the expensive part of "scan".
+      "auto" — "tree" for n >= TREE_SITE_DRAW_MIN_N else "scan".
+    """
 
     lambda0: float = 1.0
+    site_draw: str = "auto"  # "scan" | "tree" | "auto"
+
+    def resolved_site_draw(self, problem) -> str:
+        """The concrete draw mechanism for this problem size (static)."""
+        if self.site_draw not in ("scan", "tree", "auto"):
+            raise ValueError(
+                f"site_draw must be 'scan' | 'tree' | 'auto', got {self.site_draw!r}"
+            )
+        if self.site_draw == "auto":
+            return "tree" if problem.n >= TREE_SITE_DRAW_MIN_N else "scan"
+        return self.site_draw
+
+    def preferred_unroll(self, problem) -> int:
+        """Event-block size for run(unroll="auto"): amortize the scan body
+        over a few events on problems big enough that per-event overhead
+        shows; 1 elsewhere (small problems lose to the larger program)."""
+        if (
+            self.resolved_site_draw(problem) == "tree"
+            and problem.n >= CTMC_TREE_BLOCK_MIN_N
+        ):
+            return CTMC_TREE_BLOCK_EVENTS
+        return 1
 
     def init(self, problem: DenseIsing, key, s0=None) -> KernelState:
         if s0 is None:
             s0 = random_init(key, state_shape(problem))
+        h = problem.local_fields(s0)
+        if self.resolved_site_draw(problem) == "tree":
+            # Tree at beta=1: fixes the aux pytree structure (see the class
+            # docstring for the carried tree's exact meaning); step()
+            # rebuilds at the step's actual beta before every draw.
+            rates = self.lambda0 * glauber.flip_prob(h, s0)
+            aux = (h, event_tree.build(rates))
+        else:
+            aux = h
         return KernelState(
-            s=s0,
-            t=jnp.asarray(0.0, jnp.float32),
-            e=problem.energy(s0),
-            aux=problem.local_fields(s0),
+            s=s0, t=jnp.asarray(0.0, jnp.float32), e=problem.energy(s0), aux=aux
         )
 
     def step(self, problem: DenseIsing, state, key, beta) -> KernelState:
-        s, h = state.s, state.aux
+        tree_draw = self.resolved_site_draw(problem) == "tree"
+        s = state.s
+        h = state.aux[0] if tree_draw else state.aux
         k_dt, k_site = jax.random.split(key)
         rates = self.lambda0 * glauber.flip_prob(beta * h, s)
         # At large beta every sigma(2 beta h_i s_i) underflows toward 0 in a
         # frozen cold chain. Dividing by the raw sum would give dt=inf (NaN
         # model time), so clamp the denominator and suppress the flip below
-        # RATE_FLOOR. log(rates) without an additive floor keeps the site
-        # draw exactly proportional however small the rates get (log(0) is
-        # -inf = zero probability; an additive floor would flip a near-
-        # uniformly random site once rates drop near it); all-zero rates
-        # degenerate to site 0, which `alive` then discards.
-        total = jnp.sum(rates)
+        # RATE_FLOOR — identically on both draw paths.
+        if tree_draw:
+            # Rates depend on beta through the sigmoid, so a scheduled beta
+            # invalidates every leaf: rebuild at the step's beta (for dense
+            # couplings all n fields change per event anyway — the O(deg)
+            # event_tree.update path is for sparse step rules). Zero-total
+            # trees degenerate to the last leaf; the rounding clamp to n-1
+            # also covers it, and `alive` then discards the flip.
+            tree = event_tree.build(rates)
+            total = event_tree.total(tree)
+            i = jnp.minimum(
+                event_tree.descend(tree, jax.random.uniform(k_site)), problem.n - 1
+            )
+        else:
+            # log(rates) without an additive floor keeps the site draw
+            # exactly proportional however small the rates get (log(0) is
+            # -inf = zero probability; an additive floor would flip a near-
+            # uniformly random site once rates drop near it); all-zero rates
+            # degenerate to site 0, which `alive` then discards.
+            total = jnp.sum(rates)
+            i = jax.random.categorical(k_site, jnp.log(rates))
         alive = total > RATE_FLOOR
         dt = jax.random.exponential(k_dt) / jnp.maximum(total, RATE_FLOOR)
-        i = jax.random.categorical(k_site, jnp.log(rates))
         delta = jnp.where(alive, -2.0 * s[i], 0.0)
         e = state.e + delta * h[i]
         h = h + problem.J[:, i] * delta
         s = s.at[i].add(delta)
-        return KernelState(s=s, t=state.t + dt, e=e, aux=h)
+        aux = (h, tree) if tree_draw else h
+        return KernelState(s=s, t=state.t + dt, e=e, aux=aux)
 
 
 # ---------------------------------------------------------------------------
@@ -544,8 +647,17 @@ def _resolve_backend(backend: Optional[str], kernel=None, problem=None) -> Optio
     return backend
 
 
-def _run_core(problem, kernel, key, s0, betas, e_target, *, n_steps, sample_every, track_hit):
-    """Single-chain scan: the one loop every sampler entry point shares."""
+def _run_core(
+    problem, kernel, key, s0, betas, e_target, *,
+    n_steps, sample_every, track_hit, unroll=1,
+):
+    """Single-chain scan: the one loop every sampler entry point shares.
+
+    `unroll` is the event-block size: each `lax.scan` iteration runs that
+    many kernel steps back to back (lax.scan body unrolling), amortizing
+    per-iteration loop overhead without changing a single drawn number —
+    keys and betas are pre-split per step either way, so results are
+    bit-identical for every unroll."""
     if s0 is None:
         key, k_init = jax.random.split(key)
     else:
@@ -571,13 +683,16 @@ def _run_core(problem, kernel, key, s0, betas, e_target, *, n_steps, sample_ever
     carry = (state, t_hit0, init_hit)
 
     track_e = state.e is not None  # static: kernels maintain e incrementally or never
+    inner = lambda carry, xs, length: jax.lax.scan(
+        step_fn, carry, xs, unroll=max(1, min(unroll, length))
+    )
     if sample_every > 0:
         n_samples = n_steps // sample_every
         m = n_samples * sample_every
         blk = lambda x: x[:m].reshape((n_samples, sample_every) + x.shape[1:])
 
         def block(carry, inp):
-            carry, _ = jax.lax.scan(step_fn, carry, inp)
+            carry, _ = inner(carry, inp, sample_every)
             st = carry[0]
             return carry, (st.s, st.t, st.e if track_e else ())
 
@@ -585,15 +700,18 @@ def _run_core(problem, kernel, key, s0, betas, e_target, *, n_steps, sample_ever
             block, carry, (blk(keys), blk(betas))
         )
         if m < n_steps:  # remainder steps after the last observation
-            carry, _ = jax.lax.scan(step_fn, carry, (keys[m:], betas[m:]))
+            carry, _ = inner(carry, (keys[m:], betas[m:]), n_steps - m)
         if not track_e:
             energies = jax.vmap(problem.energy)(samples)
     else:
-        carry, _ = jax.lax.scan(step_fn, carry, (keys, betas))
+        carry, _ = inner(carry, (keys, betas), n_steps)
         st = carry[0]
         samples = jnp.zeros((0,) + st.s.shape, st.s.dtype)
         times = jnp.zeros((0,), jnp.float32)
-        energies = jnp.zeros((0,), st.s.dtype)
+        # e0 has the energy dtype both recording branches produce (st.e or
+        # problem.energy) — NOT the state dtype, which silently diverged
+        # from the sampling branches' float32 energies.
+        energies = jnp.zeros((0,), e0.dtype)
 
     state, t_hit, hit = carry
     return RunResult(
@@ -607,24 +725,44 @@ def _run_core(problem, kernel, key, s0, betas, e_target, *, n_steps, sample_ever
     )
 
 
-@partial(jax.jit, static_argnames=("n_steps", "sample_every", "track_hit"))
-def _run_single(problem, kernel, key, s0, betas, e_target, n_steps, sample_every, track_hit):
+@partial(jax.jit, static_argnames=("n_steps", "sample_every", "track_hit", "unroll"))
+def _run_single(
+    problem, kernel, key, s0, betas, e_target, n_steps, sample_every, track_hit, unroll
+):
     return _run_core(
         problem, kernel, key, s0, betas, e_target,
-        n_steps=n_steps, sample_every=sample_every, track_hit=track_hit,
+        n_steps=n_steps, sample_every=sample_every, track_hit=track_hit, unroll=unroll,
     )
 
 
-@partial(jax.jit, static_argnames=("n_steps", "sample_every", "track_hit", "n_chains"))
-def _run_batched(problem, kernel, keys, s0, betas, e_target, n_steps, sample_every, track_hit, n_chains):
+@partial(
+    jax.jit,
+    static_argnames=("n_steps", "sample_every", "track_hit", "n_chains", "unroll"),
+)
+def _run_batched(
+    problem, kernel, keys, s0, betas, e_target, n_steps, sample_every, track_hit,
+    n_chains, unroll,
+):
     def one(key, s0_c, betas_c):
         return _run_core(
             problem, kernel, key, s0_c, betas_c, e_target,
             n_steps=n_steps, sample_every=sample_every, track_hit=track_hit,
+            unroll=unroll,
         )
 
     in_axes = (0, None if s0 is None else 0, 0 if betas.ndim == 2 else None)
     return jax.vmap(one, in_axes=in_axes)(keys, s0, betas)
+
+
+def _resolve_unroll(unroll, kernel, problem) -> int:
+    """Resolve the event-block size: "auto" asks the kernel (CTMC blocks
+    events on big problems), an int is validated and used as-is."""
+    if unroll == "auto":
+        fn = getattr(kernel, "preferred_unroll", None)
+        return fn(problem) if fn is not None else 1
+    if not isinstance(unroll, int) or isinstance(unroll, bool) or unroll < 1:
+        raise ValueError(f"unroll must be 'auto' or an int >= 1, got {unroll!r}")
+    return unroll
 
 
 def run(
@@ -639,6 +777,7 @@ def run(
     sample_every: int = 0,
     first_hit: Optional[Any] = None,
     backend: Optional[str] = None,
+    unroll: Union[int, str] = "auto",
     timeit: bool = False,
 ) -> RunResult:
     """Run `n_steps` of `kernel` on `problem` — the single sampling driver.
@@ -662,6 +801,12 @@ def run(
         on TPU, refs elsewhere). Requesting "pallas" on a kernel or
         kernel/problem combination without Pallas support raises ValueError
         — no silent ref fallback.
+      unroll: event-block size — how many kernel steps each `lax.scan`
+        iteration runs back to back, amortizing per-iteration loop overhead
+        (the per-event cost that dominates small CTMC problems). Results
+        are bit-identical for every unroll (keys/betas are pre-split per
+        step). "auto" asks the kernel (`preferred_unroll(problem)`; CTMC
+        blocks events on big tree-draw problems, everything else stays 1).
       timeit: measure wall-clock throughput — the call runs twice (compile
         pass then steady-state pass, identical results: same key) and the
         result carries a `RunTiming` in `.timing`. One-shot convenience;
@@ -674,23 +819,21 @@ def run(
     if resolved is not None and hasattr(kernel, "backend") and kernel.backend != resolved:
         kernel = dataclasses.replace(kernel, backend=resolved)
 
-    betas = resolve_schedule(schedule, n_steps)
+    betas = resolve_schedule(schedule, n_steps, n_chains)
     track_hit = first_hit is not None
     e_target = jnp.asarray(first_hit if track_hit else jnp.inf, jnp.float32)
+    unroll = _resolve_unroll(unroll, kernel, problem)
 
     if n_chains == 1:
-        if betas.ndim != 1:
-            raise ValueError("per-chain schedule requires n_chains > 1")
         call = lambda: _run_single(
-            problem, kernel, key, s0, betas, e_target, n_steps, sample_every, track_hit
+            problem, kernel, key, s0, betas, e_target, n_steps, sample_every,
+            track_hit, unroll,
         )
     else:
-        if betas.ndim == 2 and betas.shape[0] != n_chains:
-            raise ValueError(f"schedule has {betas.shape[0]} rows for {n_chains} chains")
         keys = jax.random.split(key, n_chains)
         call = lambda: _run_batched(
-            problem, kernel, keys, s0, betas, e_target, n_steps, sample_every, track_hit,
-            n_chains,
+            problem, kernel, keys, s0, betas, e_target, n_steps, sample_every,
+            track_hit, n_chains, unroll,
         )
 
     if not timeit:

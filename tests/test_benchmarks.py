@@ -48,6 +48,31 @@ def test_smoke_suite_coverage():
     )
 
 
+def test_ctmc_site_draw_entries_in_suites():
+    """Both CTMC event-selection paths (and an event-block entry) are
+    measured head-to-head on one big dense instance in every suite."""
+    for suite in (suites.smoke_suite(), suites.full_suite()):
+        ctmc_entries = [e for e in suite if e.kernel == "ctmc" and e.kernel_args]
+        draws = {dict(e.kernel_args).get("site_draw") for e in ctmc_entries}
+        assert {"scan", "tree"} <= draws
+        assert any(e.unroll == 4 for e in ctmc_entries)
+        sizes = {e.size for e in ctmc_entries}
+        assert max(sizes) >= 256
+        # the head-to-head trio shares instance/steps/chains: the site draw
+        # (and the event block) is the only variable
+        assert len({(e.problem, e.size, e.seed, e.n_steps, e.n_chains)
+                    for e in ctmc_entries}) == 1
+    # an explicit unroll is part of the record identity
+    a = _tiny_entry(problem="sk", size=6, kernel="ctmc",
+                    kernel_args=(("site_draw", "tree"),))
+    b = _tiny_entry(problem="sk", size=6, kernel="ctmc",
+                    kernel_args=(("site_draw", "tree"),), unroll=4)
+    assert a.id != b.id and b.id.endswith("/u4")
+    rec = runner.run_entry(b)
+    assert rec["unroll"] == 4
+    json.dumps(rec)
+
+
 def test_suite_registry_and_deterministic_seeding():
     assert set(suites.SUITES) >= {"smoke", "full"}
     with pytest.raises(KeyError):
@@ -234,6 +259,84 @@ def test_cli_baseline_from_adopts_report(tmp_path, monkeypatch, capsys):
     blob = json.loads(out_base.read_text())
     assert blob["host"]["ci"] is True and blob["tag"] == "ci-artifact"
     assert "ARMED" in capsys.readouterr().out
+
+
+def _fake_full_report() -> dict:
+    recs = []
+    for kernel, tp, hit in (("ctmc", 100.0, 1.0), ("ctmc", 400.0, 0.5),
+                            ("tau_leap", 200.0, 0.25)):
+        recs.append({
+            "id": f"{kernel}-{tp}", "kernel": kernel, "chain_steps_per_s": tp,
+            "steps_per_s": tp, "wall_s": 1.0, "hit_rate": hit,
+        })
+    return report_mod.make_report("nightly", "full", recs)
+
+
+def test_nightly_record_trims_per_kernel():
+    rec = report_mod.nightly_record(_fake_full_report())
+    assert rec["suite"] == "full" and rec["n_records"] == 3
+    k = rec["kernels"]
+    assert set(k) == {"ctmc", "tau_leap"}
+    assert k["ctmc"]["entries"] == 2
+    assert k["ctmc"]["geomean_chain_steps_per_s"] == pytest.approx(200.0)
+    assert k["ctmc"]["hit_rate"] == pytest.approx(0.75)
+    json.dumps(rec)
+
+
+def test_append_nightly_trajectory(tmp_path):
+    """Repeated appends grow the committed trajectory oldest-first; a
+    schema mismatch refuses instead of silently mixing record shapes."""
+    path = str(tmp_path / "BENCH_nightly.json")
+    t1 = report_mod.append_nightly(_fake_full_report(), path)
+    assert len(t1["records"]) == 1
+    t2 = report_mod.append_nightly(_fake_full_report(), path)
+    assert len(t2["records"]) == 2
+    on_disk = json.loads(open(path).read())
+    assert on_disk["schema_version"] == report_mod.SCHEMA_VERSION
+    assert [r["tag"] for r in on_disk["records"]] == ["nightly", "nightly"]
+    (tmp_path / "BENCH_nightly.json").write_text(
+        json.dumps({"schema_version": 1, "records": []})
+    )
+    with pytest.raises(ValueError, match="schema_version"):
+        report_mod.append_nightly(_fake_full_report(), path)
+
+
+def test_nightly_trajectory_collision_guards(tmp_path):
+    """The committed trajectory file must be unclobberable: the 'nightly'
+    report tag is reserved (writing a FULL report to BENCH_nightly.json at
+    the repo root destroyed the trajectory before append_nightly read it),
+    and append_nightly refuses a file holding full per-entry records."""
+    with pytest.raises(ValueError, match="reserved"):
+        report_mod.report_path("nightly")
+    with pytest.raises(ValueError, match="reserved"):
+        report_mod.write_report(report_mod.make_report("nightly", "full", []))
+    # other out_dirs are fine — only the repo-root trajectory path is special
+    assert report_mod.report_path("nightly", str(tmp_path)).endswith("BENCH_nightly.json")
+    assert report_mod.report_path("nightly-full").endswith("BENCH_nightly-full.json")
+    # a full report written where the trajectory should be -> refuse append
+    # (the fake report's tag IS "nightly", so this lands on the exact name)
+    full_path = report_mod.write_report(_fake_full_report(), str(tmp_path))
+    assert full_path.endswith("BENCH_nightly.json")
+    with pytest.raises(ValueError, match="full per-entry records"):
+        report_mod.append_nightly(_fake_full_report(), full_path)
+
+
+def test_committed_nightly_trajectory_is_seeded():
+    """The repo ships a valid BENCH_nightly.json for the workflow to extend."""
+    assert json.loads(open(report_mod.NIGHTLY_PATH).read())["records"]
+
+
+def test_cli_append_nightly(tmp_path, monkeypatch):
+    monkeypatch.setitem(suites.SUITES, "tiny", lambda: [_tiny_entry()])
+    path = tmp_path / "BENCH_nightly.json"
+    rc = run_cli.main([
+        "--suite", "tiny", "--tag", "t0", "--out", str(tmp_path),
+        "--append-nightly", str(path),
+    ])
+    assert rc == 0
+    blob = json.loads(path.read_text())
+    assert len(blob["records"]) == 1
+    assert blob["records"][0]["kernels"]["tau_leap"]["entries"] == 1
 
 
 def test_cli_smoke_suite_conflict():

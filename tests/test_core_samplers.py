@@ -77,6 +77,51 @@ def test_gillespie_time_weighted_converges(small_problem):
     assert tv(w, p_exact) < 0.03
 
 
+def test_time_weighted_final_dwell_regression():
+    """Regression: the LAST visited state dwells run.t - times[-1]; the old
+    `append=times[-1:]` gave it zero weight. On a hand-built 2-spin run the
+    bias is exact: state A holds [1, 3), state B holds [3, 7) -> weights
+    (1/3, 2/3), where the old code returned (1, 0)."""
+    run = ctmc.CTMCRun(
+        s=jnp.asarray([-1.0, 1.0]),
+        t=jnp.asarray(7.0),
+        samples=jnp.asarray([[1.0, 1.0], [-1.0, 1.0]]),
+        times=jnp.asarray([1.0, 3.0]),
+        energies=jnp.zeros((2,)),
+    )
+    w = np.asarray(ctmc.time_weighted_distribution(run, 2))
+    code_a = 0b11  # (+1, +1)
+    code_b = 0b10  # (-1, +1)
+    np.testing.assert_allclose(w[code_a], 2.0 / 6.0, rtol=1e-6)
+    np.testing.assert_allclose(w[code_b], 4.0 / 6.0, rtol=1e-6)
+    assert w.sum() == pytest.approx(1.0)
+
+
+def test_time_weighted_single_observation_is_finite():
+    """Regression: with ONE recorded observation (strided short run) every
+    dwell used to be zero -> 0/0 NaN distribution. The final-dwell fix
+    weights it by the tail interval instead."""
+    rng = np.random.default_rng(3)
+    J = np.asarray([[0.0, -0.8], [-0.8, 0.0]])
+    prob = ising.DenseIsing(J=jnp.asarray(J, jnp.float32), b=jnp.asarray([0.3, -0.1], jnp.float32))
+    s0 = samplers.random_init(jax.random.key(0), (2,))
+    run = ctmc.gillespie(prob, jax.random.key(1), s0, n_events=3, sample_every=2)
+    assert run.samples.shape == (1, 2)
+    assert float(run.t) > float(run.times[-1])  # a real censored tail exists
+    w = np.asarray(ctmc.time_weighted_distribution(run, 2))
+    assert np.all(np.isfinite(w))
+    assert w.sum() == pytest.approx(1.0)
+    assert w.max() == pytest.approx(1.0)  # all mass on the one observed state
+    # sample_every=1 with a single event: run.t == times[-1], so EVERY
+    # dwell is zero — the embedded-chain count fallback must still return
+    # a finite delta on the observed state, not 0/0 NaN
+    run1 = ctmc.gillespie(prob, jax.random.key(2), s0, n_events=1, sample_every=1)
+    w1 = np.asarray(ctmc.time_weighted_distribution(run1, 2))
+    assert np.all(np.isfinite(w1))
+    assert w1.sum() == pytest.approx(1.0)
+    assert w1.max() == pytest.approx(1.0)
+
+
 def test_tau_leap_bias_vanishes(small_problem):
     """TV(dt) decreases as dt shrinks — the paper's delay-skew analogue."""
     prob, p_exact = small_problem

@@ -1,0 +1,122 @@
+"""The CTMC event-selection sum tree: build/update/descend correctness.
+
+The tree must be an exact drop-in for the O(n) categorical draw: leaf sums
+reproduce the rate vector, point updates match full rebuilds bit-for-bit,
+and the inverse-CDF descent partitions [0, 1) into intervals of exactly
+rate_i / total.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import event_tree
+
+
+def _rand_rates(n, seed=0, zero_frac=0.0):
+    rng = np.random.default_rng(seed)
+    r = rng.uniform(0.05, 1.0, n)
+    if zero_frac:
+        r[rng.random(n) < zero_frac] = 0.0
+    return jnp.asarray(r, jnp.float32)
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 7, 8, 13, 64, 100])
+def test_build_layout_and_sums(n):
+    rates = _rand_rates(n, seed=n)
+    tree = np.asarray(event_tree.build(rates))
+    m = event_tree.leaf_count(n)
+    assert tree.shape == (2 * m,) == (event_tree.tree_size(n),)
+    # leaves: rates then zero padding
+    np.testing.assert_array_equal(tree[m : m + n], np.asarray(rates))
+    np.testing.assert_array_equal(tree[m + n :], 0.0)
+    np.testing.assert_array_equal(
+        np.asarray(event_tree.leaves(event_tree.build(rates), n)), np.asarray(rates)
+    )
+    # every internal node is the sum of its children; root is the total
+    for k in range(1, m):
+        np.testing.assert_allclose(tree[k], tree[2 * k] + tree[2 * k + 1], rtol=1e-6)
+    np.testing.assert_allclose(
+        float(event_tree.total(event_tree.build(rates))),
+        float(jnp.sum(rates)),
+        rtol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("n", [5, 8, 33])
+def test_update_matches_rebuild(n):
+    rates = _rand_rates(n, seed=2 * n + 1)
+    tree = event_tree.build(rates)
+    rng = np.random.default_rng(7)
+    for _ in range(12):
+        i = int(rng.integers(0, n))
+        new = float(rng.uniform(0.0, 2.0))
+        rates = rates.at[i].set(new)
+        tree = event_tree.update(tree, jnp.asarray(i), jnp.asarray(new, jnp.float32))
+        np.testing.assert_allclose(
+            np.asarray(tree), np.asarray(event_tree.build(rates)), rtol=2e-6, atol=1e-6
+        )
+
+
+def test_update_is_jit_and_traced_index_safe():
+    rates = _rand_rates(10, seed=3)
+    tree = event_tree.build(rates)
+    upd = jax.jit(event_tree.update)
+    got = upd(tree, jnp.asarray(4), jnp.asarray(0.25, jnp.float32))
+    want = event_tree.build(rates.at[4].set(0.25))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [2, 6, 8, 17])
+def test_descend_is_exact_inverse_cdf(n):
+    """descend(u) must return the leaf whose CDF interval contains
+    u * total — checked against searchsorted over the exact cumsum at many
+    u values, including zero-rate leaves (never selectable)."""
+    rates = _rand_rates(n, seed=n + 100, zero_frac=0.3 if n > 4 else 0.0)
+    rates = rates.at[0].set(0.4)  # keep at least one positive
+    tree = event_tree.build(rates)
+    cdf = np.cumsum(np.asarray(rates, np.float64))
+    us = np.linspace(0.0, 0.999999, 301)
+    got = np.asarray(jax.vmap(lambda u: event_tree.descend(tree, u))(jnp.asarray(us, jnp.float32)))
+    # float32 tree sums vs float64 cumsum can disagree within a few ulps at
+    # interval boundaries; compare against targets nudged off boundaries.
+    want = np.searchsorted(cdf, us * float(np.asarray(tree[1])), side="right")
+    boundary = np.min(np.abs(cdf[None, :] - (us * float(np.asarray(tree[1])))[:, None]), axis=1) < 1e-5
+    ok = (got == np.minimum(want, n - 1)) | boundary
+    assert ok.all(), np.nonzero(~ok)
+    # zero-rate leaves are never drawn (off boundaries)
+    zero = np.asarray(rates) == 0.0
+    drawn = got[~boundary]
+    assert not zero[drawn[drawn < n]].any()
+
+
+def test_descend_distribution_is_proportional():
+    """Many-uniform histogram of descend draws matches rates/total — the
+    statistical contract the CTMC tree path relies on."""
+    rates = jnp.asarray([0.5, 0.0, 0.125, 0.25, 0.125], jnp.float32)
+    tree = event_tree.build(rates)
+    us = jax.random.uniform(jax.random.key(0), (20_000,))
+    idx = np.asarray(jax.vmap(lambda u: event_tree.descend(tree, u))(us))
+    freq = np.bincount(idx, minlength=8) / len(idx)
+    p = np.asarray(rates) / float(np.asarray(rates).sum())
+    np.testing.assert_allclose(freq[:5], p, atol=0.01)
+    assert freq[5:].sum() == 0.0  # padded leaves unreachable
+
+
+def test_zero_total_degenerates_without_nan():
+    """All-zero rates (the frozen cold chain): descent must stay finite and
+    in range so the CTMC's RATE_FLOOR aliveness gate can discard the draw."""
+    tree = event_tree.build(jnp.zeros((6,), jnp.float32))
+    i = int(event_tree.descend(tree, jnp.asarray(0.3, jnp.float32)))
+    assert 0 <= i < event_tree.leaf_count(6)
+    assert float(event_tree.total(tree)) == 0.0
+
+
+def test_static_helpers():
+    assert event_tree.leaf_count(1) == 1
+    assert event_tree.leaf_count(8) == 8
+    assert event_tree.leaf_count(9) == 16
+    assert event_tree.tree_size(5) == 16
+    assert event_tree.depth(event_tree.build(jnp.ones((5,)))) == 3
+    with pytest.raises(ValueError):
+        event_tree.leaf_count(0)

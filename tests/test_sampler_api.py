@@ -5,8 +5,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import ising, problems, sampler_api, samplers
+from repro.core import ctmc, ising, problems, sampler_api, samplers
 from repro.core.sampler_api import (
+    CTMC,
     ChromaticGibbs,
     RandomScanGibbs,
     TauLeap,
@@ -206,8 +207,12 @@ def test_unsupported_backend_requests_raise():
 # beta=12: sum(rates) ~ 2e-36 — subnormal but NONZERO, the window where a
 # floor-dominated categorical used to flip a near-uniform site anyway.
 # beta=500: rates underflow to exactly 0 (the dt=inf -> NaN case).
+# Both site-draw paths must honor the same RATE_FLOOR dwell/suppression
+# semantics: the tree's zero-total descent degenerates to an arbitrary
+# leaf, which `alive` must then discard exactly like the scan path.
+@pytest.mark.parametrize("site_draw", ["scan", "tree"])
 @pytest.mark.parametrize("beta", [12.0, 500.0])
-def test_ctmc_frozen_cold_chain_stays_finite(beta):
+def test_ctmc_frozen_cold_chain_stays_finite(beta, site_draw):
     """Regression: at large beta the total flip rate underflows; the dwell
     time must stay finite (clamped denominator) and NO site may flip — not
     dt=inf -> NaN time, and not a spurious flip/flip-back oscillation."""
@@ -217,8 +222,8 @@ def test_ctmc_frozen_cold_chain_stays_finite(beta):
     s0 = jnp.ones((n,), jnp.float32)  # exact ground state
     # odd n_steps + sample_every=1: a spurious flip/flip-back oscillation
     # would be caught both at the final state and at every recorded sample
-    res = run(prob, "ctmc", jax.random.key(0), n_steps=21, s0=s0,
-              schedule=beta, sample_every=1)
+    res = run(prob, CTMC(site_draw=site_draw), jax.random.key(0), n_steps=21,
+              s0=s0, schedule=beta, sample_every=1)
     assert np.isfinite(float(res.t))
     assert np.all(np.isfinite(np.asarray(res.energies)))
     assert np.all(np.isfinite(np.asarray(res.times)))
@@ -239,6 +244,116 @@ def test_ctmc_incremental_energy_tracks_true_energy():
     recorded = np.asarray(res.energies)
     true = np.asarray(jax.vmap(prob.energy)(res.samples))
     np.testing.assert_allclose(recorded, true, atol=5e-3)
+
+
+def test_ctmc_site_draw_config_and_auto_threshold():
+    small = _dense_problem(n=8)
+    assert CTMC().resolved_site_draw(small) == "scan"
+    big = ising.DenseIsing(
+        J=jnp.zeros((sampler_api.TREE_SITE_DRAW_MIN_N,) * 2),
+        b=jnp.zeros((sampler_api.TREE_SITE_DRAW_MIN_N,)),
+    )
+    assert CTMC().resolved_site_draw(big) == "tree"
+    assert CTMC(site_draw="scan").resolved_site_draw(big) == "scan"
+    with pytest.raises(ValueError, match="site_draw"):
+        run(small, CTMC(site_draw="alias"), jax.random.key(0), n_steps=4)
+    # auto (scan at this size) is bit-compatible with an explicit scan draw
+    r_auto = run(small, "ctmc", jax.random.key(1), n_steps=32, sample_every=4)
+    r_scan = run(small, CTMC(site_draw="scan"), jax.random.key(1), n_steps=32, sample_every=4)
+    np.testing.assert_array_equal(np.asarray(r_auto.samples), np.asarray(r_scan.samples))
+
+
+def test_ctmc_tree_draw_chi_square_exact_boltzmann():
+    """Acceptance: site_draw='tree' is statistically exact — the
+    time-weighted distribution of a long small-n run matches the exact
+    Boltzmann law, and the 'scan' path run with the same budget agrees.
+    Different random streams, same stationary law."""
+    rng = np.random.default_rng(0)
+    n = 5
+    A = rng.normal(0, 0.7, (n, n))
+    J = np.triu(A, 1)
+    J = J + J.T
+    prob = ising.DenseIsing(
+        J=jnp.asarray(J, jnp.float32), b=jnp.asarray(rng.normal(0, 0.4, n), jnp.float32)
+    )
+    _, p_exact = ising.enumerate_boltzmann(prob)
+    p = np.asarray(p_exact, np.float64)
+    n_events = 60_000
+    dists = {}
+    for draw in ("scan", "tree"):
+        res = run(prob, CTMC(site_draw=draw), jax.random.key(7),
+                  n_steps=n_events, sample_every=1)
+        cr = ctmc.CTMCRun.from_result(res)
+        dists[draw] = np.asarray(ctmc.time_weighted_distribution(cr, n), np.float64)
+    for draw, w in dists.items():
+        tv = 0.5 * np.abs(w - p).sum()
+        assert tv < 0.03, f"{draw}: TV={tv}"
+        # chi-square against the exact law; dwell-time weighting inflates
+        # the variance over multinomial, so gate at a generous multiple of
+        # the df=31 critical value rather than the 95% quantile.
+        chi2 = n_events * float(((w - p) ** 2 / p).sum())
+        assert chi2 < 10 * (2 ** n - 1), f"{draw}: chi2={chi2}"
+    # and the two paths agree with each other at the same tolerance
+    assert 0.5 * np.abs(dists["tree"] - dists["scan"]).sum() < 0.03
+
+
+def test_ctmc_tree_multi_chain_and_first_hit():
+    """The tree draw's (h, tree) aux must survive the driver's vmap and
+    first-hit tracking paths."""
+    prob = problems.random_maxcut(16, seed=1)
+    ref = run(prob, "random_scan_gibbs", jax.random.key(9), n_steps=4000, sample_every=50)
+    e_target = float(np.median(np.asarray(ref.energies)))
+    res = run(prob, CTMC(site_draw="tree"), jax.random.key(5), n_steps=500,
+              n_chains=4, first_hit=e_target)
+    assert res.t_hit.shape == (4,) and res.hit.shape == (4,)
+    assert np.asarray(res.hit).any()
+    assert np.all(np.isfinite(np.asarray(res.t_hit)[np.asarray(res.hit)]))
+
+
+def test_unroll_event_blocks_bit_parity():
+    """Acceptance: batched event-block stepping (run(unroll=K)) must not
+    change a single drawn number — keys/betas are pre-split per step, the
+    blocks only amortize lax.scan loop overhead. Checked across striding
+    (incl. a remainder tail), chains, and both CTMC draw paths."""
+    prob = _dense_problem(n=12, seed=3)
+    s0 = sampler_api.random_init(jax.random.key(0), (prob.n,))
+    for kern in (CTMC(site_draw="tree"), CTMC(site_draw="scan"), TauLeap(dt=0.25)):
+        base = run(prob, kern, jax.random.key(1), n_steps=23, s0=s0, sample_every=5)
+        for k in (3, 8):
+            blocked = run(prob, kern, jax.random.key(1), n_steps=23, s0=s0,
+                          sample_every=5, unroll=k)
+            np.testing.assert_array_equal(np.asarray(base.s), np.asarray(blocked.s))
+            np.testing.assert_array_equal(
+                np.asarray(base.samples), np.asarray(blocked.samples)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(base.energies), np.asarray(blocked.energies)
+            )
+    mc = run(prob, CTMC(site_draw="tree"), jax.random.key(2), n_steps=12, n_chains=3,
+             sample_every=4)
+    mc_u = run(prob, CTMC(site_draw="tree"), jax.random.key(2), n_steps=12, n_chains=3,
+               sample_every=4, unroll=4)
+    np.testing.assert_array_equal(np.asarray(mc.samples), np.asarray(mc_u.samples))
+    with pytest.raises(ValueError, match="unroll"):
+        run(prob, CTMC(), jax.random.key(0), n_steps=4, unroll=0)
+    with pytest.raises(ValueError, match="unroll"):
+        run(prob, CTMC(), jax.random.key(0), n_steps=4, unroll="fast")
+
+
+def test_empty_result_dtypes_match_sampling_mode():
+    """Regression: sample_every=0 used to return energies in the STATE
+    dtype while the sampling branches return energy-dtype (float32) — the
+    empty arrays must concatenate cleanly with sampled ones."""
+    prob = _dense_problem(n=8, seed=1)
+    for kern in ("ctmc", "random_scan_gibbs", "tau_leap"):
+        empty = run(prob, kern, jax.random.key(0), n_steps=8)
+        sampled = run(prob, kern, jax.random.key(0), n_steps=8, sample_every=2)
+        assert empty.energies.dtype == sampled.energies.dtype, kern
+        assert empty.times.dtype == sampled.times.dtype, kern
+        assert empty.samples.dtype == sampled.samples.dtype, kern
+        # the concatenation downstream report code does must be a no-op
+        cat = jnp.concatenate([empty.energies, sampled.energies])
+        assert cat.dtype == sampled.energies.dtype
 
 
 def test_auto_backend_is_ref_off_tpu():
@@ -285,10 +400,19 @@ def test_per_chain_schedules():
     )
     e = np.asarray(res.energies)
     assert e[1, -5:].mean() < e[0, -5:].mean()
-    with pytest.raises(ValueError):
+    # a mismatched 2D schedule raises a ValueError naming BOTH numbers up
+    # front — not a vmap axis error deep in the driver
+    with pytest.raises(ValueError, match=r"2 rows.*n_chains=3"):
         run(prob, TauLeap(dt=0.2), jax.random.key(4), n_steps=300, n_chains=3, schedule=betas)
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="n_chains"):
         run(prob, TauLeap(dt=0.2), jax.random.key(4), n_steps=300, schedule=betas)
+    with pytest.raises(ValueError, match="shape"):
+        run(prob, TauLeap(dt=0.2), jax.random.key(4), n_steps=4, n_chains=2,
+            schedule=jnp.ones((2, 2, 4)))
+    # resolve_schedule validates directly when handed the chain count
+    with pytest.raises(ValueError, match=r"5 rows.*n_chains=4"):
+        resolve_schedule(jnp.ones((5, 8)), 8, 4)
+    assert resolve_schedule(jnp.ones((4, 8)), 8, 4).shape == (4, 8)
 
 
 def test_first_hit_multi_chain():
