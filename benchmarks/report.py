@@ -35,6 +35,24 @@ BASELINE_PATH = os.path.join(os.path.dirname(__file__), "baseline.json")
 DEFAULT_THRESHOLD = 0.30
 
 
+def git_commit() -> "str | None":
+    """Commit SHA the report was produced from: GITHUB_SHA in CI, else
+    `git rev-parse HEAD`, else None (e.g. a source tarball)."""
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        import subprocess
+
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10,
+        )
+    except (OSError, subprocess.SubprocessError):
+        return None
+    return out.stdout.strip() or None if out.returncode == 0 else None
+
+
 def host_info() -> dict:
     return {
         "platform": platform.platform(),
@@ -46,6 +64,7 @@ def host_info() -> dict:
         # absolute throughput numbers comparable to later CI runs, and only
         # then does the regression gate fail hard (see compare_to_baseline).
         "ci": bool(os.environ.get("GITHUB_ACTIONS")),
+        "commit": git_commit(),
     }
 
 
@@ -149,19 +168,26 @@ def nightly_record(report: dict) -> dict:
         "suite": report["suite"],
         "created": report.get("created"),
         "host": {
-            k: report["host"].get(k) for k in ("platform", "python", "jax", "ci")
+            k: report["host"].get(k)
+            for k in ("platform", "python", "jax", "ci", "commit")
         },
         "n_records": len(report["records"]),
         "kernels": kernels,
     }
 
 
-def append_nightly(report: dict, path: str = NIGHTLY_PATH) -> dict:
+def append_nightly(report: dict, path: str = NIGHTLY_PATH) -> tuple[dict, bool]:
     """Append `report`'s trimmed record to the committed nightly trajectory.
 
     The trajectory file holds {"schema_version", "records": [...]} ordered
     oldest-first — successive nightly runs make runner variance visible
     instead of leaving reviewers to guess it from two baselines.
+
+    Returns (trajectory, appended). A record whose commit SHA already
+    appears in the trajectory is NOT appended (appended=False, file
+    untouched): nightly re-runs of the same commit (workflow retries,
+    manual dispatches) would otherwise pile up duplicate points and fake
+    runner variance. Records with no SHA (non-git checkouts) always append.
     """
     if os.path.exists(path):
         with open(path) as f:
@@ -182,11 +208,17 @@ def append_nightly(report: dict, path: str = NIGHTLY_PATH) -> dict:
             )
     else:
         trajectory = {"schema_version": SCHEMA_VERSION, "records": []}
-    trajectory["records"].append(nightly_record(report))
+    record = nightly_record(report)
+    sha = record["host"].get("commit")
+    if sha is not None and any(
+        r.get("host", {}).get("commit") == sha for r in trajectory["records"]
+    ):
+        return trajectory, False
+    trajectory["records"].append(record)
     with open(path, "w") as f:
         json.dump(trajectory, f, indent=1, sort_keys=True, allow_nan=False)
         f.write("\n")
-    return trajectory
+    return trajectory, True
 
 
 def compare_to_baseline(

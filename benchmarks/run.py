@@ -107,9 +107,14 @@ def main(argv: list[str] | None = None) -> int:
     print(f"wrote {path}")
 
     if args.append_nightly:
-        trajectory = report_mod.append_nightly(rep, args.append_nightly)
-        print(f"appended nightly record #{len(trajectory['records'])} "
-              f"to {args.append_nightly}")
+        trajectory, appended = report_mod.append_nightly(rep, args.append_nightly)
+        if appended:
+            print(f"appended nightly record #{len(trajectory['records'])} "
+                  f"to {args.append_nightly}")
+        else:
+            print(f"skipped nightly append: commit "
+                  f"{rep['host'].get('commit')} already recorded in "
+                  f"{args.append_nightly}")
 
     if args.update_baseline:
         with open(args.baseline, "w") as f:

@@ -120,6 +120,7 @@ def run_entry(entry: SuiteEntry, zoo: Optional[problems.ZooProblem] = None) -> d
         "n_spins": zoo.n,
         "kernel": entry.kernel,
         "kernel_args": dict(entry.kernel_args),
+        "problem_args": dict(entry.problem_args),
         "backend": entry.backend,
         "unroll": entry.unroll,
         "schedule": list(entry.schedule) if entry.schedule else None,
@@ -149,7 +150,7 @@ def run_suite(entries: list[SuiteEntry], log=print) -> list[dict]:
     cache: dict[tuple, problems.ZooProblem] = {}
     records = []
     for i, entry in enumerate(entries):
-        pkey = (entry.problem, entry.size, entry.seed)
+        pkey = (entry.problem, entry.size, entry.seed, entry.problem_args)
         if pkey not in cache:
             cache[pkey] = entry.make_problem()
         rec = run_entry(entry, cache[pkey])

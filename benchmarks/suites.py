@@ -7,10 +7,14 @@ exactly (modulo wall-clock).
 
 Kernel/problem compatibility (see `repro.core.sampler_api`):
 
-    random_scan_gibbs, ctmc  — dense problems only (ref backend only)
-    chromatic_gibbs          — lattice problems only; also backend="pallas"
-                               (the fused lattice_gibbs_sweep kernel)
-    tau_leap                 — both; dense also under backend="pallas"
+    random_scan_gibbs  — dense and sparse problems (ref backend only)
+    ctmc               — dense and sparse; sparse + site_draw="tree" is the
+                         O(deg log n) incremental-rate path
+    chromatic_gibbs    — lattice problems only; also backend="pallas"
+                         (the fused lattice_gibbs_sweep kernel)
+    colored_gibbs      — sparse problems only; also backend="pallas"
+                         (the neighbor-gather colored sweep kernel)
+    tau_leap           — all kinds; dense also under backend="pallas"
 
 Requesting backend="pallas" on any other combination raises ValueError in
 the driver — the suite grids below only emit honorable entries.
@@ -27,6 +31,12 @@ from repro.core import problems, sampler_api
 
 DENSE_KERNELS = ("random_scan_gibbs", "ctmc", "tau_leap")
 LATTICE_KERNELS = ("chromatic_gibbs", "tau_leap")
+SPARSE_KERNELS = ("colored_gibbs", "ctmc", "tau_leap")
+KERNELS_BY_KIND = {
+    "dense": DENSE_KERNELS,
+    "lattice": LATTICE_KERNELS,
+    "sparse": SPARSE_KERNELS,
+}
 
 
 def stable_seed(s: str) -> int:
@@ -53,15 +63,18 @@ class SuiteEntry:
     sample_every: int = 20
     schedule: Optional[tuple] = ("geometric", 0.5, 2.5)
     kernel_args: tuple = ()  # (("dt", 0.25),) — hashable dict items
+    problem_args: tuple = ()  # generator kwargs, e.g. (("dense", True),)
     rel_gap: float = 0.05  # first-hit target: ref + rel_gap * |ref|
     unroll: object = "auto"  # run(unroll=...): event-block size, "auto" | int
 
     @property
     def id(self) -> str:
+        pargs = ",".join(f"{k}={v}" for k, v in self.problem_args)
+        prob = f"{self.problem}({pargs})" if pargs else self.problem
         args = ",".join(f"{k}={v}" for k, v in self.kernel_args)
         kern = f"{self.kernel}({args})" if args else self.kernel
         tail = "" if self.unroll == "auto" else f"/u{self.unroll}"
-        return f"{self.problem}-n{self.size}-s{self.seed}/{kern}/{self.backend}{tail}"
+        return f"{prob}-n{self.size}-s{self.seed}/{kern}/{self.backend}{tail}"
 
     def key(self) -> jax.Array:
         return jax.random.key(stable_seed(self.id))
@@ -70,7 +83,9 @@ class SuiteEntry:
         return sampler_api.get_kernel(self.kernel, **dict(self.kernel_args))
 
     def make_problem(self) -> problems.ZooProblem:
-        return problems.get_problem(self.problem, self.size, self.seed)
+        return problems.get_problem(
+            self.problem, self.size, self.seed, **dict(self.problem_args)
+        )
 
     def resolve_schedule(self) -> sampler_api.ScheduleLike:
         if self.schedule is None:
@@ -88,9 +103,9 @@ def _grid(problem_specs, *, steps_dense, steps_lattice, n_chains, sample_every,
     """Cross problems with their compatible kernels (and backends)."""
     entries = []
     for name, size, seed in problem_specs:
-        lattice = problems.problem_kind(name) == "lattice"
-        kernels = LATTICE_KERNELS if lattice else DENSE_KERNELS
-        n_steps = steps_lattice if lattice else steps_dense
+        kind = problems.problem_kind(name)
+        kernels = KERNELS_BY_KIND[kind]
+        n_steps = steps_lattice if kind == "lattice" else steps_dense
         for kernel in kernels:
             kernel_args = (("dt", dt),) if kernel == "tau_leap" else ()
             entries.append(
@@ -102,7 +117,7 @@ def _grid(problem_specs, *, steps_dense, steps_lattice, n_chains, sample_every,
             )
             # Pallas entries run in interpret mode off-TPU (correctness and
             # trend signal, not kernel speed) and are shortened accordingly.
-            if pallas and kernel == "tau_leap" and not lattice:
+            if pallas and kernel == "tau_leap" and kind == "dense":
                 entries.append(
                     SuiteEntry(
                         problem=name, size=size, seed=seed, kernel=kernel,
@@ -111,10 +126,11 @@ def _grid(problem_specs, *, steps_dense, steps_lattice, n_chains, sample_every,
                         kernel_args=kernel_args,
                     )
                 )
-            # chromatic sweeps are cheap even interpreted (small lattices,
-            # stencil math): keep the ref entry's step count so per-call
-            # host overhead amortizes and ref/pallas are comparable.
-            if pallas and kernel == "chromatic_gibbs":
+            # chromatic/colored sweeps are cheap even interpreted (small
+            # instances, gather/stencil math): keep the ref entry's step
+            # count so per-call host overhead amortizes and ref/pallas are
+            # comparable.
+            if pallas and kernel in ("chromatic_gibbs", "colored_gibbs"):
                 entries.append(
                     SuiteEntry(
                         problem=name, size=size, seed=seed, kernel=kernel,
@@ -146,6 +162,34 @@ def _ctmc_site_draw_entries(size: int, *, n_steps: int, n_chains: int,
     ]
 
 
+def _sparse_dense_ctmc_entries(size: int, *, n_steps: int, sample_every: int,
+                               seed: int = 0) -> list[SuiteEntry]:
+    """Layout head-to-head: tree-CTMC on the SAME random 3-regular graph in
+    neighbor-list form (O(deg log n) incremental rate repair) vs densified
+    form (O(n) field update + full-rate tree rebuild), plus the dense O(n)
+    categorical scan as the PR-4 reference point.
+
+    Everything except the layout/site-draw is pinned: n_chains=1 because the
+    sparse tree-reuse `cond` turns into a `select` under vmap (both branches
+    execute — see the CTMC docstring), so multi-chain would silently time
+    the rebuild path; unroll=1 so event-block size isn't a confound; a
+    constant-beta schedule so the sparse carry stays on the tree-reuse
+    branch every step.
+    """
+    common = dict(
+        problem="maxcut3r", size=size, seed=seed, kernel="ctmc", backend="ref",
+        n_steps=n_steps, n_chains=1, sample_every=sample_every,
+        schedule=("constant", 1.0), unroll=1,
+    )
+    return [
+        SuiteEntry(kernel_args=(("site_draw", "tree"),), **common),
+        SuiteEntry(kernel_args=(("site_draw", "tree"),),
+                   problem_args=(("dense", True),), **common),
+        SuiteEntry(kernel_args=(("site_draw", "scan"),),
+                   problem_args=(("dense", True),), **common),
+    ]
+
+
 def smoke_suite() -> list[SuiteEntry]:
     """Tiny CI suite: every zoo family x every compatible kernel, sizes and
     step counts chosen to finish in a few CPU minutes (compiles dominate).
@@ -157,11 +201,17 @@ def smoke_suite() -> list[SuiteEntry]:
         ("factorization", 143, 0),
         ("ferromagnet", 8, 0),
         ("boltzmann_ml", 10, 0),
+        ("maxcut3r", 64, 0),
+        ("king", 8, 0),
     ]
-    return _grid(
-        specs, steps_dense=400, steps_lattice=120, n_chains=4,
-        sample_every=20, pallas=True,
-    ) + _ctmc_site_draw_entries(256, n_steps=400, n_chains=4, sample_every=20)
+    return (
+        _grid(
+            specs, steps_dense=400, steps_lattice=120, n_chains=4,
+            sample_every=20, pallas=True,
+        )
+        + _ctmc_site_draw_entries(256, n_steps=400, n_chains=4, sample_every=20)
+        + _sparse_dense_ctmc_entries(1024, n_steps=400, sample_every=20)
+    )
 
 
 def full_suite() -> list[SuiteEntry]:
@@ -174,11 +224,17 @@ def full_suite() -> list[SuiteEntry]:
         ("ferromagnet", 16, 0),
         ("cal", 16, 0),
         ("boltzmann_ml", 16, 0),
+        ("maxcut3r", 128, 0), ("maxcut3r", 256, 1),
+        ("king", 16, 0),
     ]
-    return _grid(
-        specs, steps_dense=4000, steps_lattice=800, n_chains=16,
-        sample_every=50, pallas=True,
-    ) + _ctmc_site_draw_entries(512, n_steps=2000, n_chains=8, sample_every=50)
+    return (
+        _grid(
+            specs, steps_dense=4000, steps_lattice=800, n_chains=16,
+            sample_every=50, pallas=True,
+        )
+        + _ctmc_site_draw_entries(512, n_steps=2000, n_chains=8, sample_every=50)
+        + _sparse_dense_ctmc_entries(1024, n_steps=2000, sample_every=50)
+    )
 
 
 SUITES = {"smoke": smoke_suite, "full": full_suite}

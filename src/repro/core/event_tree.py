@@ -34,9 +34,11 @@ Ops:
 For DENSE couplings every local field — hence every rate — changes at each
 flip event, so the per-event "incremental" maintenance degenerates to
 `build` (still one fused O(n) reduction, with no per-site random bits).
-`update` is the O(deg) primitive a sparse-coupling step rule composes
-instead; it is exact against `build` (tested) and ready for a sparse
-problem class.
+`update` / `update_many` are the O(deg) primitives the sparse-coupling step
+rule composes instead (`SparseIsing` + CTMC site_draw="tree"): after a flip
+only the flipped site and its <= max_deg neighbors change rate, so the
+repair is one vectorized scatter-add over their root paths —
+O(max_deg * log n) per event.
 """
 from __future__ import annotations
 
@@ -87,6 +89,12 @@ def leaves(tree: jnp.ndarray, n: int) -> jnp.ndarray:
     return tree[m : m + n]
 
 
+def leaves_at(tree: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Leaf rates at (possibly repeated, possibly traced) site indices."""
+    m = tree.shape[-1] // 2
+    return tree[m + idx]
+
+
 def update(tree: jnp.ndarray, i: jnp.ndarray, rate: jnp.ndarray) -> jnp.ndarray:
     """Set leaf i to `rate` and repair the root path: O(log n).
 
@@ -99,6 +107,23 @@ def update(tree: jnp.ndarray, i: jnp.ndarray, rate: jnp.ndarray) -> jnp.ndarray:
     delta = rate - tree[leaf]
     path = leaf >> jnp.arange(depth(tree) + 1)
     return tree.at[path].add(delta)
+
+
+def update_many(tree: jnp.ndarray, idx: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+    """Add delta[k] to leaf idx[k] and repair all root paths: O(k log n).
+
+    Unlike `update` this takes leaf DELTAS, not absolute rates, so repeated
+    indices compose additively — callers with padded neighbor lists pass the
+    padding slots with delta = 0 instead of masking the index vector. The
+    k root-to-leaf paths form one (k, log n + 1) index array consumed by a
+    single scatter-add (duplicate targets accumulate, per scatter-add
+    semantics), so shared ancestors — the root appears k times — receive
+    exactly the sum of their subtree deltas.
+    """
+    m = tree.shape[-1] // 2
+    paths = (m + idx)[..., None] >> jnp.arange(depth(tree) + 1)
+    deltas = jnp.broadcast_to(delta[..., None], paths.shape)
+    return tree.at[paths.reshape(-1)].add(deltas.reshape(-1))
 
 
 def descend(tree: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:

@@ -82,10 +82,20 @@ class DenseIsing:
         return jnp.einsum("ij,...j->...i", self.J, s.astype(self.J.dtype)) + self.b
 
     def validate(self) -> None:
+        """Raise ValueError on a malformed instance (non-square or
+        asymmetric J, nonzero diagonal, mismatched b) — the zoo constructors
+        call this so bad instances fail at construction with a clear
+        message, not as a silently-wrong sampler run."""
         J = np.asarray(self.J)
-        assert J.ndim == 2 and J.shape[0] == J.shape[1]
-        np.testing.assert_allclose(J, J.T, atol=1e-6)
-        np.testing.assert_allclose(np.diag(J), 0.0, atol=1e-6)
+        b = np.asarray(self.b)
+        if J.ndim != 2 or J.shape[0] != J.shape[1]:
+            raise ValueError(f"J must be a square matrix, got shape {J.shape}")
+        if b.shape != (J.shape[0],):
+            raise ValueError(f"b shape {b.shape} does not match J shape {J.shape}")
+        if not np.allclose(J, J.T, atol=1e-6):
+            raise ValueError("J must be symmetric (J == J.T)")
+        if not np.allclose(np.diag(J), 0.0, atol=1e-6):
+            raise ValueError("J must have a zero diagonal (no self-coupling)")
 
 
 def conditional_prob_up(h: jax.Array) -> jax.Array:

@@ -45,26 +45,77 @@ import jax.numpy as jnp
 from repro.core.ising import (
     DenseIsing,
     LatticeIsing,
+    king_color_masks,
     lattice_from_pairs,
     KING_OFFSETS,
 )
+from repro.core.sparse import SparseIsing
 
 # Largest n for which exact enumeration (2^n states) is used for references.
 EXACT_ENUM_MAX = 16
 
+# random_maxcut densities at or below this return the neighbor-list
+# SparseIsing layout by default (see the memory-cliff note in its docstring).
+SPARSE_DENSITY_MAX = 0.25
 
-def random_maxcut(n: int, seed: int, density: float = 1.0, weights: str = "unit") -> DenseIsing:
-    """Random (weighted) MaxCut instance as a DenseIsing problem.
+
+def random_maxcut(
+    n: int,
+    seed: int,
+    density: float = 1.0,
+    weights: str = "unit",
+    sparse: "bool | None" = None,
+) -> "DenseIsing | SparseIsing":
+    """Random (weighted) MaxCut instance.
 
     weights: 'unit' -> w=1 edges (the Hamerly/ref-47 benchmark style is dense
     unit MaxCut); 'uniform' -> w ~ U(0,1].
+
+    sparse: layout control. None (default) picks the neighbor-list
+    `SparseIsing` form when density <= SPARSE_DENSITY_MAX and the dense
+    matrix otherwise; True/False force a layout. The instance (graph,
+    weights, energies) is identical either way — only the storage changes.
+
+    Memory cliff: the dense form materializes all n^2 float32 couplings no
+    matter how few edges exist — 4 MB at n=1024 but 17 GB at n=65536 —
+    whereas the sparse form stores O(n * max_deg). Low-density instances
+    used to densify silently; route them through `SparseIsing.from_dense`
+    (as the default now does) before scaling n.
     """
     rng = np.random.default_rng(seed)
     mask = rng.random((n, n)) < density
     w = np.ones((n, n)) if weights == "unit" else rng.random((n, n))
     J = np.triu(mask * w, k=1)
     J = J + J.T
-    return DenseIsing(J=jnp.asarray(J, jnp.float32), b=jnp.zeros((n,), jnp.float32))
+    problem = DenseIsing(J=jnp.asarray(J, jnp.float32), b=jnp.zeros((n,), jnp.float32))
+    if sparse is None:
+        sparse = density <= SPARSE_DENSITY_MAX
+    return SparseIsing.from_dense(problem) if sparse else problem
+
+
+def random_3regular_maxcut(n: int, seed: int) -> SparseIsing:
+    """Unit-weight antiferromagnetic MaxCut on a random 3-regular graph.
+
+    The graph is a random Hamiltonian cycle plus a random perfect matching
+    on the cycle's chords (every vertex gains exactly one chord), so every
+    vertex has degree exactly 3. Requires even n >= 4. Deterministic in
+    `seed`; max_deg == 3, so the greedy coloring uses at most 4 colors.
+    """
+    if n < 4 or n % 2:
+        raise ValueError(f"3-regular graph needs even n >= 4, got {n}")
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n)
+    cycle = {frozenset((int(order[k]), int(order[(k + 1) % n]))) for k in range(n)}
+    for _ in range(1000):
+        perm = rng.permutation(n)
+        pairs = [(int(perm[2 * k]), int(perm[2 * k + 1])) for k in range(n // 2)]
+        if all(frozenset(p) not in cycle for p in pairs):
+            break
+    else:  # pragma: no cover - probability of 1000 failures is negligible
+        raise RuntimeError("failed to sample a matching disjoint from the cycle")
+    edges = [(int(order[k]), int(order[(k + 1) % n]), 1.0) for k in range(n)]
+    edges += [(i, j, 1.0) for i, j in pairs]
+    return SparseIsing.from_edges(n, edges)
 
 
 def sk_instance(n: int, seed: int) -> DenseIsing:
@@ -179,17 +230,18 @@ def greedy_descent_dense(
 
 
 def estimate_reference(
-    problem: Union[DenseIsing, LatticeIsing],
+    problem: Union[DenseIsing, LatticeIsing, SparseIsing],
     seed: int,
     n_restarts: int = 8,
     starts: Any = None,
 ) -> float:
     """Best energy over greedy descents from random (+ optional given) starts.
 
-    Lattice problems descend through their dense form (clamp/dead masks are
-    ignored — zoo lattice instances are unclamped). Deterministic in `seed`.
+    Lattice and sparse problems descend through their dense form (clamp/dead
+    masks are ignored — zoo lattice instances are unclamped). Deterministic
+    in `seed`.
     """
-    dense = problem.to_dense() if isinstance(problem, LatticeIsing) else problem
+    dense = problem if isinstance(problem, DenseIsing) else problem.to_dense()
     J = np.asarray(dense.J, np.float64)
     b = np.asarray(dense.b, np.float64)
     n = dense.n
@@ -215,7 +267,7 @@ class ZooProblem:
 
     name:       registry name of the generator.
     instance:   unique id, e.g. "maxcut-n32-s0" (stable across runs).
-    problem:    DenseIsing | LatticeIsing.
+    problem:    DenseIsing | LatticeIsing | SparseIsing.
     ref_energy: ground-state energy (see ref_kind).
     ref_kind:   "exact" | "planted" | "estimated".
     meta:       generator-specific extras (planted factors, edge counts...).
@@ -223,7 +275,7 @@ class ZooProblem:
 
     name: str
     instance: str
-    problem: Union[DenseIsing, LatticeIsing]
+    problem: Union[DenseIsing, LatticeIsing, SparseIsing]
     ref_energy: float
     ref_kind: str
     meta: dict = dataclasses.field(default_factory=dict)
@@ -234,7 +286,11 @@ class ZooProblem:
 
     @property
     def kind(self) -> str:
-        return "lattice" if isinstance(self.problem, LatticeIsing) else "dense"
+        if isinstance(self.problem, LatticeIsing):
+            return "lattice"
+        if isinstance(self.problem, SparseIsing):
+            return "sparse"
+        return "dense"
 
     def target_energy(self, rel_gap: float) -> float:
         """First-hit target: ref + rel_gap * |ref| (== ref when ref == 0)."""
@@ -248,11 +304,12 @@ PROBLEM_KINDS: dict[str, str] = {}
 def register_problem(name: str, kind: str):
     """Decorator: register a `(size, seed, **kw) -> ZooProblem` generator.
 
-    `kind` ("dense" | "lattice") is registry metadata — benchmark suites use
-    it to pick the compatible kernel set without re-stating it anywhere.
+    `kind` ("dense" | "lattice" | "sparse") is registry metadata — benchmark
+    suites use it to pick the compatible kernel set without re-stating it
+    anywhere.
     """
-    if kind not in ("dense", "lattice"):
-        raise ValueError(f"kind must be 'dense' or 'lattice', got {kind!r}")
+    if kind not in ("dense", "lattice", "sparse"):
+        raise ValueError(f"kind must be 'dense', 'lattice', or 'sparse', got {kind!r}")
 
     def deco(fn):
         PROBLEMS[name] = fn
@@ -271,7 +328,7 @@ def get_problem(name: str, size: int, seed: int = 0, **kw) -> ZooProblem:
 
 
 def problem_kind(name: str) -> str:
-    """Registered kind ("dense" | "lattice") of a zoo problem."""
+    """Registered kind ("dense" | "lattice" | "sparse") of a zoo problem."""
     if name not in PROBLEM_KINDS:
         raise KeyError(f"unknown zoo problem {name!r}; have {sorted(PROBLEM_KINDS)}")
     return PROBLEM_KINDS[name]
@@ -287,10 +344,20 @@ def _dense_reference(problem: DenseIsing, seed: int) -> tuple[float, str]:
     return estimate_reference(problem, seed), "estimated"
 
 
+def _sparse_reference(problem: SparseIsing, seed: int) -> tuple[float, str]:
+    if problem.n <= EXACT_ENUM_MAX:
+        return exact_ground_energy(problem.to_dense()), "exact"
+    return estimate_reference(problem, seed), "estimated"
+
+
 @register_problem("maxcut", kind="dense")
 def maxcut_zoo(size: int, seed: int = 0, density: float = 0.5, weights: str = "unit") -> ZooProblem:
-    """Gset-style random MaxCut: edges drawn i.i.d. with prob `density`."""
-    problem = random_maxcut(size, seed, density=density, weights=weights)
+    """Gset-style random MaxCut: edges drawn i.i.d. with prob `density`.
+
+    Always the dense layout (the registered kind) — the sparse-graph MaxCut
+    workload is "maxcut3r"."""
+    problem = random_maxcut(size, seed, density=density, weights=weights, sparse=False)
+    problem.validate()
     ref, kind = _dense_reference(problem, seed)
     n_edges = int(np.count_nonzero(np.triu(np.asarray(problem.J), k=1)))
     return ZooProblem(
@@ -308,6 +375,7 @@ def maxcut_zoo(size: int, seed: int = 0, density: float = 0.5, weights: str = "u
 def sk_zoo(size: int, seed: int = 0) -> ZooProblem:
     """Sherrington-Kirkpatrick spin glass, J ~ N(0, 1/n)."""
     problem = sk_instance(size, seed)
+    problem.validate()
     ref, kind = _dense_reference(problem, seed)
     return ZooProblem(
         name="sk",
@@ -316,6 +384,66 @@ def sk_zoo(size: int, seed: int = 0) -> ZooProblem:
         ref_energy=ref,
         ref_kind=kind,
         meta={"e_per_spin": ref / size},
+    )
+
+
+@register_problem("maxcut3r", kind="sparse")
+def maxcut3r_zoo(size: int, seed: int = 0, dense: bool = False) -> ZooProblem:
+    """Unit MaxCut on a random 3-regular graph — the sparse workload where
+    neighbor-list layouts pay off (3n/2 edges vs n^2/2 dense slots).
+
+    dense=True returns the SAME graph densified via `to_dense()` (instance
+    id gains a "-dense" suffix) for layout head-to-head benchmarks.
+    """
+    sp = random_3regular_maxcut(size, seed)
+    sp.validate()
+    ref, kind = _sparse_reference(sp, seed)
+    total_w = float(np.sum(sp.deg))  # each unit edge counted twice
+    meta = {
+        "n_edges": int(total_w / 2),
+        "max_deg": sp.max_deg,
+        "n_colors": sp.n_colors,
+        "best_cut": float(0.5 * (total_w / 2 - ref)),
+    }
+    problem: Union[DenseIsing, SparseIsing] = sp.to_dense() if dense else sp
+    suffix = "-dense" if dense else ""
+    return ZooProblem(
+        name="maxcut3r",
+        instance=f"maxcut3r-n{size}-s{seed}{suffix}",
+        problem=problem,
+        ref_energy=ref,
+        ref_kind=kind,
+        meta=meta,
+    )
+
+
+@register_problem("king", kind="sparse")
+def king_zoo(size: int, seed: int = 0) -> ZooProblem:
+    """±J spin glass on the (size x size) king's-move graph in neighbor-list
+    form — the chip topology expressed as a SparseIsing, reusing the exact
+    king 4-coloring (`king_color_masks`) instead of the greedy coloring.
+    """
+    rng = np.random.default_rng(seed)
+    n = size * size
+    edges = []
+    for y in range(size):
+        for x in range(size):
+            for dy, dx in KING_OFFSETS[4:]:  # each undirected pair once
+                yy, xx = y + dy, x + dx
+                if 0 <= yy < size and 0 <= xx < size:
+                    w = float(rng.choice((-1.0, 1.0)))
+                    edges.append((y * size + x, yy * size + xx, w))
+    masks = np.asarray(king_color_masks(size, size)).reshape(4, n)
+    sp = SparseIsing.from_edges(n, edges, color_masks=masks)
+    sp.validate()
+    ref, kind = _sparse_reference(sp, seed)
+    return ZooProblem(
+        name="king",
+        instance=f"king-L{size}-s{seed}",
+        problem=sp,
+        ref_energy=ref,
+        ref_kind=kind,
+        meta={"n_edges": len(edges), "max_deg": sp.max_deg, "n_colors": sp.n_colors},
     )
 
 
@@ -404,6 +532,7 @@ def factorization_zoo(size: int, seed: int = 0) -> ZooProblem:
     """Factor the odd semiprime `size` (seed is ignored — the instance is
     determined by N; it stays in the signature for registry uniformity)."""
     problem, s_planted, meta = factorization_ising(size)
+    problem.validate()
     ref = float(problem.energy(jnp.asarray(s_planted, jnp.float32)))
     return ZooProblem(
         name="factorization",

@@ -24,7 +24,13 @@ Kernels implemented here, registered by name for config/benchmark selection:
         `lattice_gibbs_sweep` call (lattice + weights VMEM-resident), the
         chip's colored update groups; the ref path recomputes the stencil
         field per color phase.
-    "tau_leap"          — the PASS ASYNC model (lattice or dense): every
+    "colored_gibbs"     — chromatic Gibbs on ARBITRARY sparse graphs
+        (`SparseIsing` + its greedy-coloring `color_masks`); one step = one
+        sweep over the color classes with vectorized neighbor gathers.
+        Under `backend="pallas"` the sweep runs as ONE fused
+        `colored_gibbs_sweep` call (neighbor tables VMEM-resident).
+    "tau_leap"          — the PASS ASYNC model (lattice, dense, or sparse;
+        ref path for non-dense): every
         neuron flips independently w.p. 1-exp(-dt*lambda_i) per step of
         model time dt.  dt*lambda0 -> 0 recovers the exact CTMC.  The dense
         form dispatches to the Pallas `tau_leap_step` kernel via
@@ -34,6 +40,8 @@ Kernels implemented here, registered by name for config/benchmark selection:
         event selection: the O(n) categorical ("scan") or the sum-tree
         descent ("tree": ONE uniform + O(log n), tree maintained in the
         kernel state — see `repro.core.event_tree`); "auto" picks by size.
+        On `SparseIsing` the tree path repairs only the <= max_deg affected
+        leaves per event (`event_tree.update_many`): O(deg log n) per flip.
 
 Driver:
 
@@ -63,6 +71,7 @@ import jax.numpy as jnp
 
 from repro.core import event_tree, glauber
 from repro.core.ising import DenseIsing, LatticeIsing, king_color_masks
+from repro.core.sparse import SparseIsing
 
 
 def random_init(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
@@ -73,6 +82,49 @@ def random_init(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
 def state_shape(problem) -> tuple[int, ...]:
     """Natural spin-array shape for a problem."""
     return problem.shape if isinstance(problem, LatticeIsing) else (problem.n,)
+
+
+def problem_kind_of(problem) -> str:
+    """The problem-kind dispatch axis: "dense" | "lattice" | "sparse".
+
+    Kernels declare the kinds they implement via a `problem_kinds` class
+    attribute; `run()` checks the pair up front so an unsupported
+    combination fails with a readable error instead of a shape error deep
+    inside a jitted step function."""
+    if isinstance(problem, LatticeIsing):
+        return "lattice"
+    if isinstance(problem, SparseIsing):
+        return "sparse"
+    return "dense"
+
+
+def kernel_problem_kinds(kernel) -> tuple[str, ...]:
+    """Problem kinds a kernel implements (all three when undeclared)."""
+    return getattr(type(kernel), "problem_kinds", ("dense", "lattice", "sparse"))
+
+
+def check_problem_kind(kernel, problem) -> None:
+    """Raise ValueError when `kernel` does not implement `problem`'s kind."""
+    kinds = kernel_problem_kinds(kernel)
+    kind = problem_kind_of(problem)
+    if kind not in kinds:
+        name = getattr(kernel, "name", type(kernel).__name__)
+        raise ValueError(
+            f"kernel {name!r} does not support {kind!r} problems; "
+            f"supported problem kinds: {kinds}"
+        )
+
+
+def _apply_field_delta(problem, h, i, delta):
+    """Incremental local-field update after s_i changes by `delta`.
+
+    Dense: add the full J row — O(n). Sparse: scatter-add the <= max_deg
+    neighbor contributions — O(max_deg); padded slots carry zero weight so
+    the (duplicate-safe) scatter needs no degree mask. Either way h_i itself
+    is untouched (symmetric J, zero diagonal)."""
+    if isinstance(problem, SparseIsing):
+        return h.at[problem.nbr_idx[i]].add(problem.nbr_w[i] * delta)
+    return h + problem.J[:, i] * delta
 
 
 # ---------------------------------------------------------------------------
@@ -245,11 +297,14 @@ class RandomScanGibbs:
     """Serial random-scan Gibbs on a dense problem — the paper's synchronous
     baseline. One site per step, dt = 1/lambda0 per step (the chip
     comparison runs the serial system at the single-neuron rate).
-    Maintains local fields and energy incrementally: O(n) per step."""
+    Maintains local fields and energy incrementally: O(n) per step for
+    dense problems, O(max_deg) for sparse ones."""
+
+    problem_kinds = ("dense", "sparse")
 
     lambda0: float = 1.0
 
-    def init(self, problem: DenseIsing, key, s0=None) -> KernelState:
+    def init(self, problem, key, s0=None) -> KernelState:
         if s0 is None:
             s0 = random_init(key, state_shape(problem))
         return KernelState(
@@ -259,7 +314,7 @@ class RandomScanGibbs:
             aux=problem.local_fields(s0),
         )
 
-    def step(self, problem: DenseIsing, state, key, beta) -> KernelState:
+    def step(self, problem, state, key, beta) -> KernelState:
         s, h = state.s, state.aux
         k_site, k_flip = jax.random.split(key)
         i = jax.random.randint(k_site, (), 0, problem.n)
@@ -269,7 +324,7 @@ class RandomScanGibbs:
         # dE for changing s_i by delta: delta * h_i (h is the raw, beta-free
         # field including b and the full J row)
         e = state.e + delta * h[i]
-        h = h + problem.J[:, i] * delta  # J symmetric, zero diag: h_i untouched
+        h = _apply_field_delta(problem, h, i, delta)
         s = s.at[i].set(new_si)
         return KernelState(s=s, t=state.t + 1.0 / self.lambda0, e=e, aux=h)
 
@@ -291,9 +346,13 @@ class ChromaticGibbs:
     resident in VMEM; compiled on TPU, interpreted elsewhere). The ref path
     recomputes the full stencil field once per color phase in plain jnp.
     Both paths draw the same per-color uniforms from the same key split, so
-    they agree bit-for-bit in interpret mode."""
+    they agree bit-for-bit in interpret mode.
+
+    Lattice-only: the arbitrary-graph generalization is `colored_gibbs`
+    (sparse problems with `color_masks`)."""
 
     backends = ("ref", "pallas")
+    problem_kinds = ("lattice",)
 
     lambda0: float = 1.0
     trim: Optional[glauber.SigmoidTrim] = None
@@ -349,6 +408,77 @@ class ChromaticGibbs:
         return KernelState(s=s, t=state.t + 1.0 / self.lambda0, e=None, aux=())
 
 
+@register_kernel("colored_gibbs")
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=(),
+    meta_fields=("lambda0", "backend"),
+)
+@dataclasses.dataclass(frozen=True)
+class ColoredGibbs:
+    """Exact parallel Gibbs on an arbitrary sparse graph via its coloring —
+    `chromatic_gibbs` generalized beyond the king's lattice. The problem's
+    `color_masks` partition the sites into independent sets (greedy
+    `color_graph` at construction, or a known coloring like the king
+    4-coloring), so same-color conditionals are independent and one step =
+    one full sweep over the color classes = one update per site (model time
+    1/lambda0 per sweep, like `chromatic_gibbs`).
+
+    `backend="pallas"` routes the whole sweep through the fused
+    `colored_gibbs_sweep` kernel (neighbor tables VMEM-resident, all color
+    phases in one pallas_call; compiled on TPU, interpreted elsewhere). The
+    ref path recomputes the gathered fields once per color phase in plain
+    jnp. Both paths draw the same per-color uniforms from the same key
+    split and evaluate the identical gather+reduce expression, so they
+    agree bit-for-bit in interpret mode."""
+
+    backends = ("ref", "pallas")
+    problem_kinds = ("sparse",)
+
+    lambda0: float = 1.0
+    backend: str = "ref"  # "ref" | "pallas"
+
+    def init(self, problem: SparseIsing, key, s0=None) -> KernelState:
+        if getattr(problem, "color_masks", None) is None:
+            raise ValueError(
+                "colored_gibbs needs problem.color_masks — build the problem "
+                "with coloring enabled (SparseIsing.from_edges/from_dense "
+                "color by default) or supply masks explicitly"
+            )
+        if s0 is None:
+            s0 = random_init(key, state_shape(problem))
+        return KernelState(s=s0, t=jnp.asarray(0.0, jnp.float32), e=None, aux=())
+
+    def step(self, problem: SparseIsing, state, key, beta) -> KernelState:
+        masks = problem.color_masks  # (C, n) bool
+        s = state.s
+        keys = jax.random.split(key, masks.shape[0])
+        if self.backend == "pallas":
+            from repro.kernels import ops
+
+            u = jnp.stack(
+                [jax.random.uniform(keys[c], s.shape) for c in range(masks.shape[0])]
+            )
+            s = ops.colored_gibbs_sweep(
+                s[None],
+                problem.nbr_idx,
+                problem.nbr_w,
+                problem.b,
+                u[:, None],
+                masks.astype(s.dtype),
+                beta=beta,
+                mode="kernel",
+            )[0]
+        else:
+            for c in range(masks.shape[0]):
+                h = problem.local_fields(s)
+                p_up = glauber.prob_up(beta * h)
+                u = jax.random.uniform(keys[c], s.shape)
+                proposal = jnp.where(u < p_up, 1.0, -1.0).astype(s.dtype)
+                s = jnp.where(masks[c], proposal, s)
+        return KernelState(s=s, t=state.t + 1.0 / self.lambda0, e=None, aux=())
+
+
 @register_kernel("tau_leap")
 @partial(
     jax.tree_util.register_dataclass,
@@ -362,12 +492,14 @@ class TauLeap:
     1/lambda0). Small dt*lambda0 -> exact CTMC; large dt -> 'stale neighbor'
     distortion, the TPU analogue of the chip's circuit-delay skew (Fig S9).
 
-    Works on LatticeIsing (stencil fields, clamp/dead masks) and DenseIsing.
+    Works on LatticeIsing (stencil fields, clamp/dead masks), DenseIsing,
+    and SparseIsing (gathered neighbor fields via `local_fields`).
     The dense form supports `backend="pallas"`: weights are int8-quantized
     once at init and every step runs the fused Pallas `tau_leap_step` kernel
     (MXU matmul -> flip epilogue; compiled on TPU, interpreted elsewhere)."""
 
     backends = ("ref", "pallas")
+    problem_kinds = ("dense", "lattice", "sparse")
 
     dt: float = 0.1
     lambda0: float = 1.0
@@ -375,8 +507,8 @@ class TauLeap:
     trim: Optional[glauber.SigmoidTrim] = None
 
     def backends_for(self, problem) -> tuple[str, ...]:
-        # lattice tau-leap has no Pallas kernel; trims are ref-only
-        if isinstance(problem, LatticeIsing) or self.trim is not None:
+        # lattice/sparse tau-leap have no Pallas kernel; trims are ref-only
+        if isinstance(problem, (LatticeIsing, SparseIsing)) or self.trim is not None:
             return ("ref",)
         return self.backends
 
@@ -392,6 +524,13 @@ class TauLeap:
                     "fused lattice sweep)"
                 )
             s0 = problem.apply_clamps(s0)
+        elif isinstance(problem, SparseIsing):
+            if self.backend == "pallas":
+                raise NotImplementedError(
+                    "pallas tau-leap supports dense problems only; the sparse "
+                    "form has no Pallas kernel (use colored_gibbs for the "
+                    "fused sparse sweep)"
+                )
         elif self.backend == "pallas":
             if self.trim is not None:
                 raise NotImplementedError("pallas tau-leap does not support trims")
@@ -472,13 +611,26 @@ class CTMC:
           O(log n) descent. aux carries (h, tree) where the tree is, by
           definition, the rate tree the state's MOST RECENT event was drawn
           from (pre-flip rates at that event's beta) in its flat
-          Pallas-ready layout — it fixes the tree-path state layout for the
-          planned sparse O(deg) incremental step rule. step() rebuilds
-          before every draw (with dense couplings every rate changes per
-          event and a scheduled beta rescales every leaf): one fused O(n)
-          build, no per-site randomness — the expensive part of "scan".
+          Pallas-ready layout. For DENSE problems step() rebuilds before
+          every draw (every rate changes per event and a scheduled beta
+          rescales every leaf): one fused O(n) build, no per-site
+          randomness — the expensive part of "scan".
       "auto" — "tree" for n >= TREE_SITE_DRAW_MIN_N else "scan".
+
+    SPARSE problems (SparseIsing) make the tree path incremental: a flip at
+    site i changes only the rates of i and its <= max_deg neighbors, so the
+    carried tree is repaired in place via `event_tree.update_many` —
+    O(max_deg * log n) per event instead of the dense O(n) rebuild. aux
+    carries (h, tree, tree_beta); the tree always holds the CURRENT state's
+    rates at tree_beta, and a step whose beta differs (annealed schedules
+    change beta every event) pays one O(n) rebuild before drawing. The
+    O(deg) win therefore shows on constant-beta runs; note that with
+    n_chains > 1 the rebuild-vs-reuse `lax.cond` is batched by vmap into a
+    select that evaluates both branches, so peak sparse throughput is a
+    single-chain (or pmap-sharded) story.
     """
+
+    problem_kinds = ("dense", "sparse")
 
     lambda0: float = 1.0
     site_draw: str = "auto"  # "scan" | "tree" | "auto"
@@ -504,24 +656,31 @@ class CTMC:
             return CTMC_TREE_BLOCK_EVENTS
         return 1
 
-    def init(self, problem: DenseIsing, key, s0=None) -> KernelState:
+    def init(self, problem, key, s0=None) -> KernelState:
         if s0 is None:
             s0 = random_init(key, state_shape(problem))
         h = problem.local_fields(s0)
         if self.resolved_site_draw(problem) == "tree":
             # Tree at beta=1: fixes the aux pytree structure (see the class
-            # docstring for the carried tree's exact meaning); step()
-            # rebuilds at the step's actual beta before every draw.
+            # docstring for the carried tree's exact meaning). Dense step()
+            # rebuilds at the step's actual beta before every draw; the
+            # sparse step carries tree_beta and rebuilds only on change.
             rates = self.lambda0 * glauber.flip_prob(h, s0)
-            aux = (h, event_tree.build(rates))
+            tree = event_tree.build(rates)
+            if isinstance(problem, SparseIsing):
+                aux = (h, tree, jnp.asarray(1.0, jnp.float32))
+            else:
+                aux = (h, tree)
         else:
             aux = h
         return KernelState(
             s=s0, t=jnp.asarray(0.0, jnp.float32), e=problem.energy(s0), aux=aux
         )
 
-    def step(self, problem: DenseIsing, state, key, beta) -> KernelState:
+    def step(self, problem, state, key, beta) -> KernelState:
         tree_draw = self.resolved_site_draw(problem) == "tree"
+        if tree_draw and isinstance(problem, SparseIsing):
+            return self._sparse_tree_step(problem, state, key, beta)
         s = state.s
         h = state.aux[0] if tree_draw else state.aux
         k_dt, k_site = jax.random.split(key)
@@ -534,9 +693,10 @@ class CTMC:
             # Rates depend on beta through the sigmoid, so a scheduled beta
             # invalidates every leaf: rebuild at the step's beta (for dense
             # couplings all n fields change per event anyway — the O(deg)
-            # event_tree.update path is for sparse step rules). Zero-total
-            # trees degenerate to the last leaf; the rounding clamp to n-1
-            # also covers it, and `alive` then discards the flip.
+            # event_tree.update_many path is the sparse step below).
+            # Zero-total trees degenerate to the last leaf; the rounding
+            # clamp to n-1 also covers it, and `alive` then discards the
+            # flip.
             tree = event_tree.build(rates)
             total = event_tree.total(tree)
             i = jnp.minimum(
@@ -554,10 +714,53 @@ class CTMC:
         dt = jax.random.exponential(k_dt) / jnp.maximum(total, RATE_FLOOR)
         delta = jnp.where(alive, -2.0 * s[i], 0.0)
         e = state.e + delta * h[i]
-        h = h + problem.J[:, i] * delta
+        h = _apply_field_delta(problem, h, i, delta)
         s = s.at[i].add(delta)
         aux = (h, tree) if tree_draw else h
         return KernelState(s=s, t=state.t + dt, e=e, aux=aux)
+
+    def _sparse_tree_step(self, problem: SparseIsing, state, key, beta) -> KernelState:
+        """One event with O(max_deg * log n) tree maintenance.
+
+        The carried tree holds the CURRENT state's rates at tree_beta, so
+        when beta is unchanged the draw reuses it as-is; a beta change
+        rescales every leaf through the sigmoid and pays one O(n) rebuild
+        (every event, under annealed schedules — the O(deg) path needs a
+        constant beta to shine). After the flip, only site i and its real
+        neighbors changed rate: scatter-add their leaf deltas over the
+        root paths in one `update_many`, with padded slots masked to zero
+        delta (their index aliases a live leaf, so a degree mask — not the
+        padding weights — keeps them inert here)."""
+        s = state.s
+        h, tree, tree_beta = state.aux
+        k_dt, k_site = jax.random.split(key)
+        tree = jax.lax.cond(
+            beta == tree_beta,
+            lambda t: t,
+            lambda t: event_tree.build(self.lambda0 * glauber.flip_prob(beta * h, s)),
+            tree,
+        )
+        total = event_tree.total(tree)
+        i = jnp.minimum(
+            event_tree.descend(tree, jax.random.uniform(k_site)), problem.n - 1
+        )
+        alive = total > RATE_FLOOR
+        dt = jax.random.exponential(k_dt) / jnp.maximum(total, RATE_FLOOR)
+        delta = jnp.where(alive, -2.0 * s[i], 0.0)
+        e = state.e + delta * h[i]
+        nbr = problem.nbr_idx[i]  # (max_deg,) — padded slots point at i
+        h = h.at[nbr].add(problem.nbr_w[i] * delta)  # zero at padded slots
+        s = s.at[i].add(delta)
+        affected = jnp.concatenate([i[None], nbr])
+        live = jnp.concatenate(
+            [jnp.ones((1,), bool), jnp.arange(problem.max_deg) < problem.deg[i]]
+        )
+        new_rates = self.lambda0 * glauber.flip_prob(beta * h[affected], s[affected])
+        leaf_delta = jnp.where(live, new_rates - event_tree.leaves_at(tree, affected), 0.0)
+        tree = event_tree.update_many(tree, affected, leaf_delta)
+        return KernelState(
+            s=s, t=state.t + dt, e=e, aux=(h, tree, jnp.asarray(beta, jnp.float32))
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -783,7 +986,10 @@ def run(
     """Run `n_steps` of `kernel` on `problem` — the single sampling driver.
 
     Args:
-      problem: DenseIsing or LatticeIsing.
+      problem: DenseIsing, LatticeIsing, or SparseIsing. The kernel must
+        declare support for the problem's kind (`problem_kinds`) — an
+        unsupported pairing (e.g. chromatic_gibbs on a sparse graph) raises
+        ValueError naming both, instead of a shape error inside the scan.
       kernel: a SamplerKernel instance, or a registered kernel name.
       key: PRNG key; split into one key per step (and per chain).
       n_steps: kernel steps (sweeps for chromatic, events for ctmc).
@@ -815,6 +1021,7 @@ def run(
     """
     if isinstance(kernel, str):
         kernel = get_kernel(kernel)
+    check_problem_kind(kernel, problem)
     resolved = _resolve_backend(backend, kernel, problem)
     if resolved is not None and hasattr(kernel, "backend") and kernel.backend != resolved:
         kernel = dataclasses.replace(kernel, backend=resolved)

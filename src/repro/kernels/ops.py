@@ -37,6 +37,25 @@ def lattice_gibbs_sweep(
     )
 
 
+def sparse_fields(s, nbr_idx, nbr_w, b, mode: str = "auto", **kw):
+    if mode == "reference" or (mode == "auto" and not _on_tpu()):
+        return _ref.sparse_fields_ref(s, nbr_idx, nbr_w, b)
+    from repro.kernels import sparse_gather as _sg
+
+    return _sg.sparse_fields(s, nbr_idx, nbr_w, b, interpret=not _on_tpu(), **kw)
+
+
+def colored_gibbs_sweep(s, nbr_idx, nbr_w, b, uniforms, masks, beta=None, mode: str = "auto", **kw):
+    if mode == "reference" or (mode == "auto" and not _on_tpu()):
+        return _ref.colored_gibbs_sweep_ref(s, nbr_idx, nbr_w, b, uniforms, masks > 0.5, beta)
+    from repro.kernels import sparse_gather as _sg
+
+    # batch/block_batch divisibility is validated inside the kernel wrapper
+    return _sg.colored_gibbs_sweep(
+        s, nbr_idx, nbr_w, b, uniforms, masks, beta, interpret=not _on_tpu(), **kw
+    )
+
+
 def dense_field(s_i8, j_i8, b, scale, mode: str = "auto", **kw):
     if mode == "reference" or (mode == "auto" and not _on_tpu()):
         return _ref.dense_field_ref(s_i8, j_i8, b, scale)

@@ -34,18 +34,27 @@ def test_smoke_suite_coverage():
     from repro.core import problems
 
     for e in entries:
-        lattice = problems.problem_kind(e.problem) == "lattice"
-        assert e.kernel in (suites.LATTICE_KERNELS if lattice else suites.DENSE_KERNELS)
+        kind = problems.problem_kind(e.problem)
+        assert e.kernel in suites.KERNELS_BY_KIND[kind]
         if e.backend == "pallas":
             # only kernel/problem combinations the driver can honor (it now
-            # raises on the rest): dense tau-leap, lattice chromatic gibbs
-            assert (e.kernel == "tau_leap" and not lattice) or (
-                e.kernel == "chromatic_gibbs" and lattice
+            # raises on the rest): dense tau-leap, lattice chromatic gibbs,
+            # sparse colored gibbs
+            assert (
+                (e.kernel == "tau_leap" and kind == "dense")
+                or (e.kernel == "chromatic_gibbs" and kind == "lattice")
+                or (e.kernel == "colored_gibbs" and kind == "sparse")
             )
     # the fused lattice sweep is in the measured grid (ROADMAP open item 2)
     assert any(
         e.kernel == "chromatic_gibbs" and e.backend == "pallas" for e in entries
     )
+    # ...and the fused sparse colored sweep alongside it
+    assert any(
+        e.kernel == "colored_gibbs" and e.backend == "pallas" for e in entries
+    )
+    # both sparse zoo families are measured
+    assert {"maxcut3r", "king"} <= probs
 
 
 def test_ctmc_site_draw_entries_in_suites():
@@ -58,10 +67,21 @@ def test_ctmc_site_draw_entries_in_suites():
         assert any(e.unroll == 4 for e in ctmc_entries)
         sizes = {e.size for e in ctmc_entries}
         assert max(sizes) >= 256
-        # the head-to-head trio shares instance/steps/chains: the site draw
-        # (and the event block) is the only variable
+        # the dense site-draw trio shares instance/steps/chains: the site
+        # draw (and the event block) is the only variable
+        dense_trio = [e for e in ctmc_entries if e.problem == "sk"]
         assert len({(e.problem, e.size, e.seed, e.n_steps, e.n_chains)
-                    for e in ctmc_entries}) == 1
+                    for e in dense_trio}) == 1
+        # the sparse-vs-dense layout trio: same 3-regular graph at n >= 1024,
+        # single chain (the tree-reuse cond degrades under vmap), pinned
+        # unroll, constant beta — layout/site-draw is the only variable
+        layout_trio = [e for e in ctmc_entries if e.problem == "maxcut3r"]
+        assert len(layout_trio) == 3
+        assert {e.problem_args for e in layout_trio} == {(), (("dense", True),)}
+        assert all(e.n_chains == 1 and e.unroll == 1 for e in layout_trio)
+        assert all(e.size >= 1024 for e in layout_trio)
+        assert all(e.schedule == ("constant", 1.0) for e in layout_trio)
+        assert len({e.id for e in layout_trio}) == 3  # problem_args in the id
     # an explicit unroll is part of the record identity
     a = _tiny_entry(problem="sk", size=6, kernel="ctmc",
                     kernel_args=(("site_draw", "tree"),))
@@ -287,10 +307,14 @@ def test_append_nightly_trajectory(tmp_path):
     """Repeated appends grow the committed trajectory oldest-first; a
     schema mismatch refuses instead of silently mixing record shapes."""
     path = str(tmp_path / "BENCH_nightly.json")
-    t1 = report_mod.append_nightly(_fake_full_report(), path)
-    assert len(t1["records"]) == 1
-    t2 = report_mod.append_nightly(_fake_full_report(), path)
-    assert len(t2["records"]) == 2
+    rep1 = _fake_full_report()
+    rep1["host"]["commit"] = "sha-a"
+    t1, appended1 = report_mod.append_nightly(rep1, path)
+    assert appended1 and len(t1["records"]) == 1
+    rep2 = _fake_full_report()
+    rep2["host"]["commit"] = "sha-b"
+    t2, appended2 = report_mod.append_nightly(rep2, path)
+    assert appended2 and len(t2["records"]) == 2
     on_disk = json.loads(open(path).read())
     assert on_disk["schema_version"] == report_mod.SCHEMA_VERSION
     assert [r["tag"] for r in on_disk["records"]] == ["nightly", "nightly"]
@@ -299,6 +323,27 @@ def test_append_nightly_trajectory(tmp_path):
     )
     with pytest.raises(ValueError, match="schema_version"):
         report_mod.append_nightly(_fake_full_report(), path)
+
+
+def test_append_nightly_dedups_commit_sha(tmp_path):
+    """Re-running the nightly on an already-recorded commit (workflow
+    retries, manual dispatches) must not pile up duplicate trajectory
+    points; records with no SHA always append."""
+    path = str(tmp_path / "BENCH_nightly.json")
+    rep = _fake_full_report()
+    rep["host"]["commit"] = "sha-a"
+    _, first = report_mod.append_nightly(rep, path)
+    traj, second = report_mod.append_nightly(rep, path)
+    assert first and not second
+    assert len(traj["records"]) == 1
+    assert len(json.loads(open(path).read())["records"]) == 1
+    # no-SHA reports (non-git checkouts) are never deduped
+    rep_nosha = _fake_full_report()
+    rep_nosha["host"]["commit"] = None
+    _, a = report_mod.append_nightly(rep_nosha, path)
+    _, b = report_mod.append_nightly(rep_nosha, path)
+    assert a and b
+    assert len(json.loads(open(path).read())["records"]) == 3
 
 
 def test_nightly_trajectory_collision_guards(tmp_path):

@@ -162,3 +162,88 @@ def test_legacy_generators_still_exported():
     assert float(problems.cut_value(p, s)) == pytest.approx(0.0)
     assert isinstance(problems.sk_instance(8, 0), ising.DenseIsing)
     assert isinstance(problems.cal_problem(), ising.LatticeIsing)
+
+
+def test_dense_validate_failure_modes():
+    """DenseIsing.validate raises a distinct readable ValueError per defect;
+    the dense zoo constructors call it so bad instances fail at build."""
+    good = problems.sk_instance(6, 0)
+    good.validate()
+    with pytest.raises(ValueError, match="square"):
+        ising.DenseIsing(J=jnp.zeros((4, 5)), b=jnp.zeros((4,))).validate()
+    with pytest.raises(ValueError, match="b shape"):
+        ising.DenseIsing(J=jnp.zeros((4, 4)), b=jnp.zeros((5,))).validate()
+    asym = np.zeros((4, 4))
+    asym[0, 1] = 1.0
+    with pytest.raises(ValueError, match="symmetric"):
+        ising.DenseIsing(J=jnp.asarray(asym), b=jnp.zeros((4,))).validate()
+    with pytest.raises(ValueError, match="diagonal"):
+        ising.DenseIsing(J=jnp.eye(4), b=jnp.zeros((4,))).validate()
+
+
+def test_random_maxcut_sparse_routing():
+    """density <= SPARSE_DENSITY_MAX routes through SparseIsing.from_dense;
+    the instance is the same model either way."""
+    from repro.core.sparse import SparseIsing
+
+    lo = problems.random_maxcut(16, seed=0, density=0.2)
+    lo_dense = problems.random_maxcut(16, seed=0, density=0.2, sparse=False)
+    hi = problems.random_maxcut(16, seed=0, density=0.8)
+    forced = problems.random_maxcut(16, seed=0, density=0.8, sparse=True)
+    assert isinstance(lo, SparseIsing) and isinstance(hi, ising.DenseIsing)
+    assert isinstance(lo_dense, ising.DenseIsing) and isinstance(forced, SparseIsing)
+    np.testing.assert_allclose(
+        np.asarray(lo.to_dense().J), np.asarray(lo_dense.J), atol=1e-6
+    )
+    s = jnp.asarray(2.0 * np.random.default_rng(1).integers(0, 2, 16) - 1.0, jnp.float32)
+    assert float(lo.energy(s)) == pytest.approx(float(lo_dense.energy(s)), abs=1e-4)
+    # the dense zoo generator always stays dense, at any density
+    assert problems.get_problem("maxcut", 10, seed=0, density=0.1).kind == "dense"
+
+
+def test_maxcut3r_zoo():
+    zp = problems.get_problem("maxcut3r", 12, seed=2)
+    sp = zp.problem
+    assert zp.kind == "sparse" and problems.problem_kind("maxcut3r") == "sparse"
+    assert zp.instance == "maxcut3r-n12-s2"
+    assert np.all(np.asarray(sp.deg) == 3) and sp.max_deg == 3
+    assert zp.meta["n_edges"] == 18  # 3n/2
+    # deterministic in the seed
+    zp2 = problems.get_problem("maxcut3r", 12, seed=2)
+    np.testing.assert_array_equal(np.asarray(sp.nbr_idx), np.asarray(zp2.problem.nbr_idx))
+    # exact reference at n <= EXACT_ENUM_MAX, against the densified graph
+    assert zp.ref_kind == "exact"
+    assert zp.ref_energy == pytest.approx(
+        problems.exact_ground_energy(sp.to_dense()), abs=1e-4
+    )
+    # the dense head-to-head variant is the SAME graph and reference
+    zd = problems.get_problem("maxcut3r", 12, seed=2, dense=True)
+    assert zd.kind == "dense" and zd.instance.endswith("-dense")
+    assert zd.ref_energy == zp.ref_energy
+    np.testing.assert_allclose(
+        np.asarray(zd.problem.J), np.asarray(sp.to_dense().J), atol=1e-6
+    )
+    with pytest.raises(ValueError, match="even"):
+        problems.random_3regular_maxcut(7, 0)
+    with pytest.raises(ValueError, match="even"):
+        problems.random_3regular_maxcut(2, 0)
+
+
+def test_king_zoo_uses_exact_four_coloring():
+    size = 5
+    zp = problems.get_problem("king", size, seed=1)
+    sp = zp.problem
+    assert zp.kind == "sparse" and zp.n == size * size
+    assert sp.n_colors == 4  # the king 4-coloring, not greedy first-fit
+    want = np.asarray(ising.king_color_masks(size, size)).reshape(4, size * size)
+    np.testing.assert_array_equal(np.asarray(sp.color_masks), want)
+    # ±J couplings on king's-move edges only
+    w = np.asarray(sp.nbr_w)
+    live = np.arange(sp.max_deg)[None, :] < np.asarray(sp.deg)[:, None]
+    assert set(np.unique(w[live])) <= {-1.0, 1.0}
+    assert zp.meta["max_deg"] == 8
+    # interior site count: (size-2)^2 sites have all 8 neighbors
+    assert int((np.asarray(sp.deg) == 8).sum()) == (size - 2) ** 2
+    # flattening matches a LatticeIsing on the same edge weights: symmetric
+    J = np.asarray(sp.to_dense().J)
+    np.testing.assert_allclose(J, J.T, atol=1e-6)

@@ -204,6 +204,43 @@ def test_unsupported_backend_requests_raise():
     assert res.s.shape == (dense.n,)
 
 
+def test_problem_kind_dispatch_fails_loudly():
+    """Acceptance: a kernel handed a problem kind it does not implement
+    raises a ValueError naming the kernel and the kinds it supports — no
+    silent densification, no shape error deep in a jitted step."""
+    sp = problems.random_3regular_maxcut(8, seed=0)
+    lat = problems.cal_problem(coupling=0.5)
+    dense = _dense_problem(n=8)
+    # lattice-only chromatic gibbs rejects sparse graphs (colored_gibbs is
+    # the generalization) and dense matrices
+    with pytest.raises(ValueError, match=r"chromatic_gibbs.*'sparse'"):
+        run(sp, "chromatic_gibbs", jax.random.key(0), n_steps=2)
+    with pytest.raises(ValueError, match=r"chromatic_gibbs.*'dense'"):
+        run(dense, "chromatic_gibbs", jax.random.key(0), n_steps=2)
+    # sparse-only colored gibbs rejects the rest
+    with pytest.raises(ValueError, match=r"colored_gibbs.*'dense'"):
+        run(dense, "colored_gibbs", jax.random.key(0), n_steps=2)
+    with pytest.raises(ValueError, match=r"colored_gibbs.*'lattice'"):
+        run(lat, "colored_gibbs", jax.random.key(0), n_steps=2)
+    # flat-state kernels reject lattices
+    for name in ("ctmc", "random_scan_gibbs"):
+        with pytest.raises(ValueError, match=rf"{name}.*'lattice'"):
+            run(lat, name, jax.random.key(0), n_steps=2)
+    # the message names the supported kinds so the fix is obvious
+    with pytest.raises(ValueError, match=r"supported problem kinds"):
+        run(sp, "chromatic_gibbs", jax.random.key(0), n_steps=2)
+    # sparse tau-leap exists on ref only: the driver refuses pallas ...
+    with pytest.raises(ValueError, match="tau_leap"):
+        run(sp, TauLeap(dt=0.2), jax.random.key(0), n_steps=2, backend="pallas")
+    # ... and direct construction points at the fused sparse alternative
+    with pytest.raises(NotImplementedError, match="colored_gibbs"):
+        run(sp, TauLeap(dt=0.2, backend="pallas"), jax.random.key(0), n_steps=2)
+    # supported sparse paths still run
+    for kern in ("ctmc", "random_scan_gibbs", "tau_leap", "colored_gibbs"):
+        res = run(sp, kern, jax.random.key(1), n_steps=4)
+        assert res.s.shape == (sp.n,)
+
+
 # beta=12: sum(rates) ~ 2e-36 — subnormal but NONZERO, the window where a
 # floor-dominated categorical used to flip a near-uniform site anyway.
 # beta=500: rates underflow to exactly 0 (the dt=inf -> NaN case).

@@ -1,0 +1,365 @@
+"""The sparse Ising subsystem: padded neighbor lists, graph coloring, the
+colored-Gibbs kernel, and the O(deg log n) incremental sparse CTMC path."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ctmc, ising, problems, sampler_api
+from repro.core.sampler_api import CTMC, ColoredGibbs, run
+from repro.core.sparse import SparseIsing, color_graph, colors_to_masks
+from repro.core import event_tree
+
+
+def _dense_problem(n=12, seed=0, scale=0.6, density=0.4):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(0, scale, (n, n)) * (rng.random((n, n)) < density)
+    J = np.triu(A, 1)
+    J = J + J.T
+    b = rng.normal(0, scale / 2, n)
+    return ising.DenseIsing(J=jnp.asarray(J, jnp.float32), b=jnp.asarray(b, jnp.float32))
+
+
+def _rand_pm1(key, shape):
+    return (2 * jax.random.bernoulli(key, 0.5, shape) - 1).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Layout: round-trips, energies, delta_fields
+# ---------------------------------------------------------------------------
+
+
+def test_from_dense_roundtrip_and_energy_parity():
+    dense = _dense_problem(n=14, seed=3)
+    sp = SparseIsing.from_dense(dense)
+    sp.validate()
+    np.testing.assert_allclose(
+        np.asarray(sp.to_dense().J), np.asarray(dense.J), atol=1e-6
+    )
+    np.testing.assert_array_equal(np.asarray(sp.to_dense().b), np.asarray(dense.b))
+    s = _rand_pm1(jax.random.key(0), (5, dense.n))
+    np.testing.assert_allclose(
+        np.asarray(sp.energy(s)), np.asarray(dense.energy(s)), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(sp.local_fields(s)), np.asarray(dense.local_fields(s)),
+        rtol=1e-5, atol=1e-5,
+    )
+    # padding convention: dead slots point at the site itself with weight 0
+    idx = np.asarray(sp.nbr_idx)
+    w = np.asarray(sp.nbr_w)
+    pad = np.arange(sp.max_deg)[None, :] >= np.asarray(sp.deg)[:, None]
+    np.testing.assert_array_equal(idx[pad], np.broadcast_to(
+        np.arange(sp.n)[:, None], idx.shape)[pad])
+    assert np.all(w[pad] == 0.0)
+
+
+def test_from_dense_threshold_drops_weak_edges():
+    dense = _dense_problem(n=10, seed=1)
+    thresh = float(np.quantile(np.abs(np.asarray(dense.J))[np.asarray(dense.J) != 0], 0.5))
+    sp = SparseIsing.from_dense(dense, threshold=thresh)
+    J = np.asarray(sp.to_dense().J)
+    nz = J[J != 0]
+    assert nz.size and np.all(np.abs(nz) > thresh)
+
+
+def test_delta_fields_matches_full_recompute():
+    dense = _dense_problem(n=12, seed=5)
+    sp = SparseIsing.from_dense(dense)
+    s = _rand_pm1(jax.random.key(2), (sp.n,))
+    h = sp.local_fields(s)
+    for i in (0, 3, sp.n - 1):
+        idx, dh = sp.delta_fields(s, jnp.asarray(i))
+        assert idx.shape == (sp.max_deg,) and dh.shape == (sp.max_deg,)
+        h_inc = h.at[idx].add(dh)
+        s_flip = s.at[i].multiply(-1.0)
+        np.testing.assert_allclose(
+            np.asarray(h_inc), np.asarray(sp.local_fields(s_flip)),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+def test_from_edges_max_deg_padding_alignment():
+    sp = SparseIsing.from_edges(4, [(0, 1, 1.0), (1, 2, -1.0)], max_deg=5)
+    assert sp.max_deg == 5 and sp.n == 4
+    sp.validate()
+    with pytest.raises(ValueError, match="max_deg"):
+        SparseIsing.from_edges(4, [(0, 1, 1.0), (0, 2, 1.0)], max_deg=1)
+
+
+# ---------------------------------------------------------------------------
+# Coloring
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_coloring_is_proper_and_bounded():
+    for seed in range(3):
+        sp = problems.random_3regular_maxcut(20, seed)
+        colors = np.asarray(sp.color_masks).argmax(axis=0)
+        assert sp.n_colors <= sp.max_deg + 1
+        idx = np.asarray(sp.nbr_idx)
+        deg = np.asarray(sp.deg)
+        for i in range(sp.n):
+            for j in idx[i, : deg[i]]:
+                assert colors[i] != colors[j], (i, j)
+        # masks partition the sites
+        assert np.all(np.asarray(sp.color_masks).sum(axis=0) == 1)
+
+
+def test_color_graph_ring():
+    """An even ring is 2-colorable and greedy first-fit finds it."""
+    n = 8
+    edges = [(i, (i + 1) % n, 1.0) for i in range(n)]
+    sp = SparseIsing.from_edges(n, edges)
+    assert sp.n_colors == 2
+    masks = colors_to_masks(color_graph(np.asarray(sp.nbr_idx), np.asarray(sp.deg)))
+    np.testing.assert_array_equal(masks, np.asarray(sp.color_masks))
+
+
+def test_n_colors_requires_masks():
+    sp = SparseIsing.from_edges(4, [(0, 1, 1.0)], color=False)
+    assert sp.color_masks is None
+    with pytest.raises(ValueError, match="color_masks"):
+        sp.n_colors
+
+
+# ---------------------------------------------------------------------------
+# validate() failure modes
+# ---------------------------------------------------------------------------
+
+
+def test_validate_failure_modes():
+    import dataclasses
+
+    good = SparseIsing.from_edges(6, [(0, 1, 1.0), (1, 2, -0.5), (3, 4, 2.0)])
+    good.validate()
+    # shapes
+    bad = dataclasses.replace(good, b=jnp.zeros((3,), jnp.float32))
+    with pytest.raises(ValueError, match="shapes"):
+        bad.validate()
+    # index out of range
+    bad = dataclasses.replace(good, nbr_idx=good.nbr_idx.at[0, 0].set(99))
+    with pytest.raises(ValueError, match="out of range"):
+        bad.validate()
+    # nonzero padded weight
+    bad = dataclasses.replace(good, nbr_w=good.nbr_w.at[5, 0].set(1.0))
+    with pytest.raises(ValueError, match="padded"):
+        bad.validate()
+    # self-coupling in a live slot
+    bad = dataclasses.replace(good, nbr_idx=good.nbr_idx.at[0, 0].set(0))
+    with pytest.raises(ValueError, match="self-coupling"):
+        bad.validate()
+    # asymmetric storage: edge present in row 0 only
+    bad = dataclasses.replace(good, nbr_w=good.nbr_w.at[0, 0].set(3.0))
+    with pytest.raises(ValueError, match="symmetric"):
+        bad.validate()
+    # improper coloring
+    masks = np.zeros((1, 6), bool)
+    masks[0] = True
+    bad = dataclasses.replace(good, color_masks=jnp.asarray(masks))
+    with pytest.raises(ValueError, match="proper"):
+        bad.validate()
+    # not a partition
+    bad = dataclasses.replace(good, color_masks=jnp.zeros((2, 6), bool))
+    with pytest.raises(ValueError, match="exactly one color"):
+        bad.validate()
+
+
+def test_from_edges_rejects_bad_edges():
+    with pytest.raises(ValueError, match="self-loop"):
+        SparseIsing.from_edges(4, [(2, 2, 1.0)])
+    with pytest.raises(ValueError, match="out of range"):
+        SparseIsing.from_edges(4, [(0, 7, 1.0)])
+
+
+# ---------------------------------------------------------------------------
+# Event-tree sparse primitives
+# ---------------------------------------------------------------------------
+
+
+def test_event_tree_update_many_matches_rebuild():
+    rng = np.random.default_rng(0)
+    n = 16
+    rates = jnp.asarray(rng.random(n), jnp.float32)
+    tree = event_tree.build(rates)
+    # duplicate indices must compose additively (the padded-slot contract)
+    idx = jnp.asarray([3, 7, 3, 15, 0], jnp.int32)
+    delta = jnp.asarray([0.5, -0.2, 0.25, 1.0, 0.0], jnp.float32)
+    updated = event_tree.update_many(tree, idx, delta)
+    new_rates = np.asarray(rates)
+    np.add.at(new_rates, np.asarray(idx), np.asarray(delta))
+    want = event_tree.build(jnp.asarray(new_rates))
+    np.testing.assert_allclose(np.asarray(updated), np.asarray(want), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(event_tree.leaves_at(updated, jnp.arange(n))), new_rates,
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+# ---------------------------------------------------------------------------
+# ColoredGibbs kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("beta", [0.3, 1.0, 3.0])
+def test_colored_gibbs_ref_pallas_bit_parity(beta):
+    """Acceptance: full-run() ref <-> pallas(interpret) bit-parity at every
+    scheduled inverse temperature, single- and multi-chain."""
+    sp = problems.random_3regular_maxcut(16, seed=2)
+    kw = dict(n_steps=8, sample_every=2, schedule=beta)
+    r_ref = run(sp, ColoredGibbs(), jax.random.key(4), backend="ref", **kw)
+    r_pal = run(sp, ColoredGibbs(), jax.random.key(4), backend="pallas", **kw)
+    np.testing.assert_array_equal(np.asarray(r_ref.s), np.asarray(r_pal.s))
+    np.testing.assert_array_equal(np.asarray(r_ref.samples), np.asarray(r_pal.samples))
+    # multi-chain: the pallas step must survive the driver's vmap
+    r_mc_ref = run(sp, ColoredGibbs(), jax.random.key(5), n_chains=3, backend="ref", **kw)
+    r_mc_pal = run(sp, ColoredGibbs(), jax.random.key(5), n_chains=3, backend="pallas", **kw)
+    np.testing.assert_array_equal(
+        np.asarray(r_mc_ref.samples), np.asarray(r_mc_pal.samples)
+    )
+
+
+def test_colored_gibbs_statistical_exactness():
+    """Sampled distribution of a long colored-Gibbs run matches the exact
+    Boltzmann law on a small 3-regular graph (total variation gate)."""
+    sp = problems.random_3regular_maxcut(8, seed=0)
+    beta = 0.7
+    # exact law at inverse temperature beta: reweight the beta=1 enumeration
+    states, _ = ising.enumerate_boltzmann(sp.to_dense())
+    E = np.asarray(jax.vmap(sp.to_dense().energy)(jnp.asarray(states, jnp.float32)))
+    w = np.exp(-beta * (E - E.min()))
+    p = w / w.sum()
+    res = run(sp, ColoredGibbs(), jax.random.key(0), n_steps=20_000,
+              sample_every=2, schedule=beta)
+    samples = np.asarray(res.samples)
+    codes = ((samples > 0).astype(np.int64) << np.arange(sp.n)).sum(axis=-1)
+    counts = np.bincount(codes, minlength=2 ** sp.n)
+    emp = counts / counts.sum()
+    tv = 0.5 * np.abs(emp - p).sum()
+    assert tv < 0.05, f"TV={tv}"
+
+
+def test_colored_gibbs_requires_masks_and_sparse():
+    sp_nomask = SparseIsing.from_edges(6, [(0, 1, 1.0), (2, 3, 1.0)], color=False)
+    with pytest.raises(ValueError, match="color_masks"):
+        run(sp_nomask, ColoredGibbs(), jax.random.key(0), n_steps=2)
+    with pytest.raises(ValueError, match="colored_gibbs"):
+        run(_dense_problem(8), "colored_gibbs", jax.random.key(0), n_steps=2)
+
+
+# ---------------------------------------------------------------------------
+# Sparse incremental CTMC
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_ctmc_chi_square_exact_boltzmann():
+    """Acceptance: the O(deg log n) incremental sparse tree-CTMC is
+    statistically exact — its time-weighted distribution on a small
+    3-regular graph matches exact enumeration AND the dense scan-CTMC run
+    on the densified graph with the same budget."""
+    sp = problems.random_3regular_maxcut(8, seed=1)
+    dense = sp.to_dense()
+    _, p_exact = ising.enumerate_boltzmann(dense)
+    p = np.asarray(p_exact, np.float64)
+    n_events = 60_000
+    res_sp = run(sp, CTMC(site_draw="tree"), jax.random.key(7),
+                 n_steps=n_events, sample_every=1)
+    res_dn = run(dense, CTMC(site_draw="scan"), jax.random.key(7),
+                 n_steps=n_events, sample_every=1)
+    dists = {}
+    for name, res in (("sparse-tree", res_sp), ("dense-scan", res_dn)):
+        cr = ctmc.CTMCRun.from_result(res)
+        dists[name] = np.asarray(ctmc.time_weighted_distribution(cr, sp.n), np.float64)
+    for name, w in dists.items():
+        tv = 0.5 * np.abs(w - p).sum()
+        assert tv < 0.03, f"{name}: TV={tv}"
+        chi2 = n_events * float(((w - p) ** 2 / np.maximum(p, 1e-300)).sum())
+        assert chi2 < 10 * (2 ** sp.n - 1), f"{name}: chi2={chi2}"
+    assert 0.5 * np.abs(dists["sparse-tree"] - dists["dense-scan"]).sum() < 0.03
+
+
+def test_sparse_ctmc_matches_dense_tree_ctmc_statistics():
+    """Sparse incremental repair vs dense full rebuild are the same process
+    in law; with identical keys on the same graph their energies agree to
+    within MC noise (not bitwise — the dense path and the sparse path
+    consume the site-selection uniform identically but update h in a
+    different order, so float rounding differs)."""
+    sp = problems.random_3regular_maxcut(12, seed=3)
+    res_sp = run(sp, CTMC(site_draw="tree"), jax.random.key(1),
+                 n_steps=4000, sample_every=50)
+    res_dn = run(sp.to_dense(), CTMC(site_draw="tree"), jax.random.key(2),
+                 n_steps=4000, sample_every=50)
+    e_sp = np.asarray(res_sp.energies)[20:]
+    e_dn = np.asarray(res_dn.energies)[20:]
+    se = np.hypot(e_sp.std() / np.sqrt(e_sp.size), e_dn.std() / np.sqrt(e_dn.size))
+    assert abs(e_sp.mean() - e_dn.mean()) < 6 * se + 1e-6
+
+
+def test_sparse_ctmc_incremental_energy_and_tree_do_not_drift():
+    """The O(deg)-maintained energy, fields, and rate tree must track the
+    from-scratch values over thousands of events."""
+    sp = problems.random_3regular_maxcut(16, seed=4)
+    res = run(sp, CTMC(site_draw="tree"), jax.random.key(3),
+              n_steps=5000, sample_every=250)
+    recorded = np.asarray(res.energies)
+    true = np.asarray(jax.vmap(sp.energy)(res.samples))
+    np.testing.assert_allclose(recorded, true, atol=5e-3)
+
+
+def test_sparse_ctmc_frozen_cold_chain_stays_finite():
+    """Underflow semantics match the dense paths: at huge beta no site may
+    flip and the dwell time stays finite."""
+    n = 8
+    edges = [(i, (i + 1) % n, -0.5) for i in range(n)]  # ferro ring
+    sp = SparseIsing.from_edges(n, edges)
+    s0 = jnp.ones((n,), jnp.float32)
+    res = run(sp, CTMC(site_draw="tree"), jax.random.key(0), n_steps=21,
+              s0=s0, schedule=500.0, sample_every=1)
+    assert np.isfinite(float(res.t))
+    np.testing.assert_array_equal(np.asarray(res.s), np.asarray(s0))
+    np.testing.assert_array_equal(np.asarray(res.energies),
+                                  np.full(21, float(sp.energy(s0))))
+
+
+def test_sparse_ctmc_unroll_and_multi_chain():
+    """The sparse (h, tree, tree_beta) aux must survive event-block
+    unrolling bit-exactly and the driver's vmap."""
+    sp = problems.random_3regular_maxcut(12, seed=6)
+    s0 = sampler_api.random_init(jax.random.key(0), (sp.n,))
+    base = run(sp, CTMC(site_draw="tree"), jax.random.key(1), n_steps=23,
+               s0=s0, sample_every=5)
+    for k in (3, 8):
+        blocked = run(sp, CTMC(site_draw="tree"), jax.random.key(1), n_steps=23,
+                      s0=s0, sample_every=5, unroll=k)
+        np.testing.assert_array_equal(np.asarray(base.s), np.asarray(blocked.s))
+        np.testing.assert_array_equal(
+            np.asarray(base.energies), np.asarray(blocked.energies)
+        )
+    mc = run(sp, CTMC(site_draw="tree"), jax.random.key(2), n_steps=16,
+             n_chains=3, sample_every=4)
+    assert mc.samples.shape == (3, 4, sp.n)
+    assert np.all(np.isfinite(np.asarray(mc.energies)))
+
+
+def test_sparse_ctmc_beta_schedule_rebuilds_tree():
+    """A changing beta invalidates the carried rate tree; the rebuild branch
+    must keep the trajectory consistent with the recorded energies."""
+    sp = problems.random_3regular_maxcut(12, seed=7)
+    res = run(sp, CTMC(site_draw="tree"), jax.random.key(4), n_steps=2000,
+              sample_every=100, schedule=sampler_api.geometric(0.3, 3.0))
+    recorded = np.asarray(res.energies)
+    true = np.asarray(jax.vmap(sp.energy)(res.samples))
+    np.testing.assert_allclose(recorded, true, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# Other kernels on sparse problems
+# ---------------------------------------------------------------------------
+
+
+def test_random_scan_and_tau_leap_accept_sparse():
+    sp = problems.random_3regular_maxcut(12, seed=8)
+    for kern in ("random_scan_gibbs", "tau_leap"):
+        res = run(sp, kern, jax.random.key(0), n_steps=16, sample_every=4)
+        assert res.s.shape == (sp.n,)
+        assert np.all(np.isfinite(np.asarray(res.energies)))
