@@ -66,6 +66,7 @@ def fig3a_fidelity():
     steps = 40_000 if FAST else 150_000
 
     def tv(emp):
+        """Total-variation distance between two distributions."""
         return 0.5 * float(np.abs(np.asarray(emp) - p_exact).sum())
 
     runs = [
@@ -113,47 +114,44 @@ def figS9_delay_skew():
 
 def fig3gh_scaling():
     """Async vs sync time-to-solution scaling on MaxCut and SK (Fig 3G/H,
-    Table S1). Model time at equal per-neuron update rate lambda0=1."""
-    sizes = [10, 20, 30, 45, 60, 80] if not FAST else [10, 20, 30]
-    n_inst = 5 if not FAST else 3
-    n_trials = 24 if not FAST else 8
-    for problem_kind, gen in (("maxcut", problems.random_maxcut), ("sk", problems.sk_instance)):
-        tts_async, tts_sync = [], []
-        t0 = time.perf_counter()
-        for n in sizes:
-            ta, tsy = [], []
-            for inst in range(n_inst):
-                prob = gen(n, seed=1000 * inst + n)
-                keys = jax.random.split(jax.random.key(inst), n_trials)
-                s0s = jax.vmap(lambda k: samplers.random_init(k, (prob.n,)))(keys)
-                # target: best energy seen across a long reference run
-                ref = samplers.gibbs_random_scan(
-                    prob, jax.random.key(77 + inst), s0s[0], n_steps=30_000, sample_every=20
-                )
-                e_target = float(jnp.min(ref.energies))
-                max_ev = 4000 + 80 * n
-                t_a, hit_a = jax.vmap(
-                    lambda k, s: ctmc.gillespie_first_hit(prob, k, s, e_target, n_events=max_ev)
-                )(keys, s0s)
-                t_s, hit_s = jax.vmap(
-                    lambda k, s: samplers.gibbs_first_hit(prob, k, s, e_target, n_steps=max_ev)
-                )(keys, s0s)
-                ta.extend(np.asarray(t_a)[np.asarray(hit_a)].tolist())
-                tsy.extend(np.asarray(t_s)[np.asarray(hit_s)].tolist())
-            tts_async.append(np.asarray(ta))
-            tts_sync.append(np.asarray(tsy))
-        wall = (time.perf_counter() - t0) * 1e6
-        ratio = np.median(tts_sync[-1]) / np.median(tts_async[-1])
-        fit_a = observables.fit_scaling(np.asarray(sizes, float), tts_async, n_boot=300)
-        fit_s = observables.fit_scaling(np.asarray(sizes, float), tts_sync, n_boot=300)
-        pval = observables.exponent_gap_pvalue(
-            np.asarray(sizes, float), tts_async, tts_sync, n_boot=300
+    Table S1), run through the shared `benchmarks.scaling` harness — the
+    same size-sweep/fit/p-value machinery the suite records embed — with
+    the CTMC as the async exemplar. Model time at equal per-neuron update
+    rate lambda0=1; targets come from the zoo's reference energies instead
+    of this figure's former private long-reference-run loop."""
+    from benchmarks import scaling as scaling_mod
+
+    sizes = (10, 20, 30, 45, 60, 80) if not FAST else (10, 20, 30)
+    for problem_kind in ("maxcut", "sk"):
+        spec = scaling_mod.ScalingSpec(
+            problem=problem_kind,
+            sizes=sizes,
+            n_instances=5 if not FAST else 3,
+            n_trials=24 if not FAST else 8,
+            steps_base=4000,
+            steps_per_n=80,
+            n_boot=300,
         )
+        t0 = time.perf_counter()
+        rec = scaling_mod.run_scaling(spec, log=lambda m: None)
+        wall = (time.perf_counter() - t0) * 1e6
+        sync = rec["kernels"][rec["sync_kernel"]]
+        async_ = rec["kernels"]["ctmc"]
+        gap = rec["gap_vs_sync"]["ctmc"]
+        if sync["tts_median"][-1] and async_["tts_median"][-1]:
+            ratio = f"{sync['tts_median'][-1] / async_['tts_median'][-1]:.0f}x"
+        else:
+            ratio = "n/a"
+        fa, fs = async_["fit"], sync["fit"]
+        fmt = lambda f: (
+            f"{f['B']:.3f}[{f['B_ci'][0]:.3f},{f['B_ci'][1]:.3f}]" if f else "n/a"
+        )
+        pval = "n/a" if gap["pvalue"] is None else f"{gap['pvalue']:.4f}"
         _row(
             f"fig3gh_scaling/{problem_kind}",
             wall,
-            f"speedup@n={sizes[-1]}:{ratio:.0f}x;B_async={fit_a.B:.3f}[{fit_a.B_ci[0]:.3f},{fit_a.B_ci[1]:.3f}];"
-            f"B_sync={fit_s.B:.3f}[{fit_s.B_ci[0]:.3f},{fit_s.B_ci[1]:.3f}];p_same_B={pval:.4f}",
+            f"speedup@n={sizes[-1]}:{ratio};B_async={fmt(fa)};"
+            f"B_sync={fmt(fs)};p_same_B={pval}",
         )
 
 
@@ -227,6 +225,7 @@ def fig3i_solver_comparison():
     e_star = float(jnp.min(ref.energies))
 
     def report(name, fn):
+        """Emit one CSV row for a finished optimization pass."""
         t0 = time.perf_counter()
         hits = fn()
         us = (time.perf_counter() - t0) * 1e6
@@ -237,18 +236,21 @@ def fig3i_solver_comparison():
     max_ev = 9000
 
     def async_pass():
+        """Event-driven CTMC first-hit pass (the async solver)."""
         t, h = jax.vmap(lambda k, s: ctmc.gillespie_first_hit(prob, k, s, e_star, n_events=max_ev))(
             jax.random.split(jax.random.key(1), 12), s0s
         )
         return np.where(np.asarray(h), np.asarray(t), np.inf)
 
     def sync_gibbs():
+        """Random-scan Gibbs baseline at fixed beta."""
         t, h = jax.vmap(lambda k, s: samplers.gibbs_first_hit(prob, k, s, e_star, n_steps=max_ev))(
             jax.random.split(jax.random.key(2), 12), s0s
         )
         return np.where(np.asarray(h), np.asarray(t), np.inf)
 
     def annealed():
+        """Annealed tau-leap pass (linear beta ramp)."""
         n_steps = 600
         res = sampler_api.run(
             prob, sampler_api.TauLeap(dt=0.25), jax.random.key(100),
@@ -259,6 +261,7 @@ def fig3i_solver_comparison():
         return np.where(e <= e_star + 1e-6, n_steps * 0.25, np.inf)
 
     def replica_exchange():
+        """Replica-exchange pass over the same instance."""
         outs = []
         for i in range(6):
             st = tempering.init(prob, jax.random.key(200 + i), jnp.asarray([0.3, 0.6, 1.0, 1.8]))

@@ -54,6 +54,7 @@ def git_commit() -> "str | None":
 
 
 def host_info() -> dict:
+    """Host identity header for a report (platform, jax, CI flag, commit)."""
     return {
         "platform": platform.platform(),
         "machine": platform.machine(),
@@ -68,8 +69,17 @@ def host_info() -> dict:
     }
 
 
-def make_report(tag: str, suite: str, records: list[dict]) -> dict:
-    return {
+def make_report(
+    tag: str, suite: str, records: list[dict], scaling: "dict | None" = None
+) -> dict:
+    """Assemble a schema-v2 report dict (see the module docstring).
+
+    `scaling` is the optional async-vs-sync scaling-law section produced by
+    `benchmarks.scaling.scaling_section` — carried verbatim under the
+    report's "scaling" key (absent when the run did not sweep it); the
+    section versions itself via its own "schema_version" field.
+    """
+    report = {
         "schema_version": SCHEMA_VERSION,
         "tag": tag,
         "suite": suite,
@@ -78,9 +88,13 @@ def make_report(tag: str, suite: str, records: list[dict]) -> dict:
         "host": host_info(),
         "records": records,
     }
+    if scaling is not None:
+        report["scaling"] = scaling
+    return report
 
 
 def report_path(tag: str, out_dir: str = REPO_ROOT) -> str:
+    """Path of BENCH_<tag>.json under out_dir (tag 'nightly' reserved)."""
     path = os.path.join(out_dir, f"BENCH_{tag}.json")
     if os.path.abspath(path) == os.path.abspath(NIGHTLY_PATH):
         raise ValueError(
@@ -93,6 +107,7 @@ def report_path(tag: str, out_dir: str = REPO_ROOT) -> str:
 
 
 def write_report(report: dict, out_dir: str = REPO_ROOT) -> str:
+    """Write a report as strict JSON; returns the path."""
     path = report_path(report["tag"], out_dir)
     with open(path, "w") as f:
         # allow_nan=False: reports must be strict RFC-8259 JSON (no
@@ -103,6 +118,7 @@ def write_report(report: dict, out_dir: str = REPO_ROOT) -> str:
 
 
 def load(path: str) -> dict:
+    """Load a report, enforcing the supported schema version."""
     with open(path) as f:
         report = json.load(f)
     version = report.get("schema_version")
@@ -163,7 +179,7 @@ def nightly_record(report: dict) -> dict:
             ),
             "hit_rate": float(np.mean([r["hit_rate"] for r in recs])),
         }
-    return {
+    record = {
         "tag": report["tag"],
         "suite": report["suite"],
         "created": report.get("created"),
@@ -174,6 +190,29 @@ def nightly_record(report: dict) -> dict:
         "n_records": len(report["records"]),
         "kernels": kernels,
     }
+    if "scaling" in report:
+        record["scaling"] = scaling_rollup(report["scaling"])
+    return record
+
+
+def scaling_rollup(section: dict) -> dict:
+    """Trim a full scaling section to its trajectory essentials: per
+    problem, each kernel's fitted exponent B and the async-vs-sync
+    exponent-gap p-values. CIs, per-size medians, and mixing summaries
+    stay in the full report artifact."""
+    out = {}
+    for problem, rec in sorted(section.get("problems", {}).items()):
+        out[problem] = {
+            "B": {
+                kernel: (None if kr["fit"] is None else kr["fit"]["B"])
+                for kernel, kr in sorted(rec["kernels"].items())
+            },
+            "pvalue_vs_sync": {
+                kernel: g["pvalue"]
+                for kernel, g in sorted(rec["gap_vs_sync"].items())
+            },
+        }
+    return out
 
 
 def append_nightly(report: dict, path: str = NIGHTLY_PATH) -> tuple[dict, bool]:
@@ -272,6 +311,7 @@ def compare_to_baseline(
 
 
 def format_comparison(summary: dict) -> str:
+    """Human-readable comparison summary for the gate's stdout."""
     lines = []
     for rid, ratio in sorted(summary["ratios"].items(), key=lambda kv: kv[1]):
         flag = " <-- slow" if ratio < 1.0 - summary["threshold"] else ""

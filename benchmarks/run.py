@@ -24,6 +24,12 @@
         BENCH_nightly.json trajectory with a trimmed per-kernel record.
         (The tag "nightly" itself is reserved for the trajectory file.)
 
+    PYTHONPATH=src python -m benchmarks.run --smoke --scaling smoke
+        Also run the async-vs-sync TTS scaling-law sweep (benchmarks/
+        scaling.py) and embed its section in the report (and, with
+        --append-nightly, a trimmed exponent/p-value rollup in the
+        trajectory record). Grids: "smoke" (PR-sized) or "full" (nightly).
+
     PYTHONPATH=src python -m benchmarks.run --figures [--only fig3a] [--fast]
         The legacy per-paper-figure benchmarks (CSV to stdout).
 """
@@ -35,11 +41,12 @@ import sys
 import time
 
 from benchmarks import report as report_mod
-from benchmarks import runner, suites
+from benchmarks import runner, scaling, suites
 from benchmarks.figures import run_figures
 
 
 def main(argv: list[str] | None = None) -> int:
+    """CLI entry point; returns the process exit code."""
     ap = argparse.ArgumentParser(prog="benchmarks.run", description=__doc__)
     ap.add_argument("--suite", default=None, choices=sorted(suites.SUITES),
                     help="suite to run (default: smoke)")
@@ -65,6 +72,9 @@ def main(argv: list[str] | None = None) -> int:
                     help="append this run's trimmed record (per-kernel geomean "
                          "throughput + hit rates) to the committed nightly "
                          "trajectory (default: BENCH_nightly.json)")
+    ap.add_argument("--scaling", default=None, choices=sorted(scaling.SCALING_SPECS),
+                    help="also run the async-vs-sync TTS scaling sweep on this "
+                         "grid and embed its section in the report")
     ap.add_argument("--figures", action="store_true",
                     help="run the paper-figure benchmarks instead of a suite")
     ap.add_argument("--only", default=None, help="(--figures) substring filter")
@@ -102,7 +112,16 @@ def main(argv: list[str] | None = None) -> int:
     records = runner.run_suite(entries, log=lambda m: print(m, flush=True))
     print(f"suite wall time: {time.perf_counter() - t0:.1f}s")
 
-    rep = report_mod.make_report(tag, suite_name, records)
+    scaling_section = None
+    if args.scaling:
+        t0 = time.perf_counter()
+        scaling_section = scaling.scaling_section(
+            scaling.get_scaling_specs(args.scaling),
+            log=lambda m: print(m, flush=True),
+        )
+        print(f"scaling wall time: {time.perf_counter() - t0:.1f}s")
+
+    rep = report_mod.make_report(tag, suite_name, records, scaling=scaling_section)
     path = report_mod.write_report(rep, args.out)
     print(f"wrote {path}")
 

@@ -62,6 +62,7 @@ def run_entry(entry: SuiteEntry, zoo: Optional[problems.ZooProblem] = None) -> d
     target = zoo.target_energy(entry.rel_gap)
 
     def timed():
+        """One timed end-to-end run() call -> (result, wall seconds)."""
         t0 = time.perf_counter()
         res = jax.block_until_ready(
             sampler_api.run(

@@ -1,0 +1,306 @@
+"""Async-vs-sync TTS scaling-law harness (the paper's Fig 3G/H, quantified).
+
+The paper's headline claim is not that asynchronous sampling is faster at
+one size but that it *scales better*: time-to-solution grows like
+``A * exp(B * sqrt(n))`` for both dynamics with a smaller exponent ``B``
+for the async kernels. This module measures that claim as data: a size
+sweep over zoo instances, per-kernel TTS scaling fits with bootstrap
+confidence intervals (`observables.fit_scaling`), and the bootstrap
+hypothesis test that async and sync share an exponent
+(`observables.exponent_gap_pvalue`). The result is a schema'd ``scaling``
+section that `benchmarks.report` embeds in ``BENCH_<tag>.json`` and rolls
+up into the committed nightly trajectory.
+
+Conventions:
+
+* TTS is **model time** (`RunResult.t_hit`) at equal per-neuron rate
+  lambda0 = 1 and constant beta — the time-homogeneous basis the paper's
+  comparison uses. The serial sync baseline advances 1 time unit per
+  single-site step; the async kernels advance ~1/n per event, which is
+  exactly the parallelism being measured.
+* The sync baseline is ``random_scan_gibbs``; the async set is ``ctmc`` +
+  ``tau_leap`` everywhere, plus the colored sweep on sparse problems
+  (``colored_gibbs`` — the arbitrary-graph generalization of the lattice
+  ``chromatic_gibbs``).
+* Every kernel gets the same step/event budget ``steps_base +
+  steps_per_n * n`` per trial; misses (no hit within budget) are recorded
+  in the per-size hit rate and excluded from the fit, and sizes with no
+  hits at all are dropped from that kernel's fit (``sizes_fit`` names what
+  survived — a fit over fewer than 2 sizes is reported as null, never
+  silently extrapolated).
+* Each (problem, kernel) pair also runs one diagnostics-enabled pass at
+  the largest size (`sampler_api.run(..., diagnostics=True)` + post-hoc
+  `repro.core.diagnostics.mixing_summary`), so a small exponent can be
+  told apart from a chain that simply is not mixing.
+
+Entry points: `run_scaling(spec)` for one problem family,
+`scaling_section(specs)` for the full report section, CLI wiring in
+`benchmarks.run --scaling`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from benchmarks.suites import stable_seed
+from repro.core import diagnostics, observables, problems, sampler_api
+
+# Versioned independently of the report schema: consumers of the scaling
+# section check this, not the enclosing report's schema_version.
+SCALING_SCHEMA_VERSION = 1
+
+SYNC_KERNEL = "random_scan_gibbs"
+ASYNC_KERNELS_BY_KIND = {
+    "dense": ("ctmc", "tau_leap"),
+    "sparse": ("ctmc", "tau_leap", "colored_gibbs"),
+}
+
+# Observation stride target for the mixing pass: enough samples for a
+# stable tau_int estimate without recording every step.
+MIXING_SAMPLES = 200
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalingSpec:
+    """One scaling sweep: a zoo problem family over an instance-size grid.
+
+    steps_base/steps_per_n set the per-trial budget (steps for the sync
+    baseline and the sweeps, events for the CTMC) as ``steps_base +
+    steps_per_n * n``; beta is the constant inverse temperature every
+    kernel runs at (time-homogeneous dynamics — annealing would confound
+    the exponent with the schedule's shape in model time).
+    """
+
+    problem: str
+    sizes: tuple
+    n_instances: int = 2
+    n_trials: int = 8
+    steps_base: int = 2000
+    steps_per_n: int = 80
+    rel_gap: float = 0.05
+    beta: float = 1.0
+    n_boot: int = 400
+
+    def budget(self, n: int) -> int:
+        """Per-trial step/event budget at size n."""
+        return int(self.steps_base + self.steps_per_n * n)
+
+
+def _spec_kernels(spec: ScalingSpec) -> tuple:
+    """Sync + async kernel names for the spec's problem kind."""
+    kind = problems.problem_kind(spec.problem)
+    if kind not in ASYNC_KERNELS_BY_KIND:
+        raise ValueError(
+            f"scaling sweeps support dense/sparse zoo problems, not {kind!r} "
+            f"({spec.problem!r}); the lattice analogue is chromatic_gibbs on "
+            "a king's graph — use the sparse 'king' family instead"
+        )
+    return (SYNC_KERNEL,) + ASYNC_KERNELS_BY_KIND[kind]
+
+
+def _trial_key(spec: ScalingSpec, kernel: str, size: int, inst: int) -> jax.Array:
+    """Deterministic per-(kernel, size, instance) PRNG key (suite-style)."""
+    return jax.random.key(
+        stable_seed(f"scaling/{spec.problem}-n{size}-i{inst}/{kernel}")
+    )
+
+
+def _tts_run(spec, zoo, kernel, key, n_steps, sample_every=0, diag=False):
+    """One multi-chain first-hit run; returns the RunResult."""
+    return sampler_api.run(
+        zoo.problem,
+        kernel,
+        key,
+        n_steps=n_steps,
+        n_chains=spec.n_trials,
+        sample_every=sample_every,
+        schedule=spec.beta,
+        first_hit=zoo.target_energy(spec.rel_gap),
+        diagnostics=diag,
+    )
+
+
+def _mixing_entry(spec: ScalingSpec, zoo, kernel: str) -> dict:
+    """Diagnostics-enabled pass at one size: flip rate + mixing summary."""
+    n_steps = spec.budget(zoo.n)
+    sample_every = max(1, n_steps // MIXING_SAMPLES)
+    res = _tts_run(
+        spec, zoo, kernel, _trial_key(spec, f"{kernel}/mixing", zoo.n, 0),
+        n_steps, sample_every=sample_every, diag=True,
+    )
+    summary = diagnostics.mixing_summary(res.energies, sample_every=sample_every)
+    d = res.diagnostics
+    summary["flip_rate"] = float(np.mean(np.asarray(d.flip_rate)))
+    summary["flips_per_chain"] = float(np.mean(np.asarray(d.flips)))
+    summary["size"] = int(zoo.n)
+    return summary
+
+
+def run_scaling(spec: ScalingSpec, log=print) -> dict:
+    """Run one spec's full sweep and return its scaling record.
+
+    The record is JSON-ready: per-kernel median TTS and hit rate per size,
+    an ``A e^{B sqrt n}`` fit with bootstrap CIs over the sizes that
+    produced hits, the async-vs-sync exponent gap and its bootstrap
+    p-value, and a largest-size mixing summary per kernel.
+    """
+    kernels = _spec_kernels(spec)
+    sizes = [int(s) for s in spec.sizes]
+    # tts[kernel][size_index] -> 1-D array of finite per-trial TTS values
+    tts = {k: [np.empty(0)] * len(sizes) for k in kernels}
+    hits = {k: np.zeros(len(sizes)) for k in kernels}
+    trials = {k: np.zeros(len(sizes)) for k in kernels}
+    zoos_by_size: dict[int, problems.ZooProblem] = {}
+
+    for si, size in enumerate(sizes):
+        for inst in range(spec.n_instances):
+            zoo = problems.get_problem(spec.problem, size, seed=inst)
+            if inst == 0:
+                zoos_by_size[size] = zoo
+            for kernel in kernels:
+                res = _tts_run(
+                    spec, zoo, kernel, _trial_key(spec, kernel, size, inst),
+                    spec.budget(size),
+                )
+                t_hit = np.asarray(res.t_hit)
+                hit = np.asarray(res.hit, bool)
+                tts[kernel][si] = np.concatenate([tts[kernel][si], t_hit[hit]])
+                hits[kernel][si] += hit.sum()
+                trials[kernel][si] += hit.size
+        log(
+            f"  {spec.problem} n={size}: "
+            + ", ".join(
+                f"{k}={hits[k][si] / max(trials[k][si], 1):.2f}" for k in kernels
+            )
+        )
+
+    ns = np.asarray(sizes, np.float64)
+
+    def fit_over_hit_sizes(kernel: str):
+        """Fit only the sizes where this kernel hit at least once."""
+        mask = np.array([len(t) > 0 for t in tts[kernel]])
+        sizes_fit = ns[mask]
+        if mask.sum() < 2:
+            return None, [int(s) for s in sizes_fit]
+        fit = observables.fit_scaling(
+            sizes_fit, [t for t, m in zip(tts[kernel], mask) if m],
+            n_boot=spec.n_boot, seed=stable_seed(f"{spec.problem}/{kernel}"),
+        )
+        return fit, [int(s) for s in sizes_fit]
+
+    kernel_records = {}
+    for kernel in kernels:
+        fit, sizes_fit = fit_over_hit_sizes(kernel)
+        med = [
+            float(np.median(t)) if len(t) else None for t in tts[kernel]
+        ]
+        kernel_records[kernel] = {
+            "role": "sync" if kernel == SYNC_KERNEL else "async",
+            "tts_median": med,
+            "hit_rate": [
+                float(h / max(t, 1)) for h, t in zip(hits[kernel], trials[kernel])
+            ],
+            "n_hits": [int(h) for h in hits[kernel]],
+            "sizes_fit": sizes_fit,
+            "fit": None if fit is None else {
+                "A": fit.A, "B": fit.B,
+                "A_ci": list(fit.A_ci), "B_ci": list(fit.B_ci),
+            },
+            "mixing": _mixing_entry(spec, zoos_by_size[sizes[-1]], kernel),
+        }
+
+    sync_fit = kernel_records[SYNC_KERNEL]["fit"]
+    gap = {}
+    for kernel in kernels:
+        if kernel == SYNC_KERNEL:
+            continue
+        rec = kernel_records[kernel]
+        # The gap test needs BOTH kernels' trials at a shared size grid
+        # with hits on every included size.
+        mask = np.array([
+            len(a) > 0 and len(b) > 0 for a, b in zip(tts[kernel], tts[SYNC_KERNEL])
+        ])
+        entry = {
+            "B_async": None if rec["fit"] is None else rec["fit"]["B"],
+            "B_sync": None if sync_fit is None else sync_fit["B"],
+            "exponent_gap": None,
+            "pvalue": None,
+            "sizes_tested": [int(s) for s in ns[mask]],
+        }
+        if rec["fit"] is not None and sync_fit is not None and mask.sum() >= 2:
+            entry["exponent_gap"] = sync_fit["B"] - rec["fit"]["B"]
+            entry["pvalue"] = observables.exponent_gap_pvalue(
+                ns[mask],
+                [t for t, m in zip(tts[kernel], mask) if m],
+                [t for t, m in zip(tts[SYNC_KERNEL], mask) if m],
+                n_boot=spec.n_boot,
+                seed=stable_seed(f"{spec.problem}/gap/{kernel}"),
+            )
+        gap[kernel] = entry
+
+    return {
+        "problem": spec.problem,
+        "sizes": sizes,
+        "n_instances": spec.n_instances,
+        "n_trials": spec.n_trials,
+        "trials_per_size": int(spec.n_instances * spec.n_trials),
+        "steps_base": spec.steps_base,
+        "steps_per_n": spec.steps_per_n,
+        "rel_gap": spec.rel_gap,
+        "beta": spec.beta,
+        "n_boot": spec.n_boot,
+        "sync_kernel": SYNC_KERNEL,
+        "kernels": kernel_records,
+        "gap_vs_sync": gap,
+    }
+
+
+def scaling_section(specs: list, log=print) -> dict:
+    """Run every spec and assemble the report's ``scaling`` section."""
+    section = {"schema_version": SCALING_SCHEMA_VERSION, "problems": {}}
+    for spec in specs:
+        log(f"scaling sweep: {spec.problem} sizes={list(spec.sizes)}")
+        section["problems"][spec.problem] = run_scaling(spec, log=log)
+    return section
+
+
+# ---------------------------------------------------------------------------
+# Committed grids (selected via `benchmarks.run --scaling {smoke,full}`)
+# ---------------------------------------------------------------------------
+
+
+def smoke_scaling() -> list:
+    """CI/PR-sized sweep: SK + 3-regular MaxCut, a few CPU minutes."""
+    return [
+        ScalingSpec(problem="sk", sizes=(16, 24, 32, 48),
+                    n_instances=2, n_trials=8,
+                    steps_base=2000, steps_per_n=80, n_boot=400),
+        ScalingSpec(problem="maxcut3r", sizes=(16, 32, 64),
+                    n_instances=2, n_trials=8,
+                    steps_base=2000, steps_per_n=80, n_boot=400),
+    ]
+
+
+def full_scaling() -> list:
+    """Nightly sweep: bigger grids, more instances/trials, tighter CIs."""
+    return [
+        ScalingSpec(problem="sk", sizes=(16, 24, 32, 48, 64, 80),
+                    n_instances=3, n_trials=16,
+                    steps_base=4000, steps_per_n=120, n_boot=2000),
+        ScalingSpec(problem="maxcut3r", sizes=(16, 32, 64, 128),
+                    n_instances=3, n_trials=16,
+                    steps_base=4000, steps_per_n=120, n_boot=2000),
+    ]
+
+
+SCALING_SPECS = {"smoke": smoke_scaling, "full": full_scaling}
+
+
+def get_scaling_specs(name: str) -> list:
+    """Look up a committed scaling grid by name."""
+    if name not in SCALING_SPECS:
+        raise KeyError(f"unknown scaling grid {name!r}; have {sorted(SCALING_SPECS)}")
+    return SCALING_SPECS[name]()

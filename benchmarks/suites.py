@@ -69,6 +69,7 @@ class SuiteEntry:
 
     @property
     def id(self) -> str:
+        """Stable record id: <instance>/<kernel-args>/<backend>[/uN]."""
         pargs = ",".join(f"{k}={v}" for k, v in self.problem_args)
         prob = f"{self.problem}({pargs})" if pargs else self.problem
         args = ",".join(f"{k}={v}" for k, v in self.kernel_args)
@@ -77,17 +78,21 @@ class SuiteEntry:
         return f"{prob}-n{self.size}-s{self.seed}/{kern}/{self.backend}{tail}"
 
     def key(self) -> jax.Array:
+        """Deterministic PRNG key derived from the entry id."""
         return jax.random.key(stable_seed(self.id))
 
     def make_kernel(self) -> sampler_api.SamplerKernel:
+        """Instantiate the entry's kernel."""
         return sampler_api.get_kernel(self.kernel, **dict(self.kernel_args))
 
     def make_problem(self) -> problems.ZooProblem:
+        """Generate the entry's zoo problem instance."""
         return problems.get_problem(
             self.problem, self.size, self.seed, **dict(self.problem_args)
         )
 
     def resolve_schedule(self) -> sampler_api.ScheduleLike:
+        """Schedule tuple -> driver ScheduleLike."""
         if self.schedule is None:
             return None
         name, *args = self.schedule
@@ -241,6 +246,7 @@ SUITES = {"smoke": smoke_suite, "full": full_suite}
 
 
 def get_suite(name: str) -> list[SuiteEntry]:
+    """Look up a registered suite by name."""
     if name not in SUITES:
         raise KeyError(f"unknown suite {name!r}; have {sorted(SUITES)}")
     return SUITES[name]()

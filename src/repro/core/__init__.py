@@ -43,6 +43,7 @@ from repro.core import (  # noqa: F401
     boltzmann,
     ctmc,
     decision,
+    diagnostics,
     event_tree,
     glauber,
     ising,

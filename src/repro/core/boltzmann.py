@@ -54,6 +54,7 @@ def pair_correlations(batch: jax.Array, H: int, W: int) -> jax.Array:
 
 @dataclasses.dataclass
 class CDConfig:
+    """Contrastive-divergence training hyperparameters."""
     lr: float = 0.05
     n_model_steps: int = 64      # sampler steps per CD iteration
     dt: float = 0.25             # tau-leap dt (units of 1/lambda0)
@@ -65,12 +66,14 @@ class CDConfig:
 
 @dataclasses.dataclass
 class CDState:
+    """Carry for the CD training loop (params + persistent chains)."""
     problem: LatticeIsing
     chains: jax.Array  # (n_chains, H, W) persistent model chains
     step: int
 
 
 def init_cd(key: jax.Array, H: int = 16, W: int = 16, cfg: CDConfig = CDConfig()) -> CDState:
+    """Build the initial CD training state."""
     w = jnp.zeros((8, H, W), jnp.float32)
     b = jnp.zeros((H, W), jnp.float32)
     problem = LatticeIsing(

@@ -23,6 +23,7 @@ from repro.core.ising import DenseIsing
 
 
 class CTMCRun(NamedTuple):
+    """A recorded CTMC trajectory: states, model times, energies."""
     s: jax.Array         # final state
     t: jax.Array         # final model time
     samples: jax.Array   # (n_recorded, n) states at event times (strided)

@@ -30,6 +30,7 @@ from repro.core.ising import DenseIsing
 
 @dataclasses.dataclass(frozen=True)
 class DecisionConfig:
+    """Neural decision-making task parameters (paper Fig. 4)."""
     n_neurons: int = 60
     eta: float = 1.0           # geometry-encoding exponent
     alpha_mem: float = -0.25   # memory bias (negative: E favors persistence)
@@ -41,6 +42,7 @@ class DecisionConfig:
 
 
 class Trajectory(NamedTuple):
+    """Recorded decision trajectory (states and model times)."""
     positions: jax.Array  # (T+1, 2)
     spins: jax.Array      # (T, N)
     arrived: jax.Array    # ()
@@ -73,6 +75,7 @@ def simulate(key: jax.Array, targets: np.ndarray, cfg: DecisionConfig) -> Trajec
     assign = jnp.arange(n) % k  # neurons evenly assigned to targets
 
     def outer(carry, key):
+        """One outer observation block of the decision scan."""
         pos, s_prev, arrived = carry
         J_cos, ghat = couplings(pos, targets, assign, cfg.eta)
         problem = _dense_problem(J_cos, s_prev, k, n, cfg.alpha_mem)

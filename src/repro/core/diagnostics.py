@@ -1,0 +1,274 @@
+"""Run diagnostics: in-scan counters and post-hoc mixing statistics.
+
+The benchmark layer can tell a kernel is *fast*; this module tells whether
+it is actually *mixing* — the difference between "async beats sync" and
+"async returned garbage quicker". Two halves:
+
+**Streaming (in-scan) collection.** `sampler_api.run(..., diagnostics=True)`
+threads a `DiagAcc` accumulator through the driver's `lax.scan`: per-chain
+flip counters (Hamming distance between successive states — the empirical
+analogue of the chip's per-neuron activity rate), a Welford running
+mean/variance of the per-step energy, and the step index of the first
+target hit (the event-count companion to `RunResult.t_hit`'s model time).
+The finalized `RunDiagnostics` rides on `RunResult.diagnostics`; with
+`diagnostics=False` (the default) the accumulator is never constructed and
+the compiled program is the pre-diagnostics one, bit for bit.
+
+**Post-hoc mixing statistics.** Computed on the host from the recorded
+energy trace (`RunResult.energies`, shape `(n_chains, n_samples)` or
+`(n_samples,)`): the integrated autocorrelation time via Geyer's initial
+positive sequence (`integrated_autocorr_time`), the effective sample size
+it implies (`effective_sample_size`), and split-R̂ across the vmapped
+chains (`split_rhat`, Gelman et al. / Vehtari et al. 2021 convention).
+`mixing_summary` bundles all three into one JSON-ready dict — what the
+benchmark records embed.
+
+All post-hoc estimators are observation-stride agnostic: they measure lags
+in units of recorded samples, so multiply `tau_int` by `sample_every` (or
+by the model-time stride) to convert back to kernel steps.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "DiagAcc",
+    "RunDiagnostics",
+    "acc_init",
+    "acc_update",
+    "acc_finalize",
+    "integrated_autocorr_time",
+    "effective_sample_size",
+    "split_rhat",
+    "mixing_summary",
+]
+
+
+# ---------------------------------------------------------------------------
+# Streaming (in-scan) collection
+# ---------------------------------------------------------------------------
+
+
+class DiagAcc(NamedTuple):
+    """Per-chain scan-carry accumulator (all scalars; vmap adds chain dims).
+
+    flips:          total sites flipped so far (int32 — exact to 2^31 flips,
+                    plenty for any single run this driver can hold).
+    count:          Welford sample count (= steps taken so far).
+    mean, m2:       Welford running mean and sum of squared deviations of
+                    the per-step energy.
+    first_hit_step: 1-based step index of the first target hit; 0 = the
+                    initial state already hit; -1 = never (or untracked).
+    """
+
+    flips: jnp.ndarray
+    count: jnp.ndarray
+    mean: jnp.ndarray
+    m2: jnp.ndarray
+    first_hit_step: jnp.ndarray
+
+
+class RunDiagnostics(NamedTuple):
+    """Finalized in-scan diagnostics on `RunResult.diagnostics`.
+
+    With `n_chains > 1` every field gains a leading chain dimension (the
+    driver vmaps the accumulator like every other per-chain output).
+
+    n_steps:        kernel steps the accumulator saw.
+    flips:          total sites flipped across the run (int32).
+    flip_rate:      flips / (n_steps * n_sites) — mean per-site flip
+                    probability per step; the paper's activity factor.
+    energy_mean:    Welford mean of the per-step energy trace.
+    energy_var:     unbiased (ddof=1) Welford variance of the same trace.
+    first_hit_step: see `DiagAcc`; pairs with `RunResult.t_hit`.
+    """
+
+    n_steps: jnp.ndarray
+    flips: jnp.ndarray
+    flip_rate: jnp.ndarray
+    energy_mean: jnp.ndarray
+    energy_var: jnp.ndarray
+    first_hit_step: jnp.ndarray
+
+
+def acc_init(e0: jnp.ndarray, init_hit: Optional[jnp.ndarray]) -> DiagAcc:
+    """Fresh accumulator. `e0` fixes the energy dtype (it is NOT counted —
+    the trace starts at the first step's post-step energy); `init_hit` marks
+    a run whose initial state already meets the target (step 0)."""
+    zero = jnp.zeros((), e0.dtype)
+    if init_hit is None:
+        first = jnp.asarray(-1, jnp.int32)
+    else:
+        first = jnp.where(init_hit, 0, -1).astype(jnp.int32)
+    return DiagAcc(
+        flips=jnp.zeros((), jnp.int32),
+        count=jnp.zeros((), jnp.int32),
+        mean=zero,
+        m2=zero,
+        first_hit_step=first,
+    )
+
+
+def acc_update(
+    acc: DiagAcc,
+    n_flipped: jnp.ndarray,
+    e: jnp.ndarray,
+    new_hit: Optional[jnp.ndarray],
+) -> DiagAcc:
+    """Fold one step into the accumulator.
+
+    `n_flipped` is the Hamming distance between the pre- and post-step
+    states; `e` the post-step energy; `new_hit` the driver's "first time at
+    or below target" flag (None when first-hit tracking is off). Welford's
+    update keeps the variance numerically stable over arbitrarily long
+    scans — a plain sum-of-squares cancels catastrophically once
+    E[e]^2 >> Var[e], which cold annealed chains hit routinely."""
+    count = acc.count + 1
+    delta = e - acc.mean
+    mean = acc.mean + delta / count.astype(e.dtype)
+    m2 = acc.m2 + delta * (e - mean)
+    if new_hit is None:
+        first = acc.first_hit_step
+    else:
+        first = jnp.where(new_hit & (acc.first_hit_step < 0), count, acc.first_hit_step)
+    return DiagAcc(
+        flips=acc.flips + n_flipped.astype(jnp.int32),
+        count=count,
+        mean=mean,
+        m2=m2,
+        first_hit_step=first,
+    )
+
+
+def acc_finalize(acc: DiagAcc, n_sites: int) -> RunDiagnostics:
+    """Close the accumulator into the user-facing `RunDiagnostics`."""
+    steps = jnp.maximum(acc.count, 1)
+    var = acc.m2 / jnp.maximum(acc.count - 1, 1).astype(acc.m2.dtype)
+    return RunDiagnostics(
+        n_steps=acc.count,
+        flips=acc.flips,
+        flip_rate=acc.flips.astype(jnp.float32)
+        / (steps.astype(jnp.float32) * float(n_sites)),
+        energy_mean=acc.mean,
+        energy_var=var,
+        first_hit_step=acc.first_hit_step,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Post-hoc mixing statistics (host-side numpy, from recorded energies)
+# ---------------------------------------------------------------------------
+
+
+def _as_chains(x: np.ndarray) -> np.ndarray:
+    """Normalize a trace to (n_chains, n_samples) float64."""
+    x = np.asarray(x, np.float64)
+    if x.ndim == 1:
+        x = x[None, :]
+    if x.ndim != 2:
+        raise ValueError(
+            f"trace must be (n_samples,) or (n_chains, n_samples); got shape {x.shape}"
+        )
+    return x
+
+
+def integrated_autocorr_time(trace: np.ndarray) -> float:
+    """Integrated autocorrelation time of a (possibly multi-chain) trace.
+
+    tau_int = 1 + 2 * sum_t rho_t, with rho_t the chain-averaged
+    normalized autocorrelation and the sum truncated by Geyer's initial
+    positive sequence: pair sums Gamma_k = rho_{2k} + rho_{2k+1} are
+    accumulated while positive, which is the standard bias/variance
+    compromise for monotone chains (Geyer 1992). Lags are in units of
+    RECORDED samples — multiply by the observation stride for kernel steps.
+
+    Edge cases: a zero-variance (flat) trace has no decorrelation signal;
+    we return n_samples (ESS of one sample per chain) rather than NaN so
+    downstream summaries stay finite. The estimate is clipped to
+    [1, n_samples].
+    """
+    x = _as_chains(trace)
+    m, n = x.shape
+    if n < 2:
+        return float(max(n, 1))
+    xc = x - x.mean(axis=1, keepdims=True)
+    var = float(np.mean(xc * xc))
+    if var == 0.0:
+        return float(n)
+    max_lag = n - 1
+    rho = np.empty(max_lag + 1)
+    for lag in range(max_lag + 1):
+        rho[lag] = float(np.mean(xc[:, : n - lag] * xc[:, lag:])) / var
+    tau = 1.0
+    for k in range(1, (max_lag + 1) // 2 + 1):
+        g = rho[2 * k - 1] + (rho[2 * k] if 2 * k <= max_lag else 0.0)
+        if g <= 0.0:
+            break
+        tau += 2.0 * g
+    return float(np.clip(tau, 1.0, n))
+
+
+def effective_sample_size(trace: np.ndarray) -> float:
+    """ESS = (n_chains * n_samples) / tau_int of the pooled trace."""
+    x = _as_chains(trace)
+    return float(x.size / integrated_autocorr_time(x))
+
+
+def split_rhat(trace: np.ndarray) -> float:
+    """Split-R̂ potential scale reduction across chains.
+
+    Each chain is split in half (catching within-chain nonstationarity that
+    whole-chain R̂ misses), then the classic between/within variance ratio
+    is formed over the 2*n_chains half-chains:
+
+        R̂ = sqrt( ((n-1)/n * W + B/n) / W )
+
+    Values near 1 indicate the chains agree; > ~1.01 (Vehtari et al. 2021)
+    means more sampling (or a better kernel) is needed. Edge cases: fewer
+    than 4 samples per chain returns NaN (halves would be length < 2);
+    zero within-chain variance returns 1.0 when the chains also agree
+    (B == 0, e.g. all chains stuck in the same ground state) and inf when
+    they disagree — frozen chains in different states never mix.
+    """
+    x = _as_chains(trace)
+    m, n = x.shape
+    if n < 4:
+        return float("nan")
+    half = n // 2
+    halves = np.concatenate([x[:, :half], x[:, n - half:]], axis=0)  # (2m, half)
+    within = halves.var(axis=1, ddof=1)
+    w = float(within.mean())
+    b = float(half * halves.mean(axis=1).var(ddof=1))
+    if w == 0.0:
+        return 1.0 if b == 0.0 else float("inf")
+    var_plus = (half - 1) / half * w + b / half
+    return float(np.sqrt(var_plus / w))
+
+
+def mixing_summary(energies: Any, sample_every: int = 1) -> dict:
+    """One JSON-ready mixing report from a recorded energy trace.
+
+    `energies` is `RunResult.energies` (or any array shaped like it):
+    (n_samples,) or (n_chains, n_samples). `sample_every` converts the
+    sample-unit tau_int back to kernel steps. Non-finite values (inf
+    energies from diverged runs) are rejected loudly — silently dropping
+    them would bias every statistic.
+    """
+    x = _as_chains(np.asarray(energies))
+    if x.size == 0:
+        raise ValueError("mixing_summary needs a non-empty energy trace "
+                         "(run with sample_every > 0)")
+    if not np.all(np.isfinite(x)):
+        raise ValueError("energy trace contains non-finite values")
+    tau = integrated_autocorr_time(x)
+    return {
+        "n_chains": int(x.shape[0]),
+        "n_samples": int(x.shape[1]),
+        "tau_int_samples": tau,
+        "tau_int_steps": tau * float(sample_every),
+        "ess": float(x.size / tau),
+        "split_rhat": split_rhat(x),
+    }

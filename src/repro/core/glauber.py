@@ -40,6 +40,7 @@ IDEAL_TRIM = None  # sentinel: exact logistic
 
 
 def activation(x: jax.Array, trim: Optional[SigmoidTrim] = None) -> jax.Array:
+    """Sigmoid flip-rate activation, optionally trimmed."""
     return jax.nn.sigmoid(x) if trim is None else trim(x)
 
 

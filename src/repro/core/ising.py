@@ -68,6 +68,7 @@ class DenseIsing:
 
     @property
     def n(self) -> int:
+        """Number of spins."""
         return self.J.shape[-1]
 
     def energy(self, s: jax.Array) -> jax.Array:
@@ -133,10 +134,12 @@ class LatticeIsing:
 
     @property
     def shape(self) -> tuple[int, int]:
+        """Lattice shape (H, W)."""
         return self.w.shape[-2], self.w.shape[-1]
 
     @property
     def n(self) -> int:
+        """Number of lattice sites (H * W)."""
         h, w = self.shape
         return h * w
 
@@ -153,6 +156,7 @@ class LatticeIsing:
         return acc
 
     def local_fields(self, s: jax.Array) -> jax.Array:
+        """King's-move stencil local fields for spins `s`."""
         return self.neighbor_sum(s) + self.b
 
     def energy(self, s: jax.Array) -> jax.Array:
@@ -179,6 +183,7 @@ class LatticeIsing:
         return DenseIsing(J=jnp.asarray(J), b=jnp.asarray(b))
 
     def apply_clamps(self, s: jax.Array) -> jax.Array:
+        """Re-impose clamped-site values on `s`."""
         return jnp.where(self.frozen_mask, self.frozen_values.astype(s.dtype), s)
 
     @property

@@ -282,10 +282,12 @@ class ZooProblem:
 
     @property
     def n(self) -> int:
+        """Number of spins in the wrapped instance."""
         return self.problem.n
 
     @property
     def kind(self) -> str:
+        """Problem kind of the wrapped instance (dense/lattice/sparse)."""
         if isinstance(self.problem, LatticeIsing):
             return "lattice"
         if isinstance(self.problem, SparseIsing):
@@ -312,6 +314,7 @@ def register_problem(name: str, kind: str):
         raise ValueError(f"kind must be 'dense', 'lattice', or 'sparse', got {kind!r}")
 
     def deco(fn):
+        """Register `fn` under `name` and return it unchanged."""
         PROBLEMS[name] = fn
         PROBLEM_KINDS[name] = kind
         fn.zoo_name = name
@@ -335,6 +338,7 @@ def problem_kind(name: str) -> str:
 
 
 def problem_names() -> list[str]:
+    """Sorted names of all registered zoo problems."""
     return sorted(PROBLEMS)
 
 

@@ -69,7 +69,9 @@ from typing import Any, NamedTuple, Optional, Protocol, Union, runtime_checkable
 import jax
 import jax.numpy as jnp
 
+from repro.core import diagnostics as diag
 from repro.core import event_tree, glauber
+from repro.core.diagnostics import RunDiagnostics  # noqa: F401  (re-export)
 from repro.core.ising import DenseIsing, LatticeIsing, king_color_masks
 from repro.core.sparse import SparseIsing
 
@@ -156,9 +158,11 @@ class SamplerKernel(Protocol):
     array-valued config (e.g. sigmoid trims) is data."""
 
     def init(self, problem, key: jax.Array, s0: Optional[jax.Array] = None) -> KernelState:
+        """Build the initial kernel state (random init when s0 is None)."""
         ...
 
     def step(self, problem, state: KernelState, key: jax.Array, beta: jax.Array) -> KernelState:
+        """Advance the chain by one kernel step at inverse temperature beta."""
         ...
 
 
@@ -174,6 +178,7 @@ def register_kernel(name: str):
     (configs, benchmarks, CLI flags)."""
 
     def deco(cls):
+        """Register `cls` and attach its registry name."""
         KERNELS[name] = cls
         cls.name = name
         return cls
@@ -189,6 +194,7 @@ def get_kernel(name: str, **config) -> "SamplerKernel":
 
 
 def kernel_names() -> list[str]:
+    """Sorted names of all registered kernels."""
     return sorted(KERNELS)
 
 
@@ -202,32 +208,39 @@ class Schedule:
     """Base: a schedule maps n_steps -> (n_steps,) array of betas."""
 
     def betas(self, n_steps: int) -> jax.Array:
+        """Materialize the (n_steps,) beta array."""
         raise NotImplementedError
 
 
 @dataclasses.dataclass(frozen=True)
 class constant(Schedule):
+    """Constant-beta schedule."""
     beta: float = 1.0
 
     def betas(self, n_steps: int) -> jax.Array:
+        """Materialize the (n_steps,) beta array."""
         return jnp.full((n_steps,), self.beta, jnp.float32)
 
 
 @dataclasses.dataclass(frozen=True)
 class linear(Schedule):
+    """Linear beta ramp from beta0 to beta1."""
     beta0: float = 0.3
     beta1: float = 2.0
 
     def betas(self, n_steps: int) -> jax.Array:
+        """Materialize the (n_steps,) beta array."""
         return jnp.linspace(self.beta0, self.beta1, n_steps)
 
 
 @dataclasses.dataclass(frozen=True)
 class geometric(Schedule):
+    """Geometric beta ramp from beta0 to beta1."""
     beta0: float = 0.3
     beta1: float = 2.0
 
     def betas(self, n_steps: int) -> jax.Array:
+        """Materialize the (n_steps,) beta array."""
         return self.beta0 * (self.beta1 / self.beta0) ** jnp.linspace(0.0, 1.0, n_steps)
 
 
@@ -305,6 +318,7 @@ class RandomScanGibbs:
     lambda0: float = 1.0
 
     def init(self, problem, key, s0=None) -> KernelState:
+        """Initial state with incremental fields and energy."""
         if s0 is None:
             s0 = random_init(key, state_shape(problem))
         return KernelState(
@@ -315,6 +329,7 @@ class RandomScanGibbs:
         )
 
     def step(self, problem, state, key, beta) -> KernelState:
+        """Resample one uniformly random site from its conditional."""
         s, h = state.s, state.aux
         k_site, k_flip = jax.random.split(key)
         i = jax.random.randint(k_site, (), 0, problem.n)
@@ -360,9 +375,11 @@ class ChromaticGibbs:
 
     def backends_for(self, problem) -> tuple[str, ...]:
         # trims are a ref-only feature, so "auto" must not pick pallas
+        """Backends valid for this kernel config (trims are ref-only)."""
         return ("ref",) if self.trim is not None else self.backends
 
     def init(self, problem: LatticeIsing, key, s0=None) -> KernelState:
+        """Initial state on the clamped lattice."""
         if self.backend == "pallas" and self.trim is not None:
             raise NotImplementedError(
                 "pallas chromatic gibbs does not support trims"
@@ -373,6 +390,7 @@ class ChromaticGibbs:
         return KernelState(s=s0, t=jnp.asarray(0.0, jnp.float32), e=None, aux=())
 
     def step(self, problem: LatticeIsing, state, key, beta) -> KernelState:
+        """One sweep: all 4 king-coloring phases."""
         H, W = problem.shape
         colors = king_color_masks(H, W)
         frozen = problem.frozen_mask
@@ -439,6 +457,7 @@ class ColoredGibbs:
     backend: str = "ref"  # "ref" | "pallas"
 
     def init(self, problem: SparseIsing, key, s0=None) -> KernelState:
+        """Initial state; requires the problem's color_masks."""
         if getattr(problem, "color_masks", None) is None:
             raise ValueError(
                 "colored_gibbs needs problem.color_masks — build the problem "
@@ -450,6 +469,7 @@ class ColoredGibbs:
         return KernelState(s=s0, t=jnp.asarray(0.0, jnp.float32), e=None, aux=())
 
     def step(self, problem: SparseIsing, state, key, beta) -> KernelState:
+        """One sweep over the graph's color classes."""
         masks = problem.color_masks  # (C, n) bool
         s = state.s
         keys = jax.random.split(key, masks.shape[0])
@@ -508,11 +528,13 @@ class TauLeap:
 
     def backends_for(self, problem) -> tuple[str, ...]:
         # lattice/sparse tau-leap have no Pallas kernel; trims are ref-only
+        """Backends valid for this kernel/problem pair."""
         if isinstance(problem, (LatticeIsing, SparseIsing)) or self.trim is not None:
             return ("ref",)
         return self.backends
 
     def init(self, problem, key, s0=None) -> KernelState:
+        """Initial state (int8-quantized weights under pallas)."""
         if s0 is None:
             s0 = random_init(key, state_shape(problem))
         aux = ()
@@ -540,6 +562,7 @@ class TauLeap:
         return KernelState(s=s0, t=jnp.asarray(0.0, jnp.float32), e=None, aux=aux)
 
     def step(self, problem, state, key, beta) -> KernelState:
+        """One tau-leap of model time dt: independent thinned flips."""
         s = state.s
         if isinstance(problem, LatticeIsing):
             h = beta * problem.local_fields(s)
@@ -657,6 +680,7 @@ class CTMC:
         return 1
 
     def init(self, problem, key, s0=None) -> KernelState:
+        """Initial state with fields (and the rate tree on the tree path)."""
         if s0 is None:
             s0 = random_init(key, state_shape(problem))
         h = problem.local_fields(s0)
@@ -678,6 +702,7 @@ class CTMC:
         )
 
     def step(self, problem, state, key, beta) -> KernelState:
+        """One Gillespie event: dwell time + proportional site draw."""
         tree_draw = self.resolved_site_draw(problem) == "tree"
         if tree_draw and isinstance(problem, SparseIsing):
             return self._sparse_tree_step(problem, state, key, beta)
@@ -799,6 +824,10 @@ class RunResult(NamedTuple):
               None when first_hit was not requested.
     hit:      whether the target was reached; None when not requested.
     timing:   RunTiming when run(..., timeit=True); None otherwise.
+    diagnostics: RunDiagnostics when run(..., diagnostics=True) — per-chain
+              flip counters, Welford energy mean/variance, and first-hit
+              step index collected inside the scan (see
+              `repro.core.diagnostics`); None otherwise.
     """
 
     s: jax.Array
@@ -809,6 +838,7 @@ class RunResult(NamedTuple):
     t_hit: Any = None
     hit: Any = None
     timing: Any = None
+    diagnostics: Any = None
 
 
 def kernel_backends(kernel, problem=None) -> tuple[str, ...]:
@@ -852,7 +882,7 @@ def _resolve_backend(backend: Optional[str], kernel=None, problem=None) -> Optio
 
 def _run_core(
     problem, kernel, key, s0, betas, e_target, *,
-    n_steps, sample_every, track_hit, unroll=1,
+    n_steps, sample_every, track_hit, unroll=1, diagnostics=False,
 ):
     """Single-chain scan: the one loop every sampler entry point shares.
 
@@ -860,7 +890,14 @@ def _run_core(
     many kernel steps back to back (lax.scan body unrolling), amortizing
     per-iteration loop overhead without changing a single drawn number —
     keys and betas are pre-split per step either way, so results are
-    bit-identical for every unroll."""
+    bit-identical for every unroll.
+
+    `diagnostics` (static) threads a `diag.DiagAcc` through the carry —
+    per-step flip counts, Welford energy moments, first-hit step. Keys and
+    betas are pre-split identically either way and the False branch builds
+    the exact pre-diagnostics program, so turning it off costs nothing and
+    changes nothing; turning it on changes only what is RECORDED (kernels
+    without an incremental energy pay one problem.energy per step)."""
     if s0 is None:
         key, k_init = jax.random.split(key)
     else:
@@ -873,17 +910,31 @@ def _run_core(
     t_hit0 = jnp.where(init_hit, 0.0, jnp.inf)
 
     def step_fn(carry, inp):
-        st, t_hit, hit = carry
+        """One scan iteration: kernel step + hit/diagnostics tracking."""
+        if diagnostics:
+            st, t_hit, hit, acc = carry
+        else:
+            st, t_hit, hit = carry
         k, beta = inp
-        st = kernel.step(problem, st, k, beta)
+        st_new = kernel.step(problem, st, k, beta)
+        e = new_hit = None
+        if track_hit or diagnostics:
+            e = st_new.e if st_new.e is not None else problem.energy(st_new.s)
         if track_hit:
-            e = st.e if st.e is not None else problem.energy(st.s)
             new_hit = (e <= e_target) & (~hit)
-            t_hit = jnp.where(new_hit, st.t, t_hit)
+            t_hit = jnp.where(new_hit, st_new.t, t_hit)
             hit = hit | new_hit
-        return (st, t_hit, hit), None
+        if diagnostics:
+            n_flipped = jnp.sum(st_new.s != st.s).astype(jnp.int32)
+            acc = diag.acc_update(acc, n_flipped, e, new_hit)
+            return (st_new, t_hit, hit, acc), None
+        return (st_new, t_hit, hit), None
 
-    carry = (state, t_hit0, init_hit)
+    if diagnostics:
+        carry = (state, t_hit0, init_hit,
+                 diag.acc_init(e0, init_hit if track_hit else None))
+    else:
+        carry = (state, t_hit0, init_hit)
 
     track_e = state.e is not None  # static: kernels maintain e incrementally or never
     inner = lambda carry, xs, length: jax.lax.scan(
@@ -895,6 +946,7 @@ def _run_core(
         blk = lambda x: x[:m].reshape((n_samples, sample_every) + x.shape[1:])
 
         def block(carry, inp):
+            """One observation block: sample_every steps then record."""
             carry, _ = inner(carry, inp, sample_every)
             st = carry[0]
             return carry, (st.s, st.t, st.e if track_e else ())
@@ -916,7 +968,12 @@ def _run_core(
         # from the sampling branches' float32 energies.
         energies = jnp.zeros((0,), e0.dtype)
 
-    state, t_hit, hit = carry
+    if diagnostics:
+        state, t_hit, hit, acc = carry
+        run_diag = diag.acc_finalize(acc, n_sites=int(state.s.size))
+    else:
+        state, t_hit, hit = carry
+        run_diag = None
     return RunResult(
         s=state.s,
         t=state.t,
@@ -925,32 +982,41 @@ def _run_core(
         energies=energies,
         t_hit=t_hit if track_hit else None,
         hit=hit if track_hit else None,
-    )
-
-
-@partial(jax.jit, static_argnames=("n_steps", "sample_every", "track_hit", "unroll"))
-def _run_single(
-    problem, kernel, key, s0, betas, e_target, n_steps, sample_every, track_hit, unroll
-):
-    return _run_core(
-        problem, kernel, key, s0, betas, e_target,
-        n_steps=n_steps, sample_every=sample_every, track_hit=track_hit, unroll=unroll,
+        diagnostics=run_diag,
     )
 
 
 @partial(
     jax.jit,
-    static_argnames=("n_steps", "sample_every", "track_hit", "n_chains", "unroll"),
+    static_argnames=("n_steps", "sample_every", "track_hit", "unroll", "diagnostics"),
+)
+def _run_single(
+    problem, kernel, key, s0, betas, e_target, n_steps, sample_every, track_hit,
+    unroll, diagnostics,
+):
+    return _run_core(
+        problem, kernel, key, s0, betas, e_target,
+        n_steps=n_steps, sample_every=sample_every, track_hit=track_hit, unroll=unroll,
+        diagnostics=diagnostics,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "n_steps", "sample_every", "track_hit", "n_chains", "unroll", "diagnostics"
+    ),
 )
 def _run_batched(
     problem, kernel, keys, s0, betas, e_target, n_steps, sample_every, track_hit,
-    n_chains, unroll,
+    n_chains, unroll, diagnostics,
 ):
     def one(key, s0_c, betas_c):
+        """One chain's full scan (vmapped over chains)."""
         return _run_core(
             problem, kernel, key, s0_c, betas_c, e_target,
             n_steps=n_steps, sample_every=sample_every, track_hit=track_hit,
-            unroll=unroll,
+            unroll=unroll, diagnostics=diagnostics,
         )
 
     in_axes = (0, None if s0 is None else 0, 0 if betas.ndim == 2 else None)
@@ -982,6 +1048,7 @@ def run(
     backend: Optional[str] = None,
     unroll: Union[int, str] = "auto",
     timeit: bool = False,
+    diagnostics: bool = False,
 ) -> RunResult:
     """Run `n_steps` of `kernel` on `problem` — the single sampling driver.
 
@@ -1018,6 +1085,14 @@ def run(
         result carries a `RunTiming` in `.timing`. One-shot convenience;
         the benchmark harness times whole `run()` calls itself with median
         repeats (`benchmarks.runner`). Off by default.
+      diagnostics: collect in-scan run diagnostics (per-chain flip
+        counters, Welford energy mean/variance, first-hit step index) into
+        `RunResult.diagnostics` as a `RunDiagnostics` — see
+        `repro.core.diagnostics`. Sampled values are bit-identical with or
+        without it (keys and betas are pre-split per step either way);
+        False (the default) compiles the exact pre-diagnostics program.
+        Kernels without an incremental energy (tau_leap, the Gibbs sweeps)
+        pay one `problem.energy` per step while it is on.
     """
     if isinstance(kernel, str):
         kernel = get_kernel(kernel)
@@ -1034,13 +1109,13 @@ def run(
     if n_chains == 1:
         call = lambda: _run_single(
             problem, kernel, key, s0, betas, e_target, n_steps, sample_every,
-            track_hit, unroll,
+            track_hit, unroll, diagnostics,
         )
     else:
         keys = jax.random.split(key, n_chains)
         call = lambda: _run_batched(
             problem, kernel, keys, s0, betas, e_target, n_steps, sample_every,
-            track_hit, n_chains, unroll,
+            track_hit, n_chains, unroll, diagnostics,
         )
 
     if not timeit:

@@ -73,14 +73,17 @@ class SparseIsing:
 
     @property
     def n(self) -> int:
+        """Number of sites."""
         return self.nbr_idx.shape[-2]
 
     @property
     def max_deg(self) -> int:
+        """Padded neighbor-list width."""
         return self.nbr_idx.shape[-1]
 
     @property
     def n_colors(self) -> int:
+        """Number of color classes (0 when uncolored)."""
         if self.color_masks is None:
             raise ValueError("problem has no color_masks (built with color=False)")
         return self.color_masks.shape[0]

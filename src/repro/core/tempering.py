@@ -41,6 +41,7 @@ SUBSTEP_DT_MAX = 0.1
 
 
 class PTState(NamedTuple):
+    """Parallel-tempering carry: per-replica states and swap stats."""
     s: jax.Array       # (R, n) replica states
     betas: jax.Array   # (R,) inverse temperatures (sorted ascending)
     energies: jax.Array  # (R,)
@@ -48,6 +49,7 @@ class PTState(NamedTuple):
 
 
 def init(problem: DenseIsing, key: jax.Array, betas: jax.Array) -> PTState:
+    """Initial replica states at the ladder's betas."""
     R = betas.shape[0]
     s = sampler_api.random_init(key, (R, problem.n))
     e = jax.vmap(problem.energy)(s)
@@ -71,6 +73,7 @@ def run(
     n_steps = steps_per_round * n_sub
 
     def round_fn(st, inp):
+        """One PT round: per-replica runs then adjacent swaps."""
         key, parity = inp
         k_dyn, k_swap = jax.random.split(key)
         # R replicas advance through the one sampling driver: per-chain keys,

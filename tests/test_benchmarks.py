@@ -389,3 +389,145 @@ def test_cli_smoke_suite_conflict():
         run_cli.main(["--smoke", "--suite", "full"])
     with pytest.raises(SystemExit):  # --only without --figures
         run_cli.main(["--only", "fig3a"])
+
+
+# ---------------------------------------------------------------------------
+# The async-vs-sync scaling-law sweep (benchmarks/scaling.py)
+# ---------------------------------------------------------------------------
+
+from benchmarks import scaling  # noqa: E402
+
+
+def _tiny_spec(**kw):
+    base = dict(problem="sk", sizes=(6, 10), n_instances=1, n_trials=4,
+                steps_base=300, steps_per_n=30, n_boot=20)
+    base.update(kw)
+    return scaling.ScalingSpec(**base)
+
+
+def test_run_scaling_tiny_grid_record_schema():
+    rec = scaling.run_scaling(_tiny_spec(), log=lambda m: None)
+    assert rec["sync_kernel"] == scaling.SYNC_KERNEL
+    assert set(rec["kernels"]) == {"random_scan_gibbs", "ctmc", "tau_leap"}
+    assert rec["kernels"]["random_scan_gibbs"]["role"] == "sync"
+    for kernel, kr in rec["kernels"].items():
+        assert len(kr["tts_median"]) == len(rec["sizes"]) == 2
+        assert all(0.0 <= h <= 1.0 for h in kr["hit_rate"])
+        if kr["fit"] is not None:
+            assert kr["fit"]["B_ci"][0] <= kr["fit"]["B"] <= kr["fit"]["B_ci"][1]
+            assert len(kr["sizes_fit"]) >= 2
+        assert set(kr["mixing"]) >= {"ess", "split_rhat", "tau_int_steps",
+                                     "flip_rate", "size"}
+        assert kr["mixing"]["size"] == rec["sizes"][-1]
+    assert set(rec["gap_vs_sync"]) == {"ctmc", "tau_leap"}
+    for g in rec["gap_vs_sync"].values():
+        if g["pvalue"] is not None:
+            assert 0.0 <= g["pvalue"] <= 1.0
+            assert g["exponent_gap"] == pytest.approx(
+                g["B_sync"] - g["B_async"]
+            )
+    json.dumps(rec)  # the whole record must be JSON-ready
+
+
+def test_scaling_sparse_problems_include_colored_gibbs():
+    spec = _tiny_spec(problem="maxcut3r")
+    assert "colored_gibbs" in scaling._spec_kernels(spec)
+    assert scaling._spec_kernels(_tiny_spec()) == (
+        "random_scan_gibbs", "ctmc", "tau_leap"
+    )
+
+
+def test_scaling_rejects_lattice_problems():
+    with pytest.raises(ValueError, match="dense/sparse"):
+        scaling._spec_kernels(_tiny_spec(problem="ferromagnet"))
+
+
+def test_scaling_committed_grids_cover_acceptance_problems():
+    """Both committed grids sweep SK and 3-regular MaxCut (the PR's
+    acceptance grids), smoke strictly smaller than full."""
+    for name in ("smoke", "full"):
+        specs = scaling.get_scaling_specs(name)
+        assert {s.problem for s in specs} == {"sk", "maxcut3r"}
+    smoke = {s.problem: s for s in scaling.get_scaling_specs("smoke")}
+    full = {s.problem: s for s in scaling.get_scaling_specs("full")}
+    for p in smoke:
+        assert max(smoke[p].sizes) <= max(full[p].sizes)
+        assert smoke[p].n_boot <= full[p].n_boot
+    with pytest.raises(KeyError):
+        scaling.get_scaling_specs("warp")
+
+
+def _fake_scaling_section() -> dict:
+    return {
+        "schema_version": scaling.SCALING_SCHEMA_VERSION,
+        "problems": {
+            "sk": {
+                "kernels": {
+                    "random_scan_gibbs": {"fit": {"B": 0.9}},
+                    "ctmc": {"fit": {"B": 0.4}},
+                    "tau_leap": {"fit": None},
+                },
+                "gap_vs_sync": {
+                    "ctmc": {"pvalue": 0.01},
+                    "tau_leap": {"pvalue": None},
+                },
+            }
+        },
+    }
+
+
+def test_report_embeds_scaling_and_nightly_rollup():
+    rep = report_mod.make_report(
+        "s", "smoke", [], scaling=_fake_scaling_section()
+    )
+    assert rep["scaling"]["schema_version"] == scaling.SCALING_SCHEMA_VERSION
+    # absent when not swept
+    assert "scaling" not in report_mod.make_report("s", "smoke", [])
+    # the nightly record trims it to exponents + p-values only
+    full = _fake_full_report()
+    full["scaling"] = _fake_scaling_section()
+    rec = report_mod.nightly_record(full)
+    assert rec["scaling"]["sk"]["B"] == {
+        "random_scan_gibbs": 0.9, "ctmc": 0.4, "tau_leap": None
+    }
+    assert rec["scaling"]["sk"]["pvalue_vs_sync"]["ctmc"] == 0.01
+    assert "kernels" not in rec["scaling"]["sk"].get("B", {}).get("mixing", {})
+    json.dumps(rec)
+    # no scaling section -> no rollup key
+    assert "scaling" not in report_mod.nightly_record(_fake_full_report())
+
+
+def test_cli_scaling_tiny_grid(tmp_path, monkeypatch):
+    """`--scaling <grid>` embeds the section in the written report."""
+    monkeypatch.setitem(suites.SUITES, "tiny", lambda: [_tiny_entry()])
+    monkeypatch.setitem(
+        scaling.SCALING_SPECS, "tinygrid", lambda: [_tiny_spec()]
+    )
+    rc = run_cli.main([
+        "--suite", "tiny", "--tag", "sc", "--out", str(tmp_path),
+        "--scaling", "tinygrid",
+    ])
+    assert rc == 0
+    rep = report_mod.load(str(tmp_path / "BENCH_sc.json"))
+    assert "sk" in rep["scaling"]["problems"]
+    kr = rep["scaling"]["problems"]["sk"]["kernels"]
+    assert {"random_scan_gibbs", "ctmc", "tau_leap"} == set(kr)
+
+
+def test_committed_pr7_report_has_scaling_section():
+    """The acceptance artifact: BENCH_pr7.json carries per-kernel TTS
+    exponents with bootstrap CIs and async-vs-sync p-values on the SK and
+    3-regular MaxCut grids."""
+    import os
+
+    path = os.path.join(report_mod.REPO_ROOT, "BENCH_pr7.json")
+    rep = report_mod.load(path)
+    section = rep["scaling"]
+    assert section["schema_version"] == scaling.SCALING_SCHEMA_VERSION
+    assert {"sk", "maxcut3r"} <= set(section["problems"])
+    for rec in section["problems"].values():
+        sync = rec["kernels"][rec["sync_kernel"]]
+        assert sync["fit"] is not None and len(sync["fit"]["B_ci"]) == 2
+        assert any(
+            g["pvalue"] is not None for g in rec["gap_vs_sync"].values()
+        )

@@ -1,0 +1,200 @@
+"""Run diagnostics: the in-scan collector behind `run(..., diagnostics=True)`
+and the post-hoc mixing statistics (tau_int / ESS / split-R̂)."""
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import diagnostics, ising, sampler_api
+
+
+def _sk(n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    J = rng.normal(0, 1.0 / np.sqrt(n), (n, n))
+    J = (J + J.T) / 2
+    np.fill_diagonal(J, 0)
+    return ising.DenseIsing(
+        J=jax.numpy.asarray(J, jax.numpy.float32), b=jax.numpy.zeros(n)
+    )
+
+
+# ---------------------------------------------------------------------------
+# The bit-identical guarantee
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kernel", ["random_scan_gibbs", "ctmc", "tau_leap"])
+def test_diagnostics_off_vs_on_bit_identical(kernel):
+    """The tentpole contract: diagnostics=True changes only what is
+    RECORDED — every sampled value matches the diagnostics=False run bit
+    for bit (keys/betas are pre-split per step either way), and the False
+    path carries no diagnostics object at all."""
+    prob = _sk()
+    kw = dict(n_steps=60, n_chains=3, sample_every=10, first_hit=-100.0)
+    off = sampler_api.run(prob, kernel, jax.random.key(7), **kw)
+    on = sampler_api.run(prob, kernel, jax.random.key(7), diagnostics=True, **kw)
+    assert off.diagnostics is None
+    assert on.diagnostics is not None
+    for a, b in zip(off[:7], on[:7]):  # s, t, samples, times, energies, t_hit, hit
+        if a is None:
+            assert b is None
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Collector correctness vs host-side recomputation
+# ---------------------------------------------------------------------------
+
+
+def test_collector_matches_numpy_recomputation():
+    """With sample_every=1 every post-step state is recorded, so flips,
+    energy mean, and energy variance can be recomputed exactly on the host
+    from (s0, samples, energies)."""
+    prob = _sk(n=6, seed=1)
+    s0 = sampler_api.random_init(jax.random.key(11), (6,))
+    res = sampler_api.run(
+        prob, "random_scan_gibbs", jax.random.key(3),
+        n_steps=50, s0=s0, sample_every=1, diagnostics=True,
+    )
+    d = res.diagnostics
+    states = np.concatenate([np.asarray(s0)[None], np.asarray(res.samples)])
+    flips = int(np.sum(states[1:] != states[:-1]))
+    assert int(d.n_steps) == 50
+    assert int(d.flips) == flips
+    assert float(d.flip_rate) == pytest.approx(flips / (50 * 6), rel=1e-6)
+    e = np.asarray(res.energies, np.float64)
+    assert float(d.energy_mean) == pytest.approx(e.mean(), rel=1e-5)
+    assert float(d.energy_var) == pytest.approx(e.var(ddof=1), rel=1e-4)
+
+
+def test_ctmc_flips_once_per_event():
+    """Every CTMC step is one flip event, so flips == n_steps (no frozen
+    chain at this size/beta)."""
+    res = sampler_api.run(
+        _sk(), "ctmc", jax.random.key(0), n_steps=40, diagnostics=True
+    )
+    assert int(res.diagnostics.flips) == 40
+
+
+def test_first_hit_step_semantics():
+    prob = _sk()
+    # unreachable target: never hit -> -1, and t_hit stays inf
+    res = sampler_api.run(
+        prob, "random_scan_gibbs", jax.random.key(5), n_steps=30,
+        first_hit=-1e9, diagnostics=True,
+    )
+    assert int(res.diagnostics.first_hit_step) == -1
+    assert not bool(res.hit)
+    # trivially-met target: the initial state already hits -> step 0
+    res = sampler_api.run(
+        prob, "random_scan_gibbs", jax.random.key(5), n_steps=30,
+        first_hit=1e9, diagnostics=True,
+    )
+    assert int(res.diagnostics.first_hit_step) == 0
+    assert float(res.t_hit) == 0.0
+    # untracked runs carry -1 (no target to hit)
+    res = sampler_api.run(
+        prob, "random_scan_gibbs", jax.random.key(5), n_steps=30,
+        diagnostics=True,
+    )
+    assert int(res.diagnostics.first_hit_step) == -1
+
+
+def test_diagnostics_vmap_chain_dimension():
+    res = sampler_api.run(
+        _sk(), "ctmc", jax.random.key(2), n_steps=25, n_chains=4,
+        diagnostics=True,
+    )
+    d = res.diagnostics
+    assert d.flips.shape == (4,)
+    assert d.energy_mean.shape == (4,)
+    assert np.all(np.asarray(d.n_steps) == 25)
+
+
+# ---------------------------------------------------------------------------
+# Post-hoc mixing statistics
+# ---------------------------------------------------------------------------
+
+
+def test_iid_trace_mixes_perfectly():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(4, 400))
+    tau = diagnostics.integrated_autocorr_time(x)
+    assert tau == pytest.approx(1.0, abs=0.2)
+    assert diagnostics.effective_sample_size(x) == pytest.approx(1600, rel=0.2)
+    assert diagnostics.split_rhat(x) == pytest.approx(1.0, abs=0.02)
+
+
+def test_correlated_trace_has_large_tau_small_ess():
+    """Repeating each iid draw k times gives tau_int ~ k."""
+    rng = np.random.default_rng(1)
+    k = 8
+    x = np.repeat(rng.normal(size=(2, 100)), k, axis=1)
+    tau = diagnostics.integrated_autocorr_time(x)
+    assert tau == pytest.approx(k, rel=0.4)
+    assert diagnostics.effective_sample_size(x) < x.size / 3
+
+
+def test_split_rhat_flags_disagreeing_chains():
+    rng = np.random.default_rng(2)
+    agree = rng.normal(size=(4, 200))
+    disagree = agree + np.array([0.0, 0.0, 10.0, 10.0])[:, None]
+    assert diagnostics.split_rhat(agree) < 1.05
+    assert diagnostics.split_rhat(disagree) > 2.0
+
+
+def test_mixing_edge_cases():
+    # frozen chains: zero variance -> tau = n (ESS = one per chain);
+    # R-hat 1.0 when they agree, inf when they froze in different states
+    flat = np.ones((2, 50))
+    assert diagnostics.integrated_autocorr_time(flat) == 50.0
+    assert diagnostics.split_rhat(flat) == 1.0
+    frozen_apart = np.stack([np.ones(50), -np.ones(50)])
+    assert diagnostics.split_rhat(frozen_apart) == np.inf
+    # too short for split halves -> NaN, not a crash
+    assert np.isnan(diagnostics.split_rhat(np.ones((2, 3))))
+    # shape/finite validation is loud
+    with pytest.raises(ValueError, match="shape"):
+        diagnostics.integrated_autocorr_time(np.ones((2, 2, 2)))
+    with pytest.raises(ValueError, match="non-empty"):
+        diagnostics.mixing_summary(np.empty((3, 0)))
+    with pytest.raises(ValueError, match="non-finite"):
+        diagnostics.mixing_summary(np.array([1.0, np.inf]))
+
+
+def test_mixing_summary_from_real_run():
+    res = sampler_api.run(
+        _sk(), "random_scan_gibbs", jax.random.key(9),
+        n_steps=400, n_chains=4, sample_every=4,
+    )
+    mix = diagnostics.mixing_summary(res.energies, sample_every=4)
+    assert mix["n_chains"] == 4 and mix["n_samples"] == 100
+    assert mix["tau_int_steps"] == pytest.approx(4 * mix["tau_int_samples"])
+    assert 1.0 <= mix["tau_int_samples"] <= 100.0
+    assert 0 < mix["ess"] <= 400.0
+    import json
+
+    json.dumps(mix)
+
+
+# ---------------------------------------------------------------------------
+# The quickstart example stays runnable (it demos the diagnostics API)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_quickstart_example_runs():
+    repo = Path(__file__).resolve().parents[1]
+    proc = subprocess.run(
+        [sys.executable, str(repo / "examples" / "quickstart.py")],
+        env={"PYTHONPATH": str(repo / "src"), "JAX_PLATFORMS": "cpu",
+             "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "ground states found: YES" in proc.stdout
+    assert "split-R-hat" in proc.stdout

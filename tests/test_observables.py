@@ -1,0 +1,116 @@
+"""Observables: lambda0 ACF fits and the TTS scaling machinery — the edge
+cases that used to surface as numpy warnings and NaN-poisoned fits."""
+import numpy as np
+import pytest
+
+from repro.core import observables
+
+
+# ---------------------------------------------------------------------------
+# fit_lambda0
+# ---------------------------------------------------------------------------
+
+
+def test_fit_lambda0_recovers_known_decay():
+    dt = 0.25
+    lags = np.arange(40) * dt
+    acf = np.exp(-0.7 * lags)
+    assert observables.fit_lambda0(acf, dt) == pytest.approx(0.7, rel=1e-6)
+
+
+def test_fit_lambda0_flat_acf_returns_exact_zero():
+    """A frozen neuron's ACF never decays: the fit must return 0.0 exactly
+    (not -0.0, not a tiny negative slope artifact)."""
+    lam = observables.fit_lambda0(np.ones(16), dt=0.5)
+    assert lam == 0.0
+    assert not np.signbit(lam)  # -0.0 would serialize/compare confusingly
+
+
+def test_fit_lambda0_too_few_lags_raises():
+    with pytest.raises(ValueError, match="2 ACF lags"):
+        observables.fit_lambda0(np.array([1.0]), dt=0.5)
+    with pytest.raises(ValueError, match="2 ACF lags"):
+        observables.fit_lambda0(np.array([]), dt=0.5)
+
+
+def test_fit_lambda0_fast_decay_uses_leading_lags():
+    """When the ACF drops below threshold immediately, the fallback fits the
+    first few lags instead of an empty selection."""
+    acf = np.array([1.0, 0.01, 0.0001, 0.0, 0.0])
+    lam = observables.fit_lambda0(acf, dt=1.0)
+    assert np.isfinite(lam) and lam > 0
+
+
+# ---------------------------------------------------------------------------
+# fit_scaling / exponent_gap_pvalue input validation
+# ---------------------------------------------------------------------------
+
+
+def _trials(ns, A, B, rng=None, jitter=0.0, n_trials=6):
+    out = []
+    for n in ns:
+        t = A * np.exp(B * np.sqrt(n)) * np.ones(n_trials)
+        if jitter:
+            t = t * np.exp(rng.normal(0, jitter, n_trials))
+        out.append(t)
+    return out
+
+
+def test_fit_scaling_recovers_exponent():
+    rng = np.random.default_rng(0)
+    ns = np.array([16.0, 32.0, 64.0, 128.0])
+    fit = observables.fit_scaling(
+        ns, _trials(ns, 2.0, 0.8, rng, jitter=0.05), n_boot=200
+    )
+    assert fit.B == pytest.approx(0.8, abs=0.05)
+    assert fit.B_ci[0] <= fit.B <= fit.B_ci[1]
+
+
+def test_fit_scaling_single_size_raises():
+    with pytest.raises(ValueError, match=">= 2 sizes"):
+        observables.fit_scaling(np.array([16.0]), [np.ones(4)], n_boot=10)
+
+
+def test_fit_scaling_misaligned_inputs_raise():
+    with pytest.raises(ValueError, match="aligned"):
+        observables.fit_scaling(
+            np.array([16.0, 32.0, 64.0]), [np.ones(4), np.ones(4)], n_boot=10
+        )
+
+
+def test_fit_scaling_all_miss_size_raises():
+    """A size whose every trial missed (inf TTS) must be dropped by the
+    CALLER; passing it through is a loud error, not a NaN fit."""
+    trials = [np.ones(4), np.full(4, np.inf)]
+    with pytest.raises(ValueError, match="no finite positive TTS"):
+        observables.fit_scaling(np.array([16.0, 32.0]), trials, n_boot=10)
+
+
+def test_fit_scaling_zero_variance_trials_collapse_ci():
+    """Identical trials at every size: every bootstrap resample reproduces
+    the same medians, so the CI collapses onto the point estimate."""
+    ns = np.array([16.0, 32.0, 64.0])
+    fit = observables.fit_scaling(ns, _trials(ns, 1.5, 0.6), n_boot=50)
+    assert fit.B == pytest.approx(0.6, rel=1e-9)
+    assert fit.B_ci[0] == pytest.approx(fit.B, rel=1e-9)
+    assert fit.B_ci[1] == pytest.approx(fit.B, rel=1e-9)
+    assert fit.A_ci[0] == pytest.approx(fit.A, rel=1e-9)
+
+
+def test_exponent_gap_pvalue_separates_and_validates():
+    rng = np.random.default_rng(1)
+    ns = np.array([16.0, 32.0, 64.0, 128.0])
+    fast = _trials(ns, 2.0, 0.3, rng, jitter=0.03)
+    slow = _trials(ns, 2.0, 1.0, rng, jitter=0.03)
+    # clearly different exponents -> tiny p; same data -> p ~ 1
+    assert observables.exponent_gap_pvalue(ns, fast, slow, n_boot=100) < 0.05
+    assert observables.exponent_gap_pvalue(ns, fast, fast, n_boot=100) > 0.5
+    # degenerate grids raise through the same validator, naming the side
+    with pytest.raises(ValueError, match="tts_b"):
+        observables.exponent_gap_pvalue(
+            ns, fast, [np.full(4, np.inf)] * 4, n_boot=10
+        )
+    with pytest.raises(ValueError, match=">= 2 sizes"):
+        observables.exponent_gap_pvalue(
+            np.array([16.0]), [fast[0]], [slow[0]], n_boot=10
+        )

@@ -1,0 +1,85 @@
+"""Validate relative links and anchors in the repo's markdown docs.
+
+CI's lint job runs this over README.md and docs/*.md: every relative
+`[text](target)` must point at a file that exists (anchors are checked
+against the target's headings, GitHub slug rules). External http(s) links
+are not fetched — this guards the docs' internal structure, not the
+internet.
+
+    python tools/check_doc_links.py [files...]   # default: README.md docs/*.md
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# [text](target) — excluding images' src resolution differences (same rules
+# apply for our purposes) and skipping inline code spans handled below.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading -> anchor slug: lowercase, drop punctuation, spaces
+    to hyphens (good enough for the ASCII headings these docs use)."""
+    text = re.sub(r"[`*_]", "", heading.strip()).lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set:
+    """All heading anchors defined in a markdown file."""
+    with open(path) as f:
+        body = CODE_FENCE_RE.sub("", f.read())
+    return {github_slug(h) for h in HEADING_RE.findall(body)}
+
+
+def check_file(path: str) -> list:
+    """Return a list of 'file: problem' strings for one markdown file."""
+    problems = []
+    with open(path) as f:
+        body = CODE_FENCE_RE.sub("", f.read())
+    for target in LINK_RE.findall(body):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        target, _, anchor = target.partition("#")
+        if not target:  # same-file anchor
+            dest = path
+        else:
+            dest = os.path.normpath(os.path.join(os.path.dirname(path), target))
+            if not os.path.exists(dest):
+                problems.append(f"{os.path.relpath(path, REPO_ROOT)}: broken link -> {target}")
+                continue
+        if anchor and dest.endswith(".md"):
+            if github_slug(anchor) not in anchors_of(dest):
+                problems.append(
+                    f"{os.path.relpath(path, REPO_ROOT)}: missing anchor "
+                    f"-> {target or os.path.basename(dest)}#{anchor}"
+                )
+    return problems
+
+
+def main(argv: list) -> int:
+    """Check the given files (default: README.md + docs/*.md); exit 1 on
+    any broken link or anchor."""
+    files = argv or (
+        [os.path.join(REPO_ROOT, "README.md")]
+        + sorted(glob.glob(os.path.join(REPO_ROOT, "docs", "*.md")))
+    )
+    problems = []
+    for path in files:
+        problems += check_file(path)
+    for p in problems:
+        print(p)
+    print(f"checked {len(files)} files: "
+          f"{'OK' if not problems else f'{len(problems)} problems'}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
