@@ -30,9 +30,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import ctmc, ising, observables, problems, sampler_api, samplers
+from repro.core import ctmc, ising, problems, sampler_api, samplers
 from repro.core.glauber import LAMBDA0_CHIP_HZ
-from repro.data import digits
 
 FAST = False
 
@@ -345,7 +344,7 @@ def kernels():
     from repro.core.ising import king_color_masks
 
     B, H, W = 256, 16, 16
-    ks = jax.random.split(jax.random.key(0), 6)
+    ks = jax.random.split(jax.random.key(0), 7)
     s = (2 * jax.random.bernoulli(ks[0], 0.5, (B, H, W)) - 1).astype(jnp.float32)
     w8 = jax.random.normal(ks[1], (8, H, W)) * 0.4
     b = jax.random.normal(ks[2], (H, W)) * 0.2
@@ -367,7 +366,7 @@ def kernels():
     us2 = _timeit(lambda: jax.block_until_ready(fn2(s2)), n=20)
     _row("kernels/dense_field(512x512,int8)", us2, f"GMAC/s={B*N*N/us2/1e3:.2f}")
 
-    u2 = jax.random.uniform(ks[3], (B, N))
+    u2 = jax.random.uniform(ks[6], (B, N))
     sf = s2.astype(jnp.float32)
     dt = jnp.asarray(0.25, jnp.float32)
     fn3 = jax.jit(lambda s, u: ops.tau_leap_step(s, J8, bias, scale, u, dt))

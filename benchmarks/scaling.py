@@ -40,7 +40,6 @@ Entry points: `run_scaling(spec)` for one problem family,
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import numpy as np

@@ -180,7 +180,7 @@ class LatticeIsing:
                         J[y * W + x, yy * W + xx] += 0.5 * w[k, y, x]
         J = J + J.T  # symmetrize: each directed edge contributed half
         b = np.asarray(self.b, dtype=np.float64).reshape(-1)
-        return DenseIsing(J=jnp.asarray(J), b=jnp.asarray(b))
+        return DenseIsing(J=jnp.asarray(J, jnp.float32), b=jnp.asarray(b, jnp.float32))
 
     def apply_clamps(self, s: jax.Array) -> jax.Array:
         """Re-impose clamped-site values on `s`."""
@@ -277,7 +277,7 @@ def enumerate_boltzmann(problem: DenseIsing) -> tuple[np.ndarray, np.ndarray]:
     codes = np.arange(2**n, dtype=np.int64)
     bits = (codes[:, None] >> np.arange(n)[None, :]) & 1
     states = (2 * bits - 1).astype(np.float64)
-    E = np.asarray(jax.vmap(problem.energy)(jnp.asarray(states)))
+    E = np.asarray(jax.vmap(problem.energy)(jnp.asarray(states, jnp.float32)))
     E = E - E.min()
     p = np.exp(-E)
     p /= p.sum()

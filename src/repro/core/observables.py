@@ -11,7 +11,6 @@ from __future__ import annotations
 from typing import NamedTuple
 
 import numpy as np
-from scipy import optimize
 
 
 def autocorrelation(trace: np.ndarray, max_lag: int) -> np.ndarray:

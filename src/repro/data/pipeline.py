@@ -37,6 +37,17 @@ def _zipf_cdf(vocab_size: int, alpha: float) -> np.ndarray:
     return (cdf / cdf[-1]).astype(np.float32)
 
 
+@partial(jax.jit, static_argnames=("host_batch", "seq_len", "vocab_size"))
+def _gen_tokens(cdf: jax.Array, key: jax.Array, *, host_batch: int,
+                seq_len: int, vocab_size: int) -> jax.Array:
+    """One host-shard of Zipf token ids. Module-level so the jit cache is
+    shared across TokenPipeline instances (a static `self` would retrace —
+    and pin a cache entry — per instance)."""
+    u = jax.random.uniform(key, (host_batch, seq_len + 1))
+    ids = jnp.searchsorted(cdf, u).astype(jnp.int32)
+    return jnp.clip(ids, 0, vocab_size - 1)
+
+
 class TokenPipeline:
     """Stateless-batch pipeline: batch(step, host) is a pure function."""
 
@@ -45,13 +56,14 @@ class TokenPipeline:
         self.cfg = cfg
         self._cdf = jnp.asarray(_zipf_cdf(min(cfg.vocab_size, 65536), cfg.zipf_alpha))
 
-    @partial(jax.jit, static_argnums=0)
     def _gen(self, key: jax.Array) -> jax.Array:
         cfg = self.cfg
-        host_batch = cfg.global_batch // cfg.n_hosts
-        u = jax.random.uniform(key, (host_batch, cfg.seq_len + 1))
-        ids = jnp.searchsorted(self._cdf, u).astype(jnp.int32)
-        return jnp.clip(ids, 0, cfg.vocab_size - 1)
+        return _gen_tokens(
+            self._cdf, key,
+            host_batch=cfg.global_batch // cfg.n_hosts,
+            seq_len=cfg.seq_len,
+            vocab_size=cfg.vocab_size,
+        )
 
     def host_batch(self, step: int, host: int = 0) -> dict[str, jax.Array]:
         """Tokens/labels for one host at one step. Deterministic."""

@@ -1,0 +1,28 @@
+"""PASS000 fixture: malformed pragmas are themselves findings.
+
+No `expect[...]` markers here — any text after `ignore[...]` would become
+the pragma's reason and make it valid. test_passlint.py hardcodes the
+expectations for this file instead.
+"""
+import jax
+
+
+def reasonless_pragma(key):
+    a = jax.random.uniform(key, (2,))
+    # passlint: ignore[PASS001]
+    b = jax.random.normal(key, (2,))
+    return a + b
+
+
+def unknown_code_pragma(key):
+    a = jax.random.uniform(key, (2,))
+    # passlint: ignore[PASS999] unknown codes never suppress
+    b = jax.random.normal(key, (2,))
+    return a + b
+
+
+def good_pragma(key):
+    a = jax.random.uniform(key, (2,))
+    # passlint: ignore[PASS001] fixture: demonstrates a valid suppression
+    b = jax.random.normal(key, (2,))
+    return a + b

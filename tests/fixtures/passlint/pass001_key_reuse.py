@@ -1,0 +1,44 @@
+"""PASS001 fixture: key reuse on one path vs clean branch-exclusive use."""
+import jax
+
+
+def bad_sequential_reuse(key):
+    a = jax.random.uniform(key, (4,))
+    b = jax.random.normal(key, (4,))  # expect[PASS001]
+    return a + b
+
+
+def good_branch_exclusive(key, flag: bool):
+    # one consumption per exclusive arm is NOT a reuse
+    if flag:
+        return jax.random.uniform(key, (4,))
+    else:
+        return jax.random.normal(key, (4,))
+
+
+def good_early_return(key, flag: bool):
+    if flag:
+        return jax.random.uniform(key, (2,))
+    return jax.random.normal(key, (2,))
+
+
+def good_split_then_use(key):
+    k1, k2 = jax.random.split(key)
+    return jax.random.uniform(k1, (2,)) + jax.random.normal(k2, (2,))
+
+
+def bad_reuse_after_join(key, flag: bool):
+    if flag:
+        x = jax.random.uniform(key, (2,))
+    else:
+        x = jax.random.normal(key, (2,))
+    return x + jax.random.uniform(key, (2,))  # expect[PASS001]
+
+
+def suppressed_parity_reuse(key):
+    """The ref<->pallas parity idiom: both paths intentionally draw the
+    same uniforms from one key so outputs are bit-identical."""
+    u_ref = jax.random.uniform(key, (8,))
+    # passlint: ignore[PASS001] parity check: ref and pallas paths must see identical uniforms
+    u_pal = jax.random.uniform(key, (8,))
+    return u_ref, u_pal

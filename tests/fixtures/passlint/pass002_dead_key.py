@@ -1,0 +1,20 @@
+"""PASS002 fixture: produced-but-unconsumed keys vs deliberate discards."""
+import jax
+
+
+def bad_dead_subkey(key):
+    sub = jax.random.fold_in(key, 7)  # expect[PASS002]
+    return jax.random.uniform(key, (4,))
+
+
+def good_underscore_discard(key):
+    _unused = jax.random.fold_in(key, 7)
+    return jax.random.uniform(key, (4,))
+
+
+def good_loop_carry(key):
+    total = 0.0
+    for _ in range(3):
+        key, sub = jax.random.split(key)
+        total = total + jax.random.uniform(sub, ())
+    return total

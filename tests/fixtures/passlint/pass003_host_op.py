@@ -1,0 +1,30 @@
+"""PASS003 fixture: host ops on traced values vs static-metadata reads."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def bad_numpy_on_tracer(x):
+    return np.sum(x)  # expect[PASS003]
+
+
+@jax.jit
+def bad_float_cast(x):
+    return jnp.full((2,), float(x))  # expect[PASS003]
+
+
+@jax.jit
+def bad_item(x):
+    return x.item()  # expect[PASS003]
+
+
+@jax.jit
+def good_shape_is_static(x):
+    n = x.shape[0]
+    return jnp.ones((n,)) + x
+
+
+def good_host_code(x):
+    # not jitted: numpy on a plain array is fine
+    return np.sum(x)

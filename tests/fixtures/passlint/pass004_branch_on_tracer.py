@@ -1,0 +1,35 @@
+"""PASS004 fixture: python control flow on traced values vs host values."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bad_if_on_tracer(x):
+    if x > 0:  # expect[PASS004]
+        return x
+    return -x
+
+
+@jax.jit
+def bad_assert_on_tracer(x):
+    assert x.sum() > 0  # expect[PASS004]
+    return x
+
+
+@jax.jit
+def good_where(x):
+    return jnp.where(x > 0, x, -x)
+
+
+@jax.jit
+def good_none_check(x, y=None):
+    if y is None:  # `is None` is a trace-time (host) test
+        y = jnp.zeros_like(x)
+    return x + y
+
+
+@jax.jit
+def good_shape_branch(x):
+    if x.ndim == 2:  # shapes are static under trace
+        return x.sum(axis=1)
+    return x

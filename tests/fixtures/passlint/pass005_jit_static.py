@@ -1,0 +1,37 @@
+"""PASS005 fixture: jit static-argument hazards vs sound configurations."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+class BadPipeline:
+    """Static `self`: retraces (and pins a cache entry) per instance."""
+
+    def __init__(self, n):
+        self.n = n
+
+    @partial(jax.jit, static_argnums=0)  # expect[PASS005]
+    def gen(self, key):
+        return jax.random.uniform(key, (self.n,))
+
+
+@partial(jax.jit, static_argnames=("n",))
+def good_module_level(key, n: int):
+    return jax.random.uniform(key, (n,))
+
+
+@partial(jax.jit, static_argnames=("m",))  # expect[PASS005]
+def bad_stale_argname(key, n: int):
+    # 'm' names no parameter: nothing is static, n retraces per value
+    return jax.random.uniform(key, (n,))
+
+
+@partial(jax.jit, static_argnums=3)  # expect[PASS005]
+def bad_out_of_range(x, y):
+    return x + y
+
+
+@partial(jax.jit, static_argnames=("opts",))  # expect[PASS005]
+def bad_unhashable_default(x, opts=[]):
+    return x if not opts else jnp.abs(x)

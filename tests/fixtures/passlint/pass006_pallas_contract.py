@@ -1,0 +1,83 @@
+"""PASS006 fixture: pallas_call contract drift vs a well-formed site."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _add_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def good_site(x, y):
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((8, 128), lambda i: (0, 0)),
+            pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x, y)
+
+
+def bad_operand_arity(x):
+    return pl.pallas_call(  # expect[PASS006]
+        _add_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((8, 128), lambda i: (0, 0)),
+            pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x)
+
+
+def _one_in_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def bad_kernel_arity(x, y):
+    # kernel takes 1 input ref but the site declares 2 in_specs
+    return pl.pallas_call(  # expect[PASS006]
+        _one_in_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((8, 128), lambda i: (0, 0)),
+            pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x, y)
+
+
+def bad_block_divisibility(x, y):
+    # 48 does not divide 128
+    return pl.pallas_call(  # expect[PASS006]
+        _add_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((8, 48), lambda i: (0, 0)),
+            pl.BlockSpec((8, 48), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, 48), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x, y)
+
+
+def _cast_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].astype(jnp.bfloat16)  # expect[PASS006]
+
+
+def bad_store_dtype(x):
+    # kernel stores bf16 but out_shape declares f32
+    return pl.pallas_call(
+        functools.partial(_cast_kernel),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x)

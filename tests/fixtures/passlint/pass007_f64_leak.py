@@ -1,0 +1,34 @@
+"""PASS007 fixture: numpy float64 reaching jnp vs explicit-dtype paths."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def bad_linspace_leak(n):
+    grid = np.linspace(0.0, 1.0, n)  # float64 by default
+    return jnp.asarray(grid)  # expect[PASS007]
+
+
+def bad_cumsum_leak(x):
+    cdf = np.cumsum(np.asarray(x, np.float64))
+    return jnp.asarray(cdf)  # expect[PASS007]
+
+
+def good_explicit_sink_dtype(n):
+    grid = np.linspace(0.0, 1.0, n)
+    return jnp.asarray(grid, jnp.float32)
+
+
+def good_astype_before_sink(n):
+    grid = np.linspace(0.0, 1.0, n).astype(np.float32)
+    return jnp.asarray(grid)
+
+
+def good_f32_source(n):
+    grid = np.zeros((n,), np.float32)
+    return jnp.asarray(grid)
+
+
+def good_host_only_analysis(x):
+    # never reaches jnp: host-side numpy analysis is out of scope
+    acf = np.cumsum(np.asarray(x, np.float64))
+    return acf / acf[-1]

@@ -1,0 +1,134 @@
+"""Unit tests for tools/check_doc_links.py (the docs link validator CI runs)."""
+import os
+import sys
+import textwrap
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+import check_doc_links as cdl  # noqa: E402
+
+
+# -- github_slug -------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "heading,slug",
+    [
+        ("Quick start", "quick-start"),
+        ("Quick Start", "quick-start"),
+        ("API & internals", "api--internals"),
+        ("`sampler_api.run`", "sampler_apirun"),
+        ("**Bold** heading", "bold-heading"),
+        ("v0.2: what changed?", "v02-what-changed"),
+        ("Tier-1 tests", "tier-1-tests"),
+        ("  padded   ", "padded"),
+    ],
+)
+def test_github_slug(heading, slug):
+    assert cdl.github_slug(heading) == slug
+
+
+# -- anchors_of --------------------------------------------------------------
+
+def test_anchors_skip_code_fences(tmp_path):
+    md = tmp_path / "doc.md"
+    md.write_text(textwrap.dedent("""\
+        # Real Heading
+
+        ```bash
+        # not a heading, just a shell comment
+        ```
+
+        ## Another `code` heading
+        """))
+    anchors = cdl.anchors_of(str(md))
+    assert "real-heading" in anchors
+    assert "another-code-heading" in anchors
+    assert "not-a-heading-just-a-shell-comment" not in anchors
+
+
+# -- check_file --------------------------------------------------------------
+
+def _write(tmp_path, name, body):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(body))
+    return str(p)
+
+
+def test_valid_relative_link_and_anchor(tmp_path):
+    _write(tmp_path, "target.md", """\
+        # Target Doc
+
+        ## Install Steps
+        """)
+    src = _write(tmp_path, "src.md", """\
+        See [the doc](target.md) and [install](target.md#install-steps).
+        """)
+    assert cdl.check_file(src) == []
+
+
+def test_broken_file_link_reported(tmp_path):
+    src = _write(tmp_path, "src.md", "See [gone](missing.md).\n")
+    problems = cdl.check_file(src)
+    assert len(problems) == 1
+    assert "broken link" in problems[0] and "missing.md" in problems[0]
+
+
+def test_missing_anchor_reported(tmp_path):
+    _write(tmp_path, "t.md", "# Only Heading\n")
+    src = _write(tmp_path, "src.md", "See [x](t.md#no-such-anchor).\n")
+    problems = cdl.check_file(src)
+    assert len(problems) == 1
+    assert "missing anchor" in problems[0]
+
+
+def test_same_file_anchor(tmp_path):
+    src = _write(tmp_path, "self.md", """\
+        # Top
+
+        Jump to [below](#details) and [broken](#nope).
+
+        ## Details
+        """)
+    problems = cdl.check_file(src)
+    assert len(problems) == 1
+    assert "#nope" in problems[0]
+
+
+def test_links_inside_code_fences_ignored(tmp_path):
+    src = _write(tmp_path, "src.md", """\
+        # Doc
+
+        ```markdown
+        [this is example syntax](not-a-real-file.md)
+        ```
+        """)
+    assert cdl.check_file(src) == []
+
+
+def test_external_links_not_fetched(tmp_path):
+    src = _write(tmp_path, "src.md", """\
+        [web](https://example.com/x) [plain](http://e.com) [mail](mailto:a@b.c)
+        """)
+    assert cdl.check_file(src) == []
+
+
+def test_anchor_on_non_markdown_target_skipped(tmp_path):
+    (tmp_path / "script.py").write_text("x = 1\n")
+    src = _write(tmp_path, "src.md", "See [code](script.py#L1).\n")
+    # anchors are only validated against markdown targets
+    assert cdl.check_file(src) == []
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    good = _write(tmp_path, "good.md", "# Fine\n")
+    assert cdl.main([good]) == 0
+    bad = _write(tmp_path, "bad.md", "[x](gone.md)\n")
+    assert cdl.main([bad]) == 1
+    out = capsys.readouterr().out
+    assert "broken link" in out
+
+
+def test_live_repo_docs_are_clean():
+    """The repo's own README + docs must pass the validator."""
+    assert cdl.main([]) == 0

@@ -22,6 +22,7 @@ def _make_batch(cfg, key, B=2, S=16):
     if cfg.family == "vlm":
         batch["patch_embeds"] = jax.random.normal(ks[2], (B, cfg.n_patches, cfg.d_model)) * 0.02
     if cfg.family == "audio":
+        # passlint: ignore[PASS001] model families are mutually exclusive, so ks[2] is consumed on exactly one config path
         batch["frames"] = jax.random.normal(ks[2], (B, cfg.encoder_seq, cfg.d_model)) * 0.02
     return batch
 

@@ -1,0 +1,123 @@
+"""Fixture-driven tests for the passlint static analyzer.
+
+Each fixture file under tests/fixtures/passlint/ marks every line that must
+produce a finding with a trailing `# expect[CODE]` comment (plus nearby
+known-good negatives that must NOT be flagged). The test asserts the
+analyzer's active findings for the file are EXACTLY the marked set — so a
+missed positive and a false positive on a negative both fail.
+"""
+import os
+import re
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from tools.passlint.engine import analyze_file  # noqa: E402
+from tools.passlint.findings import CODES  # noqa: E402
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "passlint")
+EXPECT_RE = re.compile(r"expect\[(PASS\d{3})\]")
+
+
+def expected_of(path):
+    """(line, code) pairs marked with `expect[CODE]` comments."""
+    out = set()
+    with open(path) as fh:
+        for i, line in enumerate(fh, 1):
+            if "#" not in line:
+                continue
+            comment = line.split("#", 1)[1]
+            for m in EXPECT_RE.finditer(comment):
+                out.add((i, m.group(1)))
+    return out
+
+
+MARKER_FIXTURES = [
+    "pass001_key_reuse.py",
+    "pass002_dead_key.py",
+    "pass003_host_op.py",
+    "pass004_branch_on_tracer.py",
+    "pass005_jit_static.py",
+    "pass006_pallas_contract.py",
+    "pass007_f64_leak.py",
+]
+
+
+@pytest.mark.parametrize("name", MARKER_FIXTURES)
+def test_fixture_findings_exact(name):
+    path = os.path.join(FIXTURES, name)
+    expected = expected_of(path)
+    assert expected, f"fixture {name} has no expect[] markers"
+    report = analyze_file(path)
+    assert report.error is None, report.error
+    got = {(f.line, f.code) for f in report.findings}
+    missed = expected - got
+    spurious = got - expected
+    assert not missed, f"analyzer missed expected findings: {sorted(missed)}"
+    assert not spurious, f"false positives on known-good lines: {sorted(spurious)}"
+
+
+def test_every_code_has_a_positive_fixture():
+    """PASS001..PASS007 each appear as an expected finding somewhere."""
+    seen = set()
+    for name in MARKER_FIXTURES:
+        seen |= {code for _, code in expected_of(os.path.join(FIXTURES, name))}
+    want = {c for c in CODES if c != "PASS000"}
+    assert want <= seen, f"codes without a positive fixture: {sorted(want - seen)}"
+
+
+def test_pass000_malformed_pragmas():
+    """Reasonless and unknown-code pragmas are PASS000 and suppress nothing;
+    a well-formed pragma suppresses its finding."""
+    path = os.path.join(FIXTURES, "pass000_pragmas.py")
+    report = analyze_file(path)
+    assert report.error is None
+    by_code = {}
+    for f in report.findings:
+        by_code.setdefault(f.code, []).append(f.line)
+    # two malformed pragmas (no reason; unknown code)
+    assert len(by_code.get("PASS000", [])) == 2
+    # their PASS001 findings are NOT suppressed; the good pragma's is
+    assert len(by_code.get("PASS001", [])) == 2
+    assert len(report.suppressed) == 1
+    f, pragma = report.suppressed[0]
+    assert f.code == "PASS001"
+    assert "valid suppression" in pragma.reason
+
+
+def test_suppression_requires_written_reason():
+    """apply_pragmas only suppresses when the pragma parsed with a reason —
+    the PASS000 fixture's reasonless pragma left its PASS001 active."""
+    path = os.path.join(FIXTURES, "pass000_pragmas.py")
+    report = analyze_file(path)
+    suppressed_reasons = [p.reason for _, p in report.suppressed]
+    assert all(r.strip() for r in suppressed_reasons)
+
+
+def test_finding_render_and_json_shape():
+    path = os.path.join(FIXTURES, "pass001_key_reuse.py")
+    report = analyze_file(path)
+    f = report.findings[0]
+    assert f.render().startswith(f"{path}:{f.line}: {f.code} ")
+    d = f.as_dict()
+    assert set(d) == {"path", "line", "code", "message", "hint"}
+    assert d["hint"] == CODES[f.code][1]
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    from tools.passlint.cli import main
+
+    clean = tmp_path / "clean.py"
+    clean.write_text("import jax\n\n\ndef f(key):\n    return jax.random.uniform(key, (2,))\n")
+    assert main([str(clean)]) == 0
+    capsys.readouterr()
+    dirty = os.path.join(FIXTURES, "pass001_key_reuse.py")
+    assert main([dirty, "--format", "json"]) == 1
+    out = capsys.readouterr().out
+    import json
+
+    data = json.loads(out)
+    assert data["files_checked"] == 1
+    assert any(f["code"] == "PASS001" for f in data["findings"])
+    assert any(s["reason"] for s in data["suppressed"])

@@ -1,0 +1,42 @@
+"""Tier-1 gate: the live tree stays passlint-clean.
+
+Runs the analyzer over src/repro, benchmarks, and the test suite itself
+(excluding the intentionally-dirty fixture corpus) and asserts there are no
+unsuppressed findings — and that every suppression carries a written
+reason. This is the same bar the CI lint job enforces; keeping it in tier-1
+means a key-reuse or tracer-safety regression fails fast locally too.
+"""
+import glob
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from tools.passlint.engine import run_paths  # noqa: E402
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _gate_paths():
+    paths = [os.path.join(REPO, "src", "repro"), os.path.join(REPO, "benchmarks")]
+    # top-level test modules only: tests/fixtures/passlint is intentionally dirty
+    paths += sorted(glob.glob(os.path.join(REPO, "tests", "*.py")))
+    paths += sorted(glob.glob(os.path.join(REPO, "examples", "*.py")))
+    return paths
+
+
+def test_live_tree_has_no_unsuppressed_findings():
+    reports = run_paths(_gate_paths())
+    assert reports, "no files analyzed — gate paths are wrong"
+    errors = [f"{r.path}: {r.error}" for r in reports if r.error]
+    assert not errors, f"analysis errors: {errors}"
+    findings = [f.render() for r in reports for f in r.findings]
+    assert not findings, "unsuppressed passlint findings:\n" + "\n".join(findings)
+
+
+def test_every_suppression_has_a_reason():
+    reports = run_paths(_gate_paths())
+    for r in reports:
+        for f, pragma in r.suppressed:
+            assert pragma.reason.strip(), (
+                f"{r.path}:{f.line} suppresses {f.code} without a reason"
+            )

@@ -1,0 +1,1 @@
+"""Repo tooling: doc-link checker and the passlint static analyzer."""

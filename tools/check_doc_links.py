@@ -25,9 +25,11 @@ CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
 
 
 def github_slug(heading: str) -> str:
-    """GitHub's heading -> anchor slug: lowercase, drop punctuation, spaces
-    to hyphens (good enough for the ASCII headings these docs use)."""
-    text = re.sub(r"[`*_]", "", heading.strip()).lower()
+    """GitHub's heading -> anchor slug: strip formatting markers, lowercase,
+    drop punctuation (keeping word chars incl. underscores, hyphens, and
+    spaces), spaces to hyphens. Underscores are kept — GitHub slugs
+    `sampler_api.run` as `sampler_apirun`, not `samplerapirun`."""
+    text = re.sub(r"[`*]", "", heading.strip()).lower()
     text = re.sub(r"[^\w\- ]", "", text)
     return text.replace(" ", "-")
 

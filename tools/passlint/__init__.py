@@ -1,0 +1,18 @@
+"""passlint: JAX/Pallas-aware static analysis for this repository.
+
+Checks (see docs/static-analysis.md for examples and pragma grammar):
+
+  PASS001  PRNG key reuse along a control-flow path
+  PASS002  key produced (split/fold_in) but never consumed
+  PASS003  host op (np.*, float(), .item()) on a traced value
+  PASS004  python if/while/assert on a traced value
+  PASS005  jit static-argument recompile hazards
+  PASS006  pallas_call arity / block-shape / dtype contract violations
+  PASS007  numpy float64 flowing into jnp without an explicit dtype
+
+Run: `python -m tools.passlint src/repro benchmarks [--format json]`.
+"""
+from tools.passlint.engine import analyze_file, analyze_source, run_paths
+from tools.passlint.findings import CODES, Finding
+
+__all__ = ["CODES", "Finding", "analyze_file", "analyze_source", "run_paths"]

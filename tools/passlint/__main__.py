@@ -1,0 +1,6 @@
+"""`python -m tools.passlint` entry point."""
+import sys
+
+from tools.passlint.cli import main
+
+sys.exit(main())

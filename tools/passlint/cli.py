@@ -1,0 +1,106 @@
+"""Command-line interface: `python -m tools.passlint <paths...>`.
+
+Exit status: 0 when no unsuppressed findings (and no analysis errors),
+1 otherwise. `--format json` emits a machine-readable report;
+`--summary-md FILE` appends a markdown table (for CI job summaries).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from tools.passlint.engine import FileReport, run_paths
+from tools.passlint.findings import CODES
+
+
+def _text_report(reports: list[FileReport], show_suppressed: bool) -> str:
+    lines: list[str] = []
+    n_active = 0
+    n_suppressed = 0
+    for r in reports:
+        if r.error:
+            lines.append(f"{r.path}: analysis error: {r.error}")
+            n_active += 1
+        for f in r.findings:
+            n_active += 1
+            lines.append(f.render())
+            lines.append(f"    hint: {f.hint}")
+        n_suppressed += len(r.suppressed)
+        if show_suppressed:
+            for f, p in r.suppressed:
+                lines.append(f"{f.render()}  [suppressed: {p.reason}]")
+    lines.append(
+        f"passlint: {n_active} finding(s), {n_suppressed} suppressed, "
+        f"{len(reports)} file(s) checked"
+    )
+    return "\n".join(lines)
+
+
+def _json_report(reports: list[FileReport]) -> str:
+    return json.dumps(
+        {
+            "findings": [f.as_dict() for r in reports for f in r.findings],
+            "suppressed": [
+                {**f.as_dict(), "reason": p.reason}
+                for r in reports for f, p in r.suppressed
+            ],
+            "errors": [
+                {"path": r.path, "error": r.error} for r in reports if r.error
+            ],
+            "files_checked": len(reports),
+        },
+        indent=2,
+    )
+
+
+def _markdown_summary(reports: list[FileReport]) -> str:
+    rows = [f for r in reports for f in r.findings]
+    errors = [r for r in reports if r.error]
+    out = ["## passlint", ""]
+    if not rows and not errors:
+        n_sup = sum(len(r.suppressed) for r in reports)
+        out.append(
+            f"No findings ({len(reports)} files checked, {n_sup} suppressed)."
+        )
+        return "\n".join(out) + "\n"
+    if rows:
+        out += ["| Location | Code | Message |", "|---|---|---|"]
+        out += [
+            f"| `{f.path}:{f.line}` | {f.code} ({CODES[f.code][0]}) | {f.message} |"
+            for f in rows
+        ]
+    for r in errors:
+        out.append(f"- `{r.path}`: analysis error: {r.error}")
+    return "\n".join(out) + "\n"
+
+
+def main(argv: list[str] | None = None) -> int:
+    """Entry point; returns the process exit status."""
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.passlint",
+        description="JAX/Pallas-aware static analysis for this repo "
+        "(PRNG key discipline, tracer safety, jit/pallas contracts).",
+    )
+    ap.add_argument("paths", nargs="+", help="files or directories to check")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also list pragma-suppressed findings (text format)")
+    ap.add_argument("--summary-md", metavar="FILE",
+                    help="append a markdown summary (e.g. $GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args(argv)
+
+    reports = run_paths(args.paths)
+    if args.format == "json":
+        print(_json_report(reports))
+    else:
+        print(_text_report(reports, args.show_suppressed))
+    if args.summary_md:
+        with open(args.summary_md, "a", encoding="utf-8") as fh:
+            fh.write(_markdown_summary(reports))
+    failed = any(r.findings or r.error for r in reports)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,70 @@
+"""Drive all passlint checks over files and apply pragma suppressions."""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+
+from tools.passlint import f64flow, jit_static, keyflow, pallas_contract, taint
+from tools.passlint.findings import Finding, sort_findings
+from tools.passlint.pragmas import Pragma, apply_pragmas, parse_pragmas
+from tools.passlint.resolve import Resolver
+
+
+@dataclasses.dataclass
+class FileReport:
+    """Per-file analysis result."""
+
+    path: str
+    findings: list[Finding]            # active (unsuppressed)
+    suppressed: list[tuple[Finding, Pragma]]
+    error: str | None = None           # syntax / decode failure
+
+
+def analyze_source(source: str, path: str) -> FileReport:
+    """Parse once, run every check, apply pragmas."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return FileReport(path, [], [], error=f"syntax error: {e.msg} (line {e.lineno})")
+    resolver = Resolver(tree)
+    findings: list[Finding] = []
+    findings += keyflow.check_functions(tree, resolver, path)
+    findings += taint.check_module(tree, resolver, path)
+    findings += jit_static.check_module(tree, resolver, path)
+    findings += pallas_contract.check_module(tree, resolver, path)
+    findings += f64flow.check_module(tree, resolver, path)
+    pragmas, pragma_problems = parse_pragmas(source, path)
+    active, suppressed = apply_pragmas(findings, pragmas)
+    return FileReport(path, sort_findings(active + pragma_problems), suppressed)
+
+
+def analyze_file(path: str) -> FileReport:
+    """Read and analyze one file."""
+    try:
+        with open(path, encoding="utf-8") as fh:
+            source = fh.read()
+    except (OSError, UnicodeDecodeError) as e:
+        return FileReport(path, [], [], error=str(e))
+    return analyze_source(source, path)
+
+
+def collect_files(paths: list[str]) -> list[str]:
+    """Expand file/directory arguments into a sorted list of .py files."""
+    out: set[str] = set()
+    for p in paths:
+        if os.path.isfile(p):
+            out.add(p)
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = [d for d in dirs
+                           if d not in ("__pycache__", ".git") and not d.startswith(".")]
+                for f in files:
+                    if f.endswith(".py"):
+                        out.add(os.path.join(root, f))
+    return sorted(out)
+
+
+def run_paths(paths: list[str]) -> list[FileReport]:
+    """Analyze every .py file under the given paths."""
+    return [analyze_file(p) for p in collect_files(paths)]

@@ -1,0 +1,196 @@
+"""PASS007: numpy float64 values flowing into jnp ops.
+
+With `jax_enable_x64` off (this repo never enables it), a float64 numpy
+array passed to a `jnp.*` op is silently downcast to float32 — harmless
+when intended, a hidden precision assumption when not. The check is a
+per-function forward dataflow:
+
+  * **sources** — numpy calls that produce float64 by default
+    (`np.linspace`, `np.zeros`, `np.cumsum`, `np.random.rand`, ...) with
+    no `dtype=` argument, explicit `dtype=np.float64` / `"float64"`
+    anywhere, and `np.float64(...)` scalars. Results of numpy ops over
+    tainted inputs stay tainted.
+  * **sanitizers** — `.astype(<non-f64>)`, a non-f64 `dtype=` kwarg, or an
+    explicit dtype argument to the jnp sink itself (`jnp.asarray(x,
+    jnp.float32)` states the intent).
+  * **sinks** — a tainted value passed to any `jax.numpy.*` call without
+    an explicit dtype.
+
+Host-only analysis code (numpy fits that never touch jnp) never reaches a
+sink, so it is naturally out of scope.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from tools.passlint.findings import Finding
+from tools.passlint.resolve import Resolver, keyword_arg
+
+# numpy constructors whose default dtype is float64
+F64_PRODUCERS = {
+    "linspace", "logspace", "geomspace", "zeros", "ones", "full", "empty",
+    "eye", "identity", "cumsum", "cumprod", "diff", "gradient", "interp",
+    "polyfit", "polyval", "cov", "corrcoef", "histogram", "percentile",
+    "quantile", "random.rand", "random.randn", "random.random",
+    "random.uniform", "random.normal", "random.standard_normal",
+}
+# numpy ops that PRESERVE the dtype of tainted inputs
+_PRESERVING_PREFIX = "numpy."
+
+
+_NON_F64_DTYPES = {
+    "float32", "float16", "bfloat16", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64", "bool_", "single", "complex64",
+}
+# calls whose second positional argument is a dtype
+_DTYPE_POS2 = {"asarray", "array", "zeros", "ones", "empty", "arange"}
+
+
+def _is_f64_dtype(resolved: Optional[str], node: ast.AST) -> bool:
+    if resolved in ("numpy.float64", "numpy.double", "jax.numpy.float64", "float"):
+        return True
+    return isinstance(node, ast.Constant) and node.value in ("float64", "double")
+
+
+def _dtype_like(resolved: Optional[str], node: ast.AST) -> Optional[str]:
+    """'f64' / 'other' when the expression is recognizably a dtype, else None."""
+    if _is_f64_dtype(resolved, node):
+        return "f64"
+    if resolved is not None:
+        tail = resolved.rsplit(".", 1)[-1]
+        if tail in _NON_F64_DTYPES or resolved in ("bool", "int"):
+            return "other"
+    if isinstance(node, ast.Constant) and isinstance(node.value, str) \
+            and node.value in _NON_F64_DTYPES:
+        return "other"
+    return None
+
+
+def _dtype_kwarg_state(call: ast.Call, resolver: Resolver) -> Optional[bool]:
+    """None = no dtype argument; True = dtype is f64; False = non-f64."""
+    dt = keyword_arg(call, "dtype")
+    if dt is None:
+        return None
+    return _is_f64_dtype(resolver.resolve(dt), dt)
+
+
+class F64Flow:
+    """Forward float64 taint through one function body."""
+
+    def __init__(self, fn: ast.FunctionDef, resolver: Resolver, path: str):
+        self.fn = fn
+        self.resolver = resolver
+        self.path = path
+        self.tainted: set[str] = set()
+        self.findings: list[Finding] = []
+        self._seen: set[tuple[int, str]] = set()
+
+    def _report(self, line: int, msg: str):
+        if (line, msg) not in self._seen:
+            self._seen.add((line, msg))
+            self.findings.append(Finding(self.path, line, "PASS007", msg))
+
+    def _name_of(self, e) -> Optional[str]:
+        return e.id if isinstance(e, ast.Name) else None
+
+    def is_tainted(self, e) -> bool:
+        """Does this expression produce a (possibly) float64 numpy value?"""
+        if isinstance(e, ast.Name):
+            return e.id in self.tainted
+        if isinstance(e, ast.Call):
+            return self._call_taint(e)
+        if isinstance(e, ast.BinOp):
+            return self.is_tainted(e.left) or self.is_tainted(e.right)
+        if isinstance(e, ast.UnaryOp):
+            return self.is_tainted(e.operand)
+        if isinstance(e, ast.Subscript):
+            return self.is_tainted(e.value)
+        if isinstance(e, (ast.Tuple, ast.List)):
+            return any(self.is_tainted(x) for x in e.elts)
+        if isinstance(e, ast.IfExp):
+            return self.is_tainted(e.body) or self.is_tainted(e.orelse)
+        return False
+
+    def _call_taint(self, call: ast.Call) -> bool:
+        r = self.resolver.resolve(call.func)
+        # .astype(...) sanitizes or retaints by its literal dtype
+        if isinstance(call.func, ast.Attribute) and call.func.attr == "astype" \
+                and call.args:
+            return _is_f64_dtype(self.resolver.resolve(call.args[0]), call.args[0])
+        if r is None or not r.startswith(_PRESERVING_PREFIX):
+            return False
+        dtype_state = _dtype_kwarg_state(call, self.resolver)
+        if dtype_state is not None:
+            return dtype_state
+        suffix = r[len(_PRESERVING_PREFIX):]
+        # positional dtype (np.asarray(x, np.float32), np.zeros(shape, bool))
+        for a in call.args:
+            kind = _dtype_like(self.resolver.resolve(a), a)
+            if kind is not None:
+                return kind == "f64"
+        # an unresolvable value in a known dtype position (np.asarray(x,
+        # dtype)) still states an explicit choice
+        if suffix in _DTYPE_POS2 and len(call.args) >= 2:
+            return False
+        if suffix in F64_PRODUCERS:
+            return True
+        if suffix == "float64":
+            return True
+        # other numpy ops propagate taint from their arguments
+        args = list(call.args) + [kw.value for kw in call.keywords]
+        return any(self.is_tainted(a) for a in args)
+
+    def _check_sinks(self, e):
+        for node in ast.walk(e) if e is not None else ():
+            if not isinstance(node, ast.Call):
+                continue
+            r = self.resolver.resolve(node.func)
+            if r is None or not r.startswith("jax.numpy."):
+                continue
+            dt = keyword_arg(node, "dtype")
+            explicit = dt is not None or any(
+                _dtype_like(self.resolver.resolve(a), a) is not None
+                for a in node.args
+            ) or (
+                r[len("jax.numpy."):] in _DTYPE_POS2 and len(node.args) >= 2
+            )
+            if explicit:
+                continue
+            for a in list(node.args) + [kw.value for kw in node.keywords]:
+                if self.is_tainted(a):
+                    self._report(
+                        node.lineno,
+                        f"float64 numpy value flows into '{r.replace('jax.numpy', 'jnp')}' "
+                        "without an explicit dtype — silently downcast with "
+                        "x64 disabled",
+                    )
+                    break
+
+    def run(self) -> list[Finding]:
+        """Walk statements in order, tracking assignments then sinks."""
+        for st in ast.walk(self.fn):
+            if isinstance(st, ast.Assign):
+                t = self.is_tainted(st.value)
+                for target in st.targets:
+                    for n in ast.walk(target):
+                        if isinstance(n, ast.Name):
+                            (self.tainted.add if t else self.tainted.discard)(n.id)
+            elif isinstance(st, ast.AugAssign):
+                if self.is_tainted(st.value) and isinstance(st.target, ast.Name):
+                    self.tainted.add(st.target.id)
+        # second pass for sinks, with the full tainted set known (handles
+        # use-before-def order in loops without a worklist)
+        for st in ast.walk(self.fn):
+            if isinstance(st, (ast.Assign, ast.AugAssign, ast.Expr, ast.Return)):
+                self._check_sinks(st.value)
+        return self.findings
+
+
+def check_module(tree: ast.Module, resolver: Resolver, path: str) -> list[Finding]:
+    """PASS007 over every function in a module."""
+    findings: list[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            findings += F64Flow(node, resolver, path).run()
+    return findings

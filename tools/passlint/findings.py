@@ -1,0 +1,95 @@
+"""Finding record + the check-code registry (codes, titles, fix hints).
+
+Every passlint check reports through a `Finding`. The registry below is the
+single source of truth for which codes exist; `docs/static-analysis.md`
+documents each with a triggering example, and `# passlint: ignore[CODE]
+reason` pragmas suppress individual findings (see `pragmas.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# code -> (title, fix hint). PASS000 is the meta-code for malformed
+# suppressions; PASS001-007 are the analysis checks.
+CODES: dict[str, tuple[str, str]] = {
+    "PASS000": (
+        "malformed pragma",
+        "write '# passlint: ignore[CODE] <reason>' — the reason is mandatory",
+    ),
+    "PASS001": (
+        "PRNG key reuse",
+        "split the key (jax.random.split / fold_in) so each consumer gets "
+        "a fresh stream; reused keys correlate draws and silently bias "
+        "sampling statistics",
+    ),
+    "PASS002": (
+        "dead PRNG key",
+        "consume or drop the key explicitly (prefix with '_' if the unused "
+        "split is intentional); produced-but-unused keys usually mean a "
+        "consumer was wired to the wrong key",
+    ),
+    "PASS003": (
+        "host op on traced value",
+        "keep traced values in jnp ops; np.*, float(), int(), bool() and "
+        ".item() force a concrete value and fail (or silently constant-fold) "
+        "under jit/scan/vmap/pallas",
+    ),
+    "PASS004": (
+        "python control flow on traced value",
+        "use jnp.where / lax.cond / lax.while_loop instead; python "
+        "if/while/assert on a tracer raises ConcretizationTypeError or "
+        "bakes in a trace-time constant",
+    ),
+    "PASS005": (
+        "jit recompile hazard",
+        "static_argnums/static_argnames must name hashable, genuinely "
+        "static parameters that exist in the signature; a static 'self' "
+        "retraces (and pins a cache entry) per instance",
+    ),
+    "PASS006": (
+        "pallas_call contract violation",
+        "block shapes must divide operand shapes, the kernel signature "
+        "must match in_specs + outputs + scratch, and the stored dtype "
+        "must match out_shape",
+    ),
+    "PASS007": (
+        "float64 leak into jnp",
+        "give the numpy intermediate an explicit 32-bit dtype (or .astype) "
+        "before it reaches jnp; with x64 disabled the implicit downcast "
+        "hides precision assumptions",
+    ),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic: where, which code, and what went wrong."""
+
+    path: str
+    line: int
+    code: str
+    message: str
+
+    @property
+    def hint(self) -> str:
+        """The registry fix hint for this finding's code."""
+        return CODES[self.code][1]
+
+    def render(self) -> str:
+        """`path:line: CODE message` — the one-line text format."""
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+    def as_dict(self) -> dict:
+        """JSON-format record (includes the fix hint)."""
+        return {
+            "path": self.path,
+            "line": self.line,
+            "code": self.code,
+            "message": self.message,
+            "hint": self.hint,
+        }
+
+
+def sort_findings(findings: list[Finding]) -> list[Finding]:
+    """Stable report order: by file, then line, then code."""
+    return sorted(findings, key=lambda f: (f.path, f.line, f.code))

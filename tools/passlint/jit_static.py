@@ -1,0 +1,155 @@
+"""PASS005: jit static-argument recompile hazards.
+
+Statically decidable misuses of `static_argnums` / `static_argnames`:
+
+  * a jitted **method** whose argnum 0 (`self`/`cls`) is static — every
+    instance is a distinct cache key, so the function retraces per
+    instance and pins each instance alive in the global jit cache (the
+    seed's `TokenPipeline._gen` was a live instance);
+  * a `static_argnames` entry naming no parameter in the signature — a
+    stale entry that silently stops marking anything static after a
+    refactor, retracing on every new value of the now-traced argument;
+  * a `static_argnums` index out of range of the signature;
+  * a static parameter whose default is an unhashable literal (list /
+    dict / set) — jit raises only when the default is actually used.
+
+Both decorator form (`@partial(jax.jit, ...)`, `@jax.jit`) and call form
+(`jax.jit(f, static_argnums=...)` where `f` is a module-level function)
+are checked.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from tools.passlint.findings import Finding
+from tools.passlint.resolve import Resolver, const_int, keyword_arg
+
+
+def _jit_config_call(node: ast.AST, resolver: Resolver) -> Optional[ast.Call]:
+    """The Call carrying jit kwargs, for decorator or call form, else None."""
+    if not isinstance(node, ast.Call):
+        return None
+    r = resolver.resolve(node.func)
+    if r == "jax.jit":
+        return node
+    if r in ("functools.partial", "partial") and node.args:
+        if resolver.resolve(node.args[0]) == "jax.jit":
+            return node
+    return None
+
+
+def _static_argnums(call: ast.Call) -> list[int]:
+    nums = keyword_arg(call, "static_argnums")
+    if nums is None:
+        return []
+    i = const_int(nums)
+    if i is not None:
+        return [i]
+    if isinstance(nums, (ast.Tuple, ast.List)):
+        return [v for v in (const_int(e) for e in nums.elts) if v is not None]
+    return []
+
+
+def _static_argnames(call: ast.Call) -> list[str]:
+    names = keyword_arg(call, "static_argnames")
+    if names is None:
+        return []
+    if isinstance(names, ast.Constant) and isinstance(names.value, str):
+        return [names.value]
+    if isinstance(names, (ast.Tuple, ast.List)):
+        return [e.value for e in names.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return []
+
+
+def _check_pair(call: ast.Call, fn: ast.FunctionDef, is_method: bool,
+                path: str, line: int) -> list[Finding]:
+    """All PASS005 conditions for one (jit config, function) pair."""
+    findings: list[Finding] = []
+    args = fn.args
+    pos_params = [a.arg for a in args.posonlyargs + args.args]
+    all_params = pos_params + [a.arg for a in args.kwonlyargs]
+    has_varargs = args.vararg is not None
+
+    for i in _static_argnums(call):
+        idx = i if i >= 0 else len(pos_params) + i
+        if is_method and idx == 0:
+            findings.append(Finding(
+                path, line, "PASS005",
+                f"static argnum 0 on method '{fn.name}' marks `self` static "
+                "— jit retraces per instance and pins every instance in its "
+                "cache; jit a module-level function (or a per-instance "
+                "closure) instead",
+            ))
+        elif not has_varargs and not (0 <= idx < len(pos_params)):
+            findings.append(Finding(
+                path, line, "PASS005",
+                f"static_argnums={i} is out of range for '{fn.name}' "
+                f"({len(pos_params)} positional parameters)",
+            ))
+    for name in _static_argnames(call):
+        if name not in all_params and not has_varargs and args.kwarg is None:
+            findings.append(Finding(
+                path, line, "PASS005",
+                f"static_argnames entry '{name}' names no parameter of "
+                f"'{fn.name}' — a stale entry silently stops marking "
+                "anything static",
+            ))
+
+    # unhashable default on a static parameter
+    static_names = set(_static_argnames(call))
+    for i in _static_argnums(call):
+        if 0 <= i < len(pos_params):
+            static_names.add(pos_params[i])
+    defaults = list(args.defaults)
+    defaulted = pos_params[len(pos_params) - len(defaults):]
+    pairs = list(zip(defaulted, defaults)) + [
+        (a.arg, d) for a, d in zip(args.kwonlyargs, args.kw_defaults)
+        if d is not None
+    ]
+    for pname, default in pairs:
+        if pname in static_names and isinstance(default, (ast.List, ast.Dict, ast.Set)):
+            findings.append(Finding(
+                path, line, "PASS005",
+                f"static parameter '{pname}' of '{fn.name}' has an "
+                "unhashable default — jit raises TypeError whenever the "
+                "default is used",
+            ))
+    return findings
+
+
+def check_module(tree: ast.Module, resolver: Resolver, path: str) -> list[Finding]:
+    """PASS005 over decorator-form and call-form jit in a module."""
+    findings: list[Finding] = []
+    methods: set[str] = set()
+    defs: dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    methods.add(item.name)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, node)
+
+    for fn in defs.values():
+        first = fn.args.posonlyargs + fn.args.args
+        is_method = fn.name in methods and bool(first) and \
+            first[0].arg in ("self", "cls")
+        for dec in fn.decorator_list:
+            call = _jit_config_call(dec, resolver)
+            if call is not None:
+                findings += _check_pair(call, fn, is_method, path, dec.lineno)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            call = _jit_config_call(node, resolver)
+            if call is None or call is not node:
+                continue
+            # call form: jax.jit(f, static_...) — resolve f if local
+            target = node.args[0] if node.args else None
+            if isinstance(target, ast.Name) and target.id in defs:
+                fn = defs[target.id]
+                findings += _check_pair(call, fn, fn.name in methods, path,
+                                        node.lineno)
+    return findings

@@ -1,0 +1,467 @@
+"""PASS001/PASS002: branch-sensitive PRNG key discipline analysis.
+
+Per function, an abstract interpreter tracks every value known to be a
+`jax.random` key (produced by `key`/`PRNGKey`/`split`/`fold_in`/`clone`, or
+a parameter with a key-ish name) and counts its consumptions:
+
+  * a `jax.random` sampler or `split` consumes its key argument;
+  * passing a key to any other call consumes it once (the callee is assumed
+    to use it);
+  * `fold_in`/`clone` *read* their key without consuming it — deriving many
+    tagged streams from one parent key is the documented JAX idiom.
+
+PASS001 fires when one key is consumed twice along a single control-flow
+path. The analysis is branch-sensitive: `if`/`elif`/`else` arms are
+interpreted separately and joined with a max-merge, so one consumption per
+exclusive branch is clean while branch-then-join reuse still trips. Loop
+bodies are interpreted twice to catch back-edge reuse of a loop-invariant
+key; element paths like `keys[c]` that depend on the loop variable are
+reset each pass (fresh per iteration).
+
+PASS002 fires for a produced key that is never read again anywhere in the
+function — lost entropy, usually a consumer wired to the wrong key.
+Targets prefixed with `_` are exempt (explicitly discarded).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Optional
+
+from tools.passlint.findings import Finding
+from tools.passlint.resolve import Resolver, path_of
+
+# jax.random.* callables that CONSUME their key argument (first positional
+# or key=): all samplers plus split. fold_in/clone/key/PRNGKey/key_data/
+# wrap_key_data derive or construct without consuming.
+CONSUMING = {
+    "split", "uniform", "normal", "bernoulli", "randint", "categorical",
+    "exponential", "gumbel", "choice", "permutation", "shuffle",
+    "truncated_normal", "beta", "gamma", "poisson", "laplace", "logistic",
+    "cauchy", "dirichlet", "multivariate_normal", "bits", "rademacher",
+    "t", "maxwell", "ball", "orthogonal", "loggamma", "binomial",
+    "geometric", "rayleigh", "weibull_min", "triangular", "chisquare",
+    "f", "generalized_normal",
+}
+NONCONSUMING = {"fold_in", "clone", "key", "PRNGKey", "wrap_key_data", "key_data"}
+
+_SINGULAR = {"key", "rng", "prng", "subkey", "sub_key"}
+_PLURAL = {"keys", "rngs", "ks", "subkeys"}
+_K_RE = re.compile(r"^k\d?$|^k_\w+$")
+
+
+def is_keyish(name: str) -> bool:
+    """Heuristic: does a parameter name denote a single PRNG key?"""
+    return name in _SINGULAR or name.endswith(("_key", "_rng")) or bool(_K_RE.match(name))
+
+
+def is_keyish_plural(name: str) -> bool:
+    """Heuristic: does a parameter name denote an array of PRNG keys?"""
+    return name in _PLURAL or name.endswith(("_keys", "_rngs"))
+
+
+class KeyFlow:
+    """Interpret one function body for key reuse (PASS001) and dead keys
+    (PASS002)."""
+
+    def __init__(self, fn: ast.FunctionDef, resolver: Resolver, path: str):
+        self.fn = fn
+        self.resolver = resolver
+        self.path = path
+        self.findings: list[Finding] = []
+        self._seen: set[tuple[int, str, str]] = set()
+        # state: env path -> key id; arrays: paths holding stacks of keys;
+        # info: key id -> (consume count, first consumption line)
+        self.env: dict[str, int] = {}
+        self.arrays: set[str] = set()
+        self.info: dict[int, tuple[int, Optional[int]]] = {}
+        self._next_id = 0
+        # (name, def stmt first/last line, in-loop) of produced keys, for
+        # PASS002
+        self.produced: list[tuple[str, int, int, bool]] = []
+        self._loop_depth = 0
+        # set by return/raise/break/continue: the current path is dead, so
+        # its state must not merge into the continuation
+        self.terminated = False
+
+    # -- state plumbing ----------------------------------------------------
+
+    def _fresh(self) -> int:
+        self._next_id += 1
+        self.info[self._next_id] = (0, None)
+        return self._next_id
+
+    def _snapshot(self):
+        return dict(self.env), set(self.arrays), dict(self.info)
+
+    def _restore(self, snap):
+        self.env, self.arrays, self.info = dict(snap[0]), set(snap[1]), dict(snap[2])
+
+    def _merge(self, snap):
+        """Path join: keep bindings the paths agree on; per-key consumption
+        count is the max over paths (a later consumption is a reuse if ANY
+        path already consumed the key)."""
+        env_b, arrays_b, info_b = snap
+        merged_env = {}
+        for p, kid in self.env.items():
+            if p not in env_b or env_b[p] == kid:
+                merged_env[p] = kid
+        for p, kid in env_b.items():
+            if p not in self.env:
+                merged_env[p] = kid
+        self.env = merged_env
+        self.arrays |= set(arrays_b)
+        for kid, (cnt, first) in info_b.items():
+            cur = self.info.get(kid)
+            if cur is None or cnt > cur[0]:
+                self.info[kid] = (cnt, first if cur is None or cur[1] is None else cur[1])
+
+    def _kill(self, path: str):
+        """Rebinding a path to a non-key drops it (and its elements)."""
+        for p in list(self.env):
+            if p == path or p.startswith(path + "[") or p.startswith(path + "."):
+                del self.env[p]
+        self.arrays.discard(path)
+
+    def _lookup(self, path: str) -> Optional[int]:
+        kid = self.env.get(path)
+        if kid is not None:
+            return kid
+        base = path.split("[", 1)[0]
+        if "[" in path and base in self.arrays:
+            kid = self._fresh()
+            self.env[path] = kid
+            return kid
+        return None
+
+    # -- consumption -------------------------------------------------------
+
+    def _consume(self, path: str, line: int):
+        kid = self._lookup(path)
+        if kid is None:
+            return
+        cnt, first = self.info[kid]
+        cnt += 1
+        if cnt >= 2:
+            self._report(line, "PASS001",
+                         f"PRNG key '{path}' consumed again on this "
+                         f"control-flow path (first consumed at line {first})")
+        self.info[kid] = (cnt, first if first is not None else line)
+
+    def _report(self, line: int, code: str, msg: str):
+        sig = (line, code, msg)
+        if sig not in self._seen:
+            self._seen.add(sig)
+            self.findings.append(Finding(self.path, line, code, msg))
+
+    # -- expressions -------------------------------------------------------
+
+    def _expr(self, e):
+        if e is None or isinstance(e, (ast.Constant, ast.Name)):
+            return
+        if isinstance(e, ast.Call):
+            self._call(e)
+            return
+        if isinstance(e, ast.Lambda):
+            self._expr(e.body)
+            return
+        for child in ast.iter_child_nodes(e):
+            if isinstance(child, (ast.expr, ast.comprehension)):
+                self._expr(child)
+
+    def _call(self, call: ast.Call):
+        resolved = self.resolver.resolve(call.func)
+        if resolved is None:
+            self._expr(call.func)  # e.g. chained call: f(...)(...)
+        if resolved and resolved.startswith("jax.random."):
+            fname = resolved.rsplit(".", 1)[1]
+            if fname in CONSUMING:
+                key_arg = call.args[0] if call.args else None
+                if key_arg is None:
+                    for kw in call.keywords:
+                        if kw.arg == "key":
+                            key_arg = kw.value
+                if key_arg is not None:
+                    p = path_of(key_arg)
+                    if p is not None:
+                        self._consume(p, key_arg.lineno)
+                    else:
+                        self._expr(key_arg)
+                for a in call.args[1:]:
+                    self._expr(a)
+                for kw in call.keywords:
+                    if kw.value is not key_arg:
+                        self._expr(kw.value)
+                return
+            # producer / non-consuming: walk args without consuming
+            for a in call.args:
+                self._expr(a)
+            for kw in call.keywords:
+                self._expr(kw.value)
+            return
+        # generic call: a key passed to any other callable is consumed once
+        for a in list(call.args) + [kw.value for kw in call.keywords]:
+            self._escape(a)
+
+    def _escape(self, e):
+        """Argument position of a non-jax.random call: consume key paths."""
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            for elt in e.elts:
+                self._escape(elt)
+            return
+        if isinstance(e, ast.Starred):
+            self._escape(e.value)
+            return
+        p = path_of(e)
+        if p is not None:
+            if self.env.get(p) is not None or (
+                "[" in p and p.split("[", 1)[0] in self.arrays
+            ):
+                self._consume(p, e.lineno)
+            return
+        self._expr(e)
+
+    # -- binding -----------------------------------------------------------
+
+    def _classify_rhs(self, value) -> Optional[str]:
+        """'split' | 'key' | 'alias' | 'alias_array' | None for an RHS."""
+        if isinstance(value, ast.Call):
+            r = self.resolver.resolve(value.func)
+            if r == "jax.random.split":
+                return "split"
+            if r is not None and r.startswith("jax.random.") and \
+                    r.rsplit(".", 1)[1] in ("key", "PRNGKey", "fold_in", "clone",
+                                            "wrap_key_data"):
+                return "key"
+            return None
+        p = path_of(value)
+        if p is not None:
+            if p in self.arrays:
+                return "alias_array"
+            if self._lookup_peek(p):
+                return "alias"
+        return None
+
+    def _lookup_peek(self, p: str) -> bool:
+        return p in self.env or ("[" in p and p.split("[", 1)[0] in self.arrays)
+
+    def _bind_fresh(self, target, stmt, as_array=False):
+        p = path_of(target)
+        if p is None:
+            return
+        self._kill(p)
+        if as_array:
+            self.arrays.add(p)
+        else:
+            self.env[p] = self._fresh()
+        if isinstance(target, ast.Name) and not target.id.startswith("_"):
+            self.produced.append((target.id, stmt.lineno,
+                                  stmt.end_lineno or stmt.lineno,
+                                  self._loop_depth > 0))
+
+    def _bind(self, target, value, stmt):
+        kind = self._classify_rhs(value)
+        if isinstance(target, (ast.Tuple, ast.List)):
+            if kind in ("split", "key"):
+                # `k1, k2 = split(key)` — each element a fresh key
+                for elt in target.elts:
+                    self._bind_fresh(elt, stmt)
+            elif isinstance(value, (ast.Tuple, ast.List)) and \
+                    len(value.elts) == len(target.elts):
+                for t, v in zip(target.elts, value.elts):
+                    self._bind(t, v, stmt)
+            else:
+                for elt in target.elts:
+                    p = path_of(elt)
+                    if p:
+                        self._kill(p)
+            return
+        p = path_of(target)
+        if p is None:
+            return
+        if kind == "split":
+            self._bind_fresh(target, stmt, as_array=True)
+        elif kind == "key":
+            self._bind_fresh(target, stmt)
+        elif kind == "alias":
+            kid = self._lookup(path_of(value))
+            self._kill(p)
+            if kid is not None:
+                self.env[p] = kid
+        elif kind == "alias_array":
+            self._kill(p)
+            self.arrays.add(p)
+        else:
+            self._kill(p)
+
+    # -- statements --------------------------------------------------------
+
+    def _clear_loop_elements(self, target):
+        names = {n.id for n in ast.walk(target) if isinstance(n, ast.Name)}
+        for p in list(self.env):
+            if "[" in p and any(f"[{n}]" in p for n in names):
+                del self.env[p]
+
+    def exec_block(self, stmts):
+        """Interpret a statement list in order; stop at a terminator."""
+        for st in stmts:
+            if self.terminated:
+                break
+            self._stmt(st)
+
+    def _stmt(self, st):
+        if isinstance(st, ast.Assign):
+            self._expr(st.value)
+            for t in st.targets:
+                self._bind(t, st.value, st)
+        elif isinstance(st, ast.AnnAssign):
+            if st.value is not None:
+                self._expr(st.value)
+                self._bind(st.target, st.value, st)
+        elif isinstance(st, ast.AugAssign):
+            self._expr(st.value)
+            p = path_of(st.target)
+            if p:
+                self._kill(p)
+        elif isinstance(st, ast.Expr):
+            self._expr(st.value)
+        elif isinstance(st, ast.Return):
+            if st.value is not None and path_of(st.value) is None:
+                self._expr(st.value)
+            self.terminated = True
+        elif isinstance(st, (ast.Break, ast.Continue)):
+            self.terminated = True
+        elif isinstance(st, ast.If):
+            self._expr(st.test)
+            before = self._snapshot()
+            self.exec_block(st.body)
+            after_body = self._snapshot()
+            term_body = self.terminated
+            self._restore(before)
+            self.terminated = False
+            self.exec_block(st.orelse)
+            term_else = self.terminated
+            # a returned/raised arm contributes nothing to the join
+            if term_body and not term_else:
+                pass  # keep the else-path state
+            elif term_else and not term_body:
+                self._restore(after_body)
+                self.terminated = False
+            elif not term_body and not term_else:
+                self._merge(after_body)
+            else:
+                self.terminated = True
+        elif isinstance(st, (ast.For, ast.AsyncFor)):
+            self._expr(st.iter)
+            tp = path_of(st.target)
+            if tp:
+                self._kill(tp)
+            before = self._snapshot()
+            self._loop_depth += 1
+            for _pass in range(2):  # second pass catches back-edge reuse
+                self._clear_loop_elements(st.target)
+                self.exec_block(st.body)
+                self.terminated = False  # break/continue end one iteration only
+            self._loop_depth -= 1
+            self._merge(before)  # zero-iteration path
+            self.exec_block(st.orelse)
+        elif isinstance(st, ast.While):
+            self._expr(st.test)
+            before = self._snapshot()
+            self._loop_depth += 1
+            for _pass in range(2):
+                self.exec_block(st.body)
+                self.terminated = False
+                self._expr(st.test)
+            self._loop_depth -= 1
+            self._merge(before)
+            self.exec_block(st.orelse)
+        elif isinstance(st, (ast.With, ast.AsyncWith)):
+            for item in st.items:
+                self._expr(item.context_expr)
+            self.exec_block(st.body)
+        elif isinstance(st, ast.Try):
+            before = self._snapshot()
+            self.exec_block(st.body)
+            self.terminated = False  # handlers run from any point in the body
+            for handler in st.handlers:
+                mid = self._snapshot()
+                self._restore(before)
+                self.exec_block(handler.body)
+                self.terminated = False
+                self._merge(mid)
+            self.exec_block(st.orelse)
+            self.exec_block(st.finalbody)
+        elif isinstance(st, ast.Assert):
+            self._expr(st.test)
+        elif isinstance(st, (ast.Raise,)):
+            if st.exc is not None:
+                self._expr(st.exc)
+            self.terminated = True
+        elif isinstance(st, ast.Delete):
+            for t in st.targets:
+                p = path_of(t)
+                if p:
+                    self._kill(p)
+        # nested defs / classes: analyzed separately by the driver; their
+        # closure reads still count as uses in the PASS002 liveness pass.
+
+    # -- entry point -------------------------------------------------------
+
+    def run(self) -> list[Finding]:
+        """Analyze the function; returns PASS001 + PASS002 findings."""
+        args = self.fn.args
+        for a in list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs):
+            if is_keyish(a.arg):
+                self.env[a.arg] = self._fresh()
+            elif is_keyish_plural(a.arg):
+                self.arrays.add(a.arg)
+        self.exec_block(self.fn.body)
+        self._dead_keys()
+        return self.findings
+
+    def _dead_keys(self):
+        loads: dict[str, list[int]] = {}
+        for node in ast.walk(self.fn):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                loads.setdefault(node.id, []).append(node.lineno)
+        reported: set[tuple[str, int]] = set()
+        for name, lo, hi, in_loop in self.produced:
+            if (name, lo) in reported:
+                continue
+            used = any(ln < lo or ln > hi for ln in loads.get(name, []))
+            if in_loop:
+                # `key, sub = split(key)` carries the key to the next
+                # iteration: the same-line load IS a use via the back edge
+                used = used or bool(loads.get(name))
+            if not used:
+                reported.add((name, lo))
+                self._report(lo, "PASS002",
+                             f"PRNG key '{name}' is produced here but never "
+                             "consumed — lost entropy (prefix with '_' if "
+                             "intentionally discarded)")
+
+
+def _touches_jax_random(fn: ast.AST, resolver: Resolver) -> bool:
+    """Does the function (or a nested one) call into jax.random?"""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            r = resolver.resolve(node.func)
+            if r is not None and r.startswith("jax.random."):
+                return True
+    return False
+
+
+def check_functions(tree: ast.Module, resolver: Resolver, path: str) -> list[Finding]:
+    """Run the key-flow analysis over every function in a module.
+
+    Functions that never call jax.random are skipped: name heuristics
+    ('k', 'kv_k', ...) otherwise misread attention q/k/v tensors and
+    pytree keys as PRNG keys.
+    """
+    findings: list[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and _touches_jax_random(node, resolver):
+            findings += KeyFlow(node, resolver, path).run()
+    return findings

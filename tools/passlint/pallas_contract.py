@@ -1,0 +1,218 @@
+"""PASS006: statically checkable `pl.pallas_call` kernel contracts.
+
+For every `pl.pallas_call(kernel, ...)` whose result is immediately called
+with its operands, four contracts are decidable without running anything:
+
+  * **operand arity** — the number of operands passed must equal
+    `len(in_specs)` (a drift here shows up as an opaque Mosaic/interpreter
+    error long after the edit);
+  * **kernel signature arity** — the kernel function must take exactly
+    `len(in_specs) + n_outputs + len(scratch_shapes)` positional
+    parameters (keyword-only params, e.g. partial-bound config, excluded);
+  * **block divisibility** — when both the `out_specs` block shape and the
+    `out_shape` dims are integer literals, every block dim must divide the
+    array dim (these kernels pad explicitly; a non-dividing literal is a
+    typo);
+  * **store dtype** — when `out_shape` carries a literal jnp dtype and the
+    kernel stores `out_ref[...] = (...).astype(<literal jnp dtype>)`, the
+    two must match (a mismatch silently casts on the way out).
+
+Shapes and dtypes that are computed (names, `.shape` unpacks, `s.dtype`)
+are skipped — the checks fire only on literals, keeping them exact.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from tools.passlint.findings import Finding
+from tools.passlint.resolve import (
+    Resolver,
+    const_int_tuple,
+    keyword_arg,
+)
+
+PALLAS_CALL = "jax.experimental.pallas.pallas_call"
+BLOCKSPEC_NAMES = {
+    "jax.experimental.pallas.BlockSpec",
+    "jax.experimental.pallas.tpu.BlockSpec",
+}
+
+
+def _is_pallas_call(node: ast.Call, resolver: Resolver) -> bool:
+    return resolver.resolve(node.func) == PALLAS_CALL
+
+
+def _kernel_def(
+    node: ast.AST, resolver: Resolver, defs: dict[str, ast.FunctionDef]
+) -> tuple[Optional[ast.FunctionDef], int]:
+    """Resolve the kernel callable; returns (def, n positional partial-bound)."""
+    if isinstance(node, ast.Name):
+        return defs.get(node.id), 0
+    if isinstance(node, ast.Call):
+        r = resolver.resolve(node.func)
+        if r in ("functools.partial", "partial") and node.args:
+            fn, extra = _kernel_def(node.args[0], resolver, defs)
+            return fn, extra + len(node.args) - 1
+    return None, 0
+
+
+def _spec_count(node: Optional[ast.AST]) -> Optional[int]:
+    """len() of a literal in_specs/out_specs/scratch_shapes list, else None."""
+    if node is None:
+        return 0
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    return 1 if isinstance(node, ast.Call) else None
+
+
+def _out_count(node: Optional[ast.AST]) -> Optional[int]:
+    """Number of outputs from a literal out_shape, else None."""
+    if node is None:
+        return None
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    return 1
+
+
+def _block_shape(spec: ast.AST, resolver: Resolver) -> Optional[tuple[int, ...]]:
+    """Literal block shape of a BlockSpec(...) node, else None."""
+    if not isinstance(spec, ast.Call):
+        return None
+    if resolver.resolve(spec.func) not in BLOCKSPEC_NAMES:
+        return None
+    shape = spec.args[0] if spec.args else keyword_arg(spec, "block_shape")
+    if shape is None:
+        return None
+    return const_int_tuple(shape)
+
+
+def _shape_dtype(node: ast.AST, resolver: Resolver):
+    """(literal dims | None, literal dtype name | None) of ShapeDtypeStruct."""
+    if not isinstance(node, ast.Call):
+        return None, None
+    r = resolver.resolve(node.func)
+    if r not in ("jax.ShapeDtypeStruct", "jax.core.ShapedArray"):
+        return None, None
+    shape = node.args[0] if node.args else keyword_arg(node, "shape")
+    dtype = node.args[1] if len(node.args) > 1 else keyword_arg(node, "dtype")
+    dims = const_int_tuple(shape) if shape is not None else None
+    dt = resolver.resolve(dtype) if dtype is not None else None
+    if dt is not None and not dt.startswith(("jax.numpy.", "numpy.")):
+        dt = None
+    return dims, dt
+
+
+def _store_dtypes(kernel: ast.FunctionDef, out_param: str,
+                  resolver: Resolver) -> list[tuple[int, str]]:
+    """(line, literal dtype) of `out_param[...] = expr.astype(dtype)` stores."""
+    found = []
+    for node in ast.walk(kernel):
+        if not isinstance(node, (ast.Assign, ast.AugAssign)):
+            continue
+        targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+        hits_out = any(
+            isinstance(t, ast.Subscript) and isinstance(t.value, ast.Name)
+            and t.value.id == out_param
+            for t in targets
+        )
+        if not hits_out:
+            continue
+        value = node.value
+        if isinstance(value, ast.Call) and isinstance(value.func, ast.Attribute) \
+                and value.func.attr == "astype" and value.args:
+            dt = resolver.resolve(value.args[0])
+            if dt is not None and dt.startswith(("jax.numpy.", "numpy.")):
+                found.append((node.lineno, dt))
+    return found
+
+
+def _dtype_name(dt: str) -> str:
+    return dt.rsplit(".", 1)[1]
+
+
+def check_module(tree: ast.Module, resolver: Resolver, path: str) -> list[Finding]:
+    """PASS006 over every pallas_call site in a module."""
+    findings: list[Finding] = []
+    defs: dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, node)
+
+    # immediate-invocation form: pl.pallas_call(...)(operands...) — map the
+    # inner pallas_call node to its operand list so each site is visited once
+    operands_of: dict[ast.Call, list[ast.expr]] = {}
+    sites: list[ast.Call] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if isinstance(node.func, ast.Call) and _is_pallas_call(node.func, resolver):
+            if not any(isinstance(a, ast.Starred) for a in node.args):
+                operands_of[node.func] = list(node.args)
+        elif _is_pallas_call(node, resolver):
+            sites.append(node)
+
+    for call in sites:
+        operands = operands_of.get(call)
+        line = call.lineno
+        in_specs = keyword_arg(call, "in_specs")
+        out_specs = keyword_arg(call, "out_specs")
+        out_shape = keyword_arg(call, "out_shape")
+        scratch = keyword_arg(call, "scratch_shapes")
+        n_in = _spec_count(in_specs) if in_specs is not None else None
+        n_out = _out_count(out_shape)
+        n_scratch = _spec_count(scratch)
+
+        if operands is not None and n_in is not None and len(operands) != n_in:
+            findings.append(Finding(
+                path, line, "PASS006",
+                f"pallas_call is invoked with {len(operands)} operands but "
+                f"declares {n_in} in_specs",
+            ))
+
+        kernel_node = call.args[0] if call.args else keyword_arg(call, "kernel")
+        kernel, bound = (None, 0)
+        if kernel_node is not None:
+            kernel, bound = _kernel_def(kernel_node, resolver, defs)
+        if kernel is not None and n_in is not None and n_out is not None \
+                and n_scratch is not None and kernel.args.vararg is None:
+            n_params = len(kernel.args.posonlyargs) + len(kernel.args.args) - bound
+            expected = n_in + n_out + n_scratch
+            if n_params != expected:
+                findings.append(Finding(
+                    path, line, "PASS006",
+                    f"kernel '{kernel.name}' takes {n_params} positional ref "
+                    f"parameters but pallas_call supplies {expected} "
+                    f"({n_in} in_specs + {n_out} outputs + {n_scratch} "
+                    "scratch)",
+                ))
+
+        # literal block divisibility on the output
+        if out_specs is not None and out_shape is not None \
+                and not isinstance(out_shape, (ast.Tuple, ast.List)):
+            block = _block_shape(out_specs, resolver)
+            dims, out_dt = _shape_dtype(out_shape, resolver)
+            if block is not None and dims is not None and len(block) == len(dims):
+                for b, d in zip(block, dims):
+                    if b > 0 and d % b != 0:
+                        findings.append(Finding(
+                            path, line, "PASS006",
+                            f"out_specs block shape {block} does not divide "
+                            f"out_shape {dims} ({d} % {b} != 0)",
+                        ))
+                        break
+            # literal store dtype vs out_shape dtype
+            if out_dt is not None and kernel is not None and n_in is not None:
+                params = [a.arg for a in kernel.args.posonlyargs + kernel.args.args]
+                if n_in < len(params):
+                    out_param = params[n_in]
+                    for store_line, st_dt in _store_dtypes(kernel, out_param, resolver):
+                        if _dtype_name(st_dt) != _dtype_name(out_dt):
+                            findings.append(Finding(
+                                path, store_line, "PASS006",
+                                f"kernel stores '{out_param}' as "
+                                f"{_dtype_name(st_dt)} but out_shape declares "
+                                f"{_dtype_name(out_dt)} — the result is "
+                                "silently cast",
+                            ))
+    return findings

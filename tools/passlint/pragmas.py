@@ -1,0 +1,115 @@
+"""`# passlint: ignore[CODE] reason` pragma parsing and application.
+
+Grammar (one per comment; the reason is mandatory):
+
+    # passlint: ignore[PASS001] parity trick: ref and pallas share uniforms
+    # passlint: ignore[PASS003,PASS004] host-side debug path, never jitted
+
+A pragma suppresses matching findings on its own physical line (trailing
+comment) or — when the line holds nothing but the comment — on the next
+non-blank, non-comment line. A pragma with no reason text is itself
+reported as PASS000 and suppresses nothing, so every suppression in the
+tree carries a written justification.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+import tokenize
+
+from tools.passlint.findings import CODES, Finding
+
+PRAGMA_RE = re.compile(r"#\s*passlint:\s*ignore\[([^\]]*)\]\s*(.*)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Pragma:
+    """One parsed suppression comment."""
+
+    line: int  # line the pragma applies to (resolved, not the comment line)
+    codes: tuple[str, ...]
+    reason: str
+
+
+def parse_pragmas(source: str, path: str) -> tuple[dict[int, list[Pragma]], list[Finding]]:
+    """Extract pragmas from `source` via the token stream (so pragma-looking
+    text inside string literals is ignored).
+
+    Returns (pragmas-by-applied-line, PASS000 findings for malformed ones).
+    """
+    by_line: dict[int, list[Pragma]] = {}
+    problems: list[Finding] = []
+    lines = source.splitlines()
+    try:
+        tokens = list(tokenize.generate_tokens(iter(lines_iter(lines)).__next__))
+    except tokenize.TokenError:
+        tokens = []
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = PRAGMA_RE.search(tok.string)
+        if not m:
+            if "passlint" in tok.string and "ignore" in tok.string:
+                problems.append(Finding(path, tok.start[0], "PASS000",
+                                        "unparseable passlint pragma"))
+            continue
+        codes = tuple(c.strip() for c in m.group(1).split(",") if c.strip())
+        reason = m.group(2).strip()
+        comment_line = tok.start[0]
+        bad = [c for c in codes if c not in CODES]
+        if not codes or bad:
+            problems.append(Finding(
+                path, comment_line, "PASS000",
+                f"pragma names unknown code(s) {bad or '(none)'}; "
+                f"known codes: {', '.join(sorted(CODES))}",
+            ))
+            continue
+        if not reason:
+            problems.append(Finding(
+                path, comment_line, "PASS000",
+                f"pragma ignore[{','.join(codes)}] has no reason — every "
+                "suppression must say why it is legitimate",
+            ))
+            continue
+        applied = _applied_line(lines, comment_line)
+        by_line.setdefault(applied, []).append(Pragma(applied, codes, reason))
+    return by_line, problems
+
+
+def lines_iter(lines: list[str]):
+    """Readline-style generator over already-split source lines."""
+    for ln in lines:
+        yield ln + "\n"
+    yield ""
+
+
+def _applied_line(lines: list[str], comment_line: int) -> int:
+    """Trailing comments apply to their own line; standalone comment lines
+    apply to the next non-blank, non-comment line."""
+    text = lines[comment_line - 1]
+    if text.lstrip() and not text.lstrip().startswith("#"):
+        return comment_line  # trailing comment on a code line
+    for i in range(comment_line, len(lines)):
+        nxt = lines[i].strip()
+        if nxt and not nxt.startswith("#"):
+            return i + 1
+    return comment_line
+
+
+def apply_pragmas(
+    findings: list[Finding], pragmas: dict[int, list[Pragma]]
+) -> tuple[list[Finding], list[tuple[Finding, Pragma]]]:
+    """Split findings into (active, suppressed-with-their-pragma)."""
+    active: list[Finding] = []
+    suppressed: list[tuple[Finding, Pragma]] = []
+    for f in findings:
+        hit = None
+        for p in pragmas.get(f.line, []):
+            if f.code in p.codes:
+                hit = p
+                break
+        if hit is None:
+            active.append(f)
+        else:
+            suppressed.append((f, hit))
+    return active, suppressed

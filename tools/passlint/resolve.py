@@ -1,0 +1,112 @@
+"""Import-alias resolution and small AST utilities shared by the checks.
+
+`Resolver` canonicalizes dotted call targets against a module's imports, so
+checks can match on stable names ("jax.random.split", "numpy.linspace",
+"jax.experimental.pallas.pallas_call") regardless of the file's local
+aliases (`import jax.numpy as jnp`, `from jax.experimental import pallas as
+pl`, `from functools import partial`, ...).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+
+class Resolver:
+    """Maps local names to canonical dotted module paths for one module."""
+
+    def __init__(self, tree: ast.Module):
+        # local alias -> canonical dotted prefix
+        self.aliases: dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    self.aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+
+    def dotted(self, node: ast.AST) -> Optional[str]:
+        """The raw dotted text of a Name/Attribute chain, else None."""
+        parts: list[str] = []
+        cur = node
+        while isinstance(cur, ast.Attribute):
+            parts.append(cur.attr)
+            cur = cur.value
+        if not isinstance(cur, ast.Name):
+            return None
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Canonical dotted name of a call target / attribute chain.
+
+        `jnp.asarray` -> "jax.numpy.asarray" under `import jax.numpy as
+        jnp`; bare builtins come back as themselves ("float"). None when
+        the expression is not a name chain (e.g. a call result).
+        """
+        raw = self.dotted(node)
+        if raw is None:
+            return None
+        head, _, rest = raw.partition(".")
+        base = self.aliases.get(head, head)
+        return f"{base}.{rest}" if rest else base
+
+
+def const_int(node: ast.AST) -> Optional[int]:
+    """The int value of a literal (including -n), else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        inner = const_int(node.operand)
+        return -inner if inner is not None else None
+    return None
+
+
+def const_int_tuple(node: ast.AST) -> Optional[tuple[int, ...]]:
+    """The value of a literal tuple/list of ints, else None."""
+    if not isinstance(node, (ast.Tuple, ast.List)):
+        return None
+    vals = [const_int(e) for e in node.elts]
+    if any(v is None for v in vals):
+        return None
+    return tuple(vals)  # type: ignore[arg-type]
+
+
+def keyword_arg(call: ast.Call, name: str) -> Optional[ast.AST]:
+    """The value of keyword `name` in a call, else None."""
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def path_of(node: ast.AST) -> Optional[str]:
+    """A stable textual path for a trackable value reference.
+
+    Names ("key"), attribute chains ("self.key"), and subscripts with a
+    simple index ("keys[3]", "keys[c]") get a path; anything else (calls,
+    slices, computed indices) is untrackable and returns None.
+    """
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = path_of(node.value)
+        return f"{base}.{node.attr}" if base else None
+    if isinstance(node, ast.Subscript):
+        base = path_of(node.value)
+        if base is None:
+            return None
+        idx = node.slice
+        i = const_int(idx)
+        if i is not None:
+            return f"{base}[{i}]"
+        if isinstance(idx, ast.Name):
+            return f"{base}[{idx.id}]"
+        return None
+    return None

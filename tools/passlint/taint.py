@@ -1,0 +1,369 @@
+"""PASS003/PASS004: host ops and python control flow on traced values.
+
+Traced contexts are discovered statically per module:
+
+  * functions decorated with `jax.jit` / `jax.vmap` / `jax.pmap` /
+    `jax.grad` / `jax.value_and_grad` / `jax.checkpoint` — directly or via
+    `functools.partial(jax.jit, ...)` (whose `static_argnums` /
+    `static_argnames` remove those parameters from the tracer set);
+  * named functions passed as the traced callback of `jax.lax.scan` /
+    `cond` / `while_loop` / `fori_loop` / `map`, `jax.vmap` / `pmap` /
+    `jit` / `grad` in call form, and `pl.pallas_call` kernels (all of whose
+    ref parameters are traced);
+  * functions decorated with `pl.when(...)` inside a pallas kernel.
+
+Within a traced function, a forward taint pass marks parameter-derived
+values. Sanitizers keep the false-positive rate down: `.shape`, `.ndim`,
+`.size`, `.dtype` (and this codebase's static pytree metadata fields like
+`.n` / `.max_deg`), `len()` / `isinstance()` / `type()` / `hasattr()`, and
+`is None` comparisons all yield host values.
+
+PASS003 = host op (`np.*`, `float()`, `int()`, `bool()`, `.item()`,
+`.tolist()`) applied to a tainted value. PASS004 = python `if` / `while` /
+`assert` / ternary / `for`-iteration on a tainted value.
+
+Known limits (by design, to stay at near-zero false positives): calls are
+not followed interprocedurally, closures are not tainted, and lambda
+callbacks are skipped.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from tools.passlint.findings import Finding
+from tools.passlint.resolve import Resolver, const_int, keyword_arg
+
+TRACE_DECOS = {
+    "jax.jit", "jax.pmap", "jax.vmap", "jax.grad", "jax.value_and_grad",
+    "jax.checkpoint", "jax.remat",
+}
+# canonical callable -> indices of its traced-callback arguments
+CALLBACK_SLOTS = {
+    "jax.lax.scan": (0,),
+    "jax.lax.cond": (1, 2),
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.map": (0,),
+    "jax.vmap": (0,),
+    "jax.pmap": (0,),
+    "jax.jit": (0,),
+    "jax.grad": (0,),
+    "jax.value_and_grad": (0,),
+    "jax.checkpoint": (0,),
+    "jax.experimental.pallas.pallas_call": (0,),
+}
+# attribute reads that yield static (host) values even on tracers; n and
+# max_deg are this codebase's static pytree-metadata fields (problem sizes)
+STATIC_ATTRS = {"shape", "ndim", "size", "dtype", "aval", "sharding",
+                "n", "max_deg", "name"}
+SANITIZER_CALLS = {"len", "isinstance", "type", "hasattr", "callable", "id"}
+HOST_CAST_CALLS = {"float", "int", "bool", "complex"}
+HOST_METHODS = {"item", "tolist", "numpy", "__array__", "__float__", "__int__"}
+
+
+def _partial_target(call: ast.Call, resolver: Resolver) -> Optional[ast.AST]:
+    """For functools.partial(f, ...) return f's node, else None."""
+    r = resolver.resolve(call.func)
+    if r in ("functools.partial", "partial"):
+        return call.args[0] if call.args else None
+    return None
+
+
+def _static_params(call: ast.Call, fn: ast.FunctionDef) -> set[str]:
+    """Parameter names bound static by a jit(...) / partial(jax.jit, ...)."""
+    statics: set[str] = set()
+    params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    names = keyword_arg(call, "static_argnames")
+    if names is not None:
+        for node in ast.walk(names):
+            if isinstance(node, ast.Constant) and isinstance(node.value, str):
+                statics.add(node.value)
+    nums = keyword_arg(call, "static_argnums")
+    if nums is not None:
+        idxs = []
+        i = const_int(nums)
+        if i is not None:
+            idxs = [i]
+        elif isinstance(nums, (ast.Tuple, ast.List)):
+            idxs = [v for v in (const_int(e) for e in nums.elts) if v is not None]
+        for i in idxs:
+            if 0 <= i < len(params):
+                statics.add(params[i])
+    return statics
+
+
+def find_traced_functions(
+    tree: ast.Module, resolver: Resolver
+) -> dict[ast.FunctionDef, set[str]]:
+    """Map each traced FunctionDef to the names of its traced parameters."""
+    defs: dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, node)
+
+    traced: dict[ast.FunctionDef, set[str]] = {}
+
+    def param_names(fn, statics=frozenset()):
+        names = [a.arg for a in fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs]
+        return {n for n in names if n not in statics and n not in ("self", "cls")}
+
+    # decorated functions
+    for fn in defs.values():
+        for dec in fn.decorator_list:
+            r = resolver.resolve(dec)
+            if r in TRACE_DECOS:
+                traced[fn] = param_names(fn)
+                continue
+            if isinstance(dec, ast.Call):
+                rf = resolver.resolve(dec.func)
+                if rf in TRACE_DECOS:  # e.g. jax.checkpoint(policy=...)
+                    traced[fn] = param_names(fn)
+                elif rf == "jax.experimental.pallas.when":
+                    traced[fn] = param_names(fn)
+                else:
+                    target = _partial_target(dec, resolver)
+                    if target is not None and resolver.resolve(target) in TRACE_DECOS:
+                        traced[fn] = param_names(fn, _static_params(dec, fn))
+
+    # callback positions in calls
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        r = resolver.resolve(node.func)
+        slots = CALLBACK_SLOTS.get(r or "")
+        if not slots:
+            continue
+        for slot in slots:
+            if slot >= len(node.args):
+                continue
+            cb = node.args[slot]
+            partial_kw: set[str] = set()
+            n_pos_bound = 0
+            if isinstance(cb, ast.Call):  # functools.partial(kernel, ...)
+                target = _partial_target(cb, resolver)
+                if target is not None:
+                    # partial-bound arguments are trace-time constants
+                    partial_kw = {kw.arg for kw in cb.keywords if kw.arg}
+                    n_pos_bound = len(cb.args) - 1
+                    cb = target
+            if isinstance(cb, ast.Name) and cb.id in defs:
+                fn = defs[cb.id]
+                statics = set(_static_params(node, fn)) if r == "jax.jit" else set()
+                statics |= partial_kw
+                pos = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+                statics.update(pos[:n_pos_bound])
+                if r == "jax.experimental.pallas.pallas_call":
+                    # pallas passes refs positionally; keyword-only params
+                    # are partial-bound static config by construction
+                    statics.update(a.arg for a in fn.args.kwonlyargs)
+                if fn not in traced:
+                    traced[fn] = param_names(fn, statics)
+    return traced
+
+
+class TaintPass:
+    """Forward taint of traced parameters through one function body."""
+
+    def __init__(self, fn: ast.FunctionDef, tainted: set[str],
+                 resolver: Resolver, path: str):
+        self.fn = fn
+        self.tainted = set(tainted)
+        self.resolver = resolver
+        self.path = path
+        self.findings: list[Finding] = []
+        self._seen: set[tuple[int, str, str]] = set()
+
+    def _report(self, line: int, code: str, msg: str):
+        sig = (line, code, msg)
+        if sig not in self._seen:
+            self._seen.add(sig)
+            self.findings.append(Finding(self.path, line, code, msg))
+
+    # -- expression taint --------------------------------------------------
+
+    def is_tainted(self, e) -> bool:
+        """Does this expression (after sanitizers) carry a traced value?"""
+        if e is None or isinstance(e, (ast.Constant, ast.Lambda)):
+            return False
+        if isinstance(e, ast.Name):
+            return e.id in self.tainted
+        if isinstance(e, ast.Attribute):
+            if e.attr in STATIC_ATTRS:
+                return False
+            return self.is_tainted(e.value)
+        if isinstance(e, ast.Subscript):
+            return self.is_tainted(e.value)
+        if isinstance(e, ast.Call):
+            r = self.resolver.resolve(e.func)
+            if r in SANITIZER_CALLS:
+                return False
+            args = list(e.args) + [kw.value for kw in e.keywords]
+            if isinstance(e.func, ast.Attribute) and self.is_tainted(e.func.value):
+                return True
+            return any(self.is_tainted(a) for a in args)
+        if isinstance(e, ast.Compare):
+            # `x is None` / `x is not None` are structural host checks
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in e.ops) and any(
+                isinstance(c, ast.Constant) and c.value is None
+                for c in [e.left] + e.comparators
+            ):
+                return False
+            return any(self.is_tainted(x) for x in [e.left] + e.comparators)
+        if isinstance(e, ast.BoolOp):
+            return any(self.is_tainted(v) for v in e.values)
+        if isinstance(e, ast.BinOp):
+            return self.is_tainted(e.left) or self.is_tainted(e.right)
+        if isinstance(e, ast.UnaryOp):
+            return self.is_tainted(e.operand)
+        if isinstance(e, ast.IfExp):
+            return self.is_tainted(e.body) or self.is_tainted(e.orelse)
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.is_tainted(x) for x in e.elts)
+        if isinstance(e, ast.Dict):
+            return any(self.is_tainted(x) for x in list(e.keys) + list(e.values)
+                       if x is not None)
+        if isinstance(e, ast.Starred):
+            return self.is_tainted(e.value)
+        if isinstance(e, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            return self.is_tainted(e.elt) or any(
+                self.is_tainted(g.iter) for g in e.generators)
+        if isinstance(e, ast.DictComp):
+            return self.is_tainted(e.key) or self.is_tainted(e.value) or any(
+                self.is_tainted(g.iter) for g in e.generators)
+        if isinstance(e, ast.JoinedStr):
+            return False
+        return False
+
+    # -- PASS003 sinks -----------------------------------------------------
+
+    def _scan_sinks(self, e):
+        """Find host-op sinks anywhere inside an expression tree."""
+        for node in ast.walk(e) if e is not None else ():
+            if isinstance(node, ast.IfExp) and self.is_tainted(node.test):
+                self._report(node.lineno, "PASS004",
+                             "python ternary branches on a traced value "
+                             "inside a jitted/traced function")
+            if not isinstance(node, ast.Call):
+                continue
+            r = self.resolver.resolve(node.func)
+            args = list(node.args) + [kw.value for kw in node.keywords]
+            if r is not None and (r.startswith("numpy.") or r == "numpy"):
+                if any(self.is_tainted(a) for a in args):
+                    self._report(node.lineno, "PASS003",
+                                 f"host numpy op '{r}' applied to a traced "
+                                 "value inside a jitted/traced function")
+            elif r in HOST_CAST_CALLS:
+                if any(self.is_tainted(a) for a in args):
+                    self._report(node.lineno, "PASS003",
+                                 f"host cast '{r}()' forces a traced value "
+                                 "to a concrete python scalar")
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in HOST_METHODS:
+                if self.is_tainted(node.func.value):
+                    self._report(node.lineno, "PASS003",
+                                 f"'.{node.func.attr}()' on a traced value "
+                                 "inside a jitted/traced function")
+
+    # -- statements --------------------------------------------------------
+
+    def _assign_target(self, target, tainted: bool):
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._assign_target(elt, tainted)
+            return
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        if isinstance(target, ast.Starred):
+            self._assign_target(target.value, tainted)
+
+    def exec_block(self, stmts):
+        """Interpret a statement list, reporting sinks as encountered."""
+        for st in stmts:
+            self._stmt(st)
+
+    def _stmt(self, st):
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # separate (possibly traced) scope; closures not tainted
+        if isinstance(st, ast.Assign):
+            self._scan_sinks(st.value)
+            t = self.is_tainted(st.value)
+            for target in st.targets:
+                self._assign_target(target, t)
+        elif isinstance(st, ast.AnnAssign) and st.value is not None:
+            self._scan_sinks(st.value)
+            self._assign_target(st.target, self.is_tainted(st.value))
+        elif isinstance(st, ast.AugAssign):
+            self._scan_sinks(st.value)
+            if self.is_tainted(st.value) and isinstance(st.target, ast.Name):
+                self.tainted.add(st.target.id)
+        elif isinstance(st, ast.Expr):
+            self._scan_sinks(st.value)
+        elif isinstance(st, ast.Return):
+            self._scan_sinks(st.value)
+        elif isinstance(st, ast.If):
+            self._scan_sinks(st.test)
+            if self.is_tainted(st.test):
+                self._report(st.lineno, "PASS004",
+                             "python `if` on a traced value inside a jitted/"
+                             "traced function (use jnp.where or lax.cond)")
+            before = set(self.tainted)
+            self.exec_block(st.body)
+            after_body = set(self.tainted)
+            self.tainted = set(before)
+            self.exec_block(st.orelse)
+            self.tainted |= after_body
+        elif isinstance(st, ast.While):
+            self._scan_sinks(st.test)
+            if self.is_tainted(st.test):
+                self._report(st.lineno, "PASS004",
+                             "python `while` on a traced value inside a "
+                             "jitted/traced function (use lax.while_loop)")
+            for _pass in range(2):
+                self.exec_block(st.body)
+            self.exec_block(st.orelse)
+        elif isinstance(st, (ast.For, ast.AsyncFor)):
+            self._scan_sinks(st.iter)
+            if self.is_tainted(st.iter):
+                self._report(st.lineno, "PASS004",
+                             "python `for` iterates a traced value inside a "
+                             "jitted/traced function (use lax.scan/fori_loop)")
+            self._assign_target(st.target, self.is_tainted(st.iter))
+            for _pass in range(2):
+                self.exec_block(st.body)
+            self.exec_block(st.orelse)
+        elif isinstance(st, ast.Assert):
+            self._scan_sinks(st.test)
+            if self.is_tainted(st.test):
+                self._report(st.lineno, "PASS004",
+                             "python `assert` on a traced value inside a "
+                             "jitted/traced function (use checkify or debug."
+                             "check)")
+        elif isinstance(st, (ast.With, ast.AsyncWith)):
+            for item in st.items:
+                self._scan_sinks(item.context_expr)
+            self.exec_block(st.body)
+        elif isinstance(st, ast.Try):
+            self.exec_block(st.body)
+            for handler in st.handlers:
+                self.exec_block(handler.body)
+            self.exec_block(st.orelse)
+            self.exec_block(st.finalbody)
+        elif isinstance(st, ast.Raise) and st.exc is not None:
+            self._scan_sinks(st.exc)
+
+    def run(self) -> list[Finding]:
+        """Analyze the traced function body."""
+        self.exec_block(self.fn.body)
+        return self.findings
+
+
+def check_module(tree: ast.Module, resolver: Resolver, path: str) -> list[Finding]:
+    """PASS003/PASS004 over every traced function in a module."""
+    findings: list[Finding] = []
+    for fn, tainted in find_traced_functions(tree, resolver).items():
+        findings += TaintPass(fn, tainted, resolver, path).run()
+    return findings
