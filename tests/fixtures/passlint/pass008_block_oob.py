@@ -1,0 +1,86 @@
+"""PASS008 fixture: abstract evaluation of BlockSpec index_maps.
+
+Positives: an out-of-bounds block window from an affine index_map, an
+index_map whose arity disagrees with the grid rank, and an index_map that
+returns the wrong number of block indices. Negatives: an exactly-tiling
+map, a broadcast (constant) input map, and a non-affine map the abstract
+domain must refuse to judge.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _add_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def good_exact_tiling(x, y):
+    # 4 programs x block 8 exactly cover out dim 32 — in bounds
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(4,),
+        in_specs=[
+            pl.BlockSpec((8, 128), lambda i: (i, 0)),
+            pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 128), jnp.float32),
+    )(x, y)
+
+
+def off_by_one_window(x, y):
+    # i+1 sends the last program's element window to [8, 40) past dim 32
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(4,),
+        in_specs=[
+            pl.BlockSpec((8, 128), lambda i: (i, 0)),
+            pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i + 1, 0)),  # expect[PASS008]
+        out_shape=jax.ShapeDtypeStruct((32, 128), jnp.float32),
+    )(x, y)
+
+
+def arity_mismatch(x, y):
+    # the grid has one axis; a two-parameter index_map desyncs program ids
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(4,),
+        in_specs=[
+            pl.BlockSpec((8, 128), lambda i, j: (i, 0)),  # expect[PASS008]
+            pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 128), jnp.float32),
+    )(x, y)
+
+
+def component_rank_mismatch(x, y):
+    # block is 2-D but the map returns a single block index
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(4,),
+        in_specs=[
+            pl.BlockSpec((8, 128), lambda i: (i,)),  # expect[PASS008]
+            pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 128), jnp.float32),
+    )(x, y)
+
+
+def good_nonaffine_map(x, y, order):
+    # i * i is outside the affine domain: the analyzer must stay silent
+    # rather than guess a bound for it
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(4,),
+        in_specs=[
+            pl.BlockSpec((8, 128), lambda i: (i * i % 4, 0)),
+            pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 128), jnp.float32),
+    )(x, y)

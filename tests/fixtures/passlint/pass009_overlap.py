@@ -1,0 +1,90 @@
+"""PASS009 fixture: overlapping output writes and unaliased in-place refs.
+
+Positives: a grid axis that never reaches the output index_map while the
+kernel overwrites its block (write-write race), and a kernel that stores
+into an input ref with no input_output_aliases. Negatives: the legitimate
+reduction idiom (accumulate into the out block), the grid-sequential final
+store behind pl.when(program_id), and a declared alias.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _overwrite_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def collapsed_axis(x):
+    # 4 programs along axis 0 all overwrite out block (0, 0)
+    return pl.pallas_call(  # expect[PASS009]
+        _overwrite_kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x)
+
+
+def _accum_kernel(x_ref, o_ref):
+    o_ref[...] = o_ref[...] + x_ref[...]
+
+
+def reduce_over_axis(x):
+    # same collapsed map, but the kernel reads the out block back:
+    # the missing axis is a reduction, not a race
+    return pl.pallas_call(
+        _accum_kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x)
+
+
+def _final_store_kernel(x_ref, o_ref):
+    k = pl.program_id(0)
+
+    @pl.when(k == 3)
+    def _():
+        o_ref[...] = x_ref[...]
+
+
+def sequential_final_store(x):
+    # grid-sequential idiom: only the last program along the missing axis
+    # stores, so there is exactly one writer
+    return pl.pallas_call(
+        _final_store_kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x)
+
+
+def _inplace_kernel(x_ref, o_ref):
+    x_ref[...] = x_ref[...] + 1.0
+    o_ref[...] = x_ref[...]
+
+
+def unaliased_inplace(x):
+    # writes x_ref but declares no input_output_aliases
+    return pl.pallas_call(  # expect[PASS009]
+        _inplace_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x)
+
+
+def aliased_inplace(x):
+    # the declared alias makes the in-place store legal
+    return pl.pallas_call(
+        _inplace_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+        input_output_aliases={0: 0},
+    )(x)

@@ -1,0 +1,92 @@
+"""PASS010 fixture: chromatic-independence races in asynchronous sweeps.
+
+Positives are seeded mutants of the repo's two real sweeps with the
+independent-set mask removed: a checkerboard (shift-stencil) sweep that
+stores the proposal for every site in every phase, a gather (neighbor-list)
+sweep whose store is "guarded" by a thinning probability instead of a color
+mask, and a pallas kernel with the same unmasked phase loop. Negatives are
+the correctly masked forms of both sweeps and a field-accumulation loop
+that never feeds a state overwrite.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stencil_fields(s, w, b):
+    h = jnp.roll(s, 1, axis=-1) + jnp.roll(s, -1, axis=-1)
+    return w * h + b
+
+
+def racy_checkerboard_sweep(s, w, b, uniforms, beta):
+    # mask removed: every phase overwrites every site from fields that
+    # read the neighbors being updated in the same phase
+    for c in range(2):
+        h = _stencil_fields(s, w, b)
+        p_up = jax.nn.sigmoid(-2.0 * (beta * h))
+        s = jnp.where(uniforms[c] < p_up, 1.0, -1.0).astype(s.dtype)  # expect[PASS010]
+    return s
+
+
+def masked_checkerboard_sweep(s, w, b, uniforms, colors, beta):
+    for c in range(2):
+        h = _stencil_fields(s, w, b)
+        p_up = jax.nn.sigmoid(-2.0 * (beta * h))
+        proposal = jnp.where(uniforms[c] < p_up, 1.0, -1.0).astype(s.dtype)
+        upd = colors[c] > 0.5
+        s = jnp.where(upd, proposal, s)
+    return s
+
+
+def racy_colored_sweep(s, nbr_idx, nbr_w, b, uniforms, beta):
+    # a thinning probability is not an independent-set mask: which sites
+    # update is random, so same-phase neighbors still collide
+    for c in range(uniforms.shape[0]):
+        h = jnp.sum(nbr_w * jnp.take(s, nbr_idx, axis=-1), axis=-1) + b
+        p_up = jax.nn.sigmoid(-2.0 * (beta * h))
+        proposal = jnp.where(uniforms[c] < p_up, 1.0, -1.0)
+        s = jnp.where(uniforms[c] < 0.99, proposal, s)  # expect[PASS010]
+    return s
+
+
+def masked_colored_sweep(s, nbr_idx, nbr_w, b, uniforms, color_masks, beta):
+    for c in range(uniforms.shape[0]):
+        h = jnp.sum(nbr_w * jnp.take(s, nbr_idx, axis=-1), axis=-1) + b
+        p_up = jax.nn.sigmoid(-2.0 * (beta * h))
+        proposal = jnp.where(uniforms[c] < p_up, 1.0, -1.0)
+        s = jnp.where(color_masks[c] > 0.5, proposal, s)
+    return s
+
+
+def field_accumulate_sweep(s, w):
+    # accumulating fields over phases never overwrites the state itself
+    h = jnp.zeros_like(s)
+    for d in range(4):
+        h = h + w[d] * jnp.roll(s, d, axis=-1)
+    return h
+
+
+def _racy_phase_kernel(s_ref, w_ref, b_ref, u_ref, o_ref):
+    # pallas form of the unmasked sweep: flagged through the kernel scope,
+    # not the function-name heuristic
+    s = s_ref[...]
+    for c in range(4):
+        h = _stencil_fields(s, w_ref[...], b_ref[...])
+        p_up = jax.nn.sigmoid(-2.0 * h)
+        s = jnp.where(u_ref[c] < p_up, 1.0, -1.0).astype(s.dtype)  # expect[PASS010]
+    o_ref[...] = s
+
+
+def racy_phase_site(s, w, b, u):
+    return pl.pallas_call(
+        _racy_phase_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((8, 128), lambda i: (0, 0)),
+            pl.BlockSpec((8, 128), lambda i: (0, 0)),
+            pl.BlockSpec((8, 128), lambda i: (0, 0)),
+            pl.BlockSpec((4, 8, 128), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(s, w, b, u)

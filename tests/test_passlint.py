@@ -41,6 +41,9 @@ MARKER_FIXTURES = [
     "pass005_jit_static.py",
     "pass006_pallas_contract.py",
     "pass007_f64_leak.py",
+    "pass008_block_oob.py",
+    "pass009_overlap.py",
+    "pass010_async_race.py",
 ]
 
 
@@ -59,7 +62,7 @@ def test_fixture_findings_exact(name):
 
 
 def test_every_code_has_a_positive_fixture():
-    """PASS001..PASS007 each appear as an expected finding somewhere."""
+    """PASS001..PASS010 each appear as an expected finding somewhere."""
     seen = set()
     for name in MARKER_FIXTURES:
         seen |= {code for _, code in expected_of(os.path.join(FIXTURES, name))}
@@ -110,10 +113,10 @@ def test_cli_exit_codes(tmp_path, capsys):
 
     clean = tmp_path / "clean.py"
     clean.write_text("import jax\n\n\ndef f(key):\n    return jax.random.uniform(key, (2,))\n")
-    assert main([str(clean)]) == 0
+    assert main([str(clean), "--no-cache"]) == 0
     capsys.readouterr()
     dirty = os.path.join(FIXTURES, "pass001_key_reuse.py")
-    assert main([dirty, "--format", "json"]) == 1
+    assert main([dirty, "--no-cache", "--format", "json"]) == 1
     out = capsys.readouterr().out
     import json
 
@@ -121,3 +124,238 @@ def test_cli_exit_codes(tmp_path, capsys):
     assert data["files_checked"] == 1
     assert any(f["code"] == "PASS001" for f in data["findings"])
     assert any(s["reason"] for s in data["suppressed"])
+
+
+# -- interprocedural engine (callgraph + summaries) -------------------------
+
+
+def _ctx_of(source):
+    import ast
+
+    from tools.passlint import summaries
+    from tools.passlint.resolve import Resolver
+
+    tree = ast.parse(source)
+    return summaries.build(tree, Resolver(tree), "<test>")
+
+
+def test_callgraph_topo_order_and_cycles():
+    import ast
+
+    from tools.passlint.callgraph import CallGraph
+    from tools.passlint.resolve import Resolver
+
+    src = (
+        "def c(x):\n    return x + 1\n\n"
+        "def b(x):\n    return c(x)\n\n"
+        "def a(x):\n    return b(x)\n\n"
+        "def r1(x):\n    return r2(x)\n\n"
+        "def r2(x):\n    return r1(x)\n\n"
+        "def selfrec(x):\n    return selfrec(x - 1)\n"
+    )
+    tree = ast.parse(src)
+    order = CallGraph.build(tree, Resolver(tree)).topo_order()
+    pos = {name: i for i, (name, _) in enumerate(order)}
+    assert pos["c"] < pos["b"] < pos["a"], "callees must come before callers"
+    in_cycle = dict(order)
+    assert in_cycle["r1"] and in_cycle["r2"], "mutual recursion is a cycle"
+    assert in_cycle["selfrec"], "direct recursion is a cycle"
+    assert not in_cycle["a"] and not in_cycle["c"]
+
+
+def test_key_summaries_consumption_and_returns():
+    src = (
+        "import jax\n\n"
+        "def use_twice(k):\n"
+        "    a = jax.random.uniform(k, (2,))\n"
+        "    b = jax.random.normal(k, (2,))\n"
+        "    return a + b\n\n"
+        "def derive(k):\n"
+        "    return jax.random.fold_in(k, 1)\n\n"
+        "def make(k):\n"
+        "    return jax.random.split(k, 4)\n"
+    )
+    ctx = _ctx_of(src)
+    assert ctx.key["use_twice"].consumes["k"] == 2
+    assert ctx.key["use_twice"].touches_random
+    # fold_in derives a fresh stream: the helper does not consume its input
+    assert ctx.key["derive"].consumes["k"] == 0
+    assert ctx.key["make"].returns_key == "split"
+
+
+def test_taint_summaries_propagation_and_sanitizer():
+    src = (
+        "import numpy as np\n\n"
+        "def bad(x):\n"
+        "    return np.sum(x)\n\n"
+        "def meta(x):\n"
+        "    return x.shape[0]\n"
+    )
+    ctx = _ctx_of(src)
+    assert set(ctx.taint["bad"].returns_taint_from) == {"x"}
+    assert not ctx.taint["meta"].returns_taint_from
+
+
+def test_interprocedural_key_reuse_through_helper(tmp_path):
+    # the helper param is NOT keyish-named, so only the probe summary knows
+    # it double-consumes; the finding must surface at the call site
+    src = (
+        "import jax\n\n\n"
+        "def _draw_pair(randomness):\n"
+        "    a = jax.random.uniform(randomness, (2,))\n"
+        "    b = jax.random.normal(randomness, (2,))\n"
+        "    return a + b\n\n\n"
+        "def model(key):\n"
+        "    return _draw_pair(key)\n"
+    )
+    p = tmp_path / "inter.py"
+    p.write_text(src)
+    report = analyze_file(str(p))
+    assert report.error is None
+    msgs = [f.message for f in report.findings if f.code == "PASS001"]
+    assert any("_draw_pair" in m and "consumes it 2 times" in m for m in msgs), msgs
+    # the keyish-named helper is handled in-function instead — no call-site
+    # duplicate (covered by pass001 fixture exactness)
+
+
+def test_interprocedural_taint_through_helper(tmp_path):
+    src = (
+        "import jax\n"
+        "import numpy as np\n\n\n"
+        "def _host_mean(x):\n"
+        "    return np.mean(x)\n\n\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return _host_mean(x * 2.0)\n"
+    )
+    p = tmp_path / "taint.py"
+    p.write_text(src)
+    report = analyze_file(str(p))
+    assert report.error is None
+    assert any(f.code == "PASS003" and "numpy.mean" in f.message
+               for f in report.findings), [f.render() for f in report.findings]
+
+
+# -- incremental cache ------------------------------------------------------
+
+
+def test_cache_warm_run_analyzes_only_changed_files(tmp_path):
+    from tools.passlint.engine import run_paths
+
+    a = tmp_path / "a.py"
+    b = tmp_path / "b.py"
+    a.write_text("import jax\n\n\ndef f(key):\n    return jax.random.uniform(key, (2,))\n")
+    b.write_text("X = 1\n")
+    cache = str(tmp_path / "cache.json")
+
+    cold = run_paths([str(a), str(b)], cache_path=cache)
+    assert all(not r.cached for r in cold)
+
+    warm = run_paths([str(a), str(b)], cache_path=cache)
+    assert all(r.cached for r in warm), "second run must replay from cache"
+
+    b.write_text("X = 2\n")
+    third = run_paths([str(a), str(b)], cache_path=cache)
+    cached = {os.path.basename(r.path): r.cached for r in third}
+    assert cached == {"a.py": True, "b.py": False}, (
+        "only the edited file is re-analyzed"
+    )
+
+
+def test_cache_replays_identical_findings(tmp_path):
+    from tools.passlint.engine import run_paths
+
+    dirty = os.path.join(FIXTURES, "pass010_async_race.py")
+    cache = str(tmp_path / "cache.json")
+    cold = run_paths([dirty], cache_path=cache)
+    warm = run_paths([dirty], cache_path=cache)
+    assert warm[0].cached
+    as_set = lambda r: {(f.line, f.code, f.message) for f in r.findings}  # noqa: E731
+    assert as_set(cold[0]) == as_set(warm[0])
+    assert len(cold[0].suppressed) == len(warm[0].suppressed)
+
+
+# -- baseline and SARIF -----------------------------------------------------
+
+
+def test_baseline_roundtrip(tmp_path, capsys):
+    from tools.passlint.cli import main
+
+    dirty = os.path.join(FIXTURES, "pass001_key_reuse.py")
+    bl = str(tmp_path / "baseline.json")
+    assert main([dirty, "--no-cache", "--write-baseline", bl]) == 0
+    capsys.readouterr()
+    # every current finding is tolerated by the baseline it just wrote
+    assert main([dirty, "--no-cache", "--baseline", bl]) == 0
+    capsys.readouterr()
+    # findings outside the baseline still fail
+    other = os.path.join(FIXTURES, "pass010_async_race.py")
+    assert main([other, "--no-cache", "--baseline", bl]) == 1
+
+
+def test_sarif_output_shape(capsys):
+    import json
+
+    from tools.passlint.cli import main
+
+    dirty = os.path.join(FIXTURES, "pass008_block_oob.py")
+    assert main([dirty, "--no-cache", "--format", "sarif"]) == 1
+    log = json.loads(capsys.readouterr().out)
+    assert log["version"] == "2.1.0"
+    run = log["runs"][0]
+    rule_ids = {r["id"] for r in run["tool"]["driver"]["rules"]}
+    assert {"PASS001", "PASS008", "PASS009", "PASS010"} <= rule_ids
+    assert run["results"], "fixture findings must appear as SARIF results"
+    res = run["results"][0]
+    assert res["ruleId"].startswith("PASS")
+    loc = res["locations"][0]["physicalLocation"]
+    assert loc["region"]["startLine"] > 0
+    assert loc["artifactLocation"]["uri"].endswith("pass008_block_oob.py")
+
+
+def test_check_fixtures_self_test_passes():
+    from tools.passlint.cli import check_fixtures
+
+    assert check_fixtures() == 0
+
+
+# -- pragma attachment (decorated defs, multi-line statements) --------------
+
+
+def test_pragma_on_decorated_def_line(tmp_path):
+    src = (
+        "import functools\n"
+        "import jax\n\n\n"
+        '@functools.partial(jax.jit, static_argnames=("missing",))\n'
+        "def f(x):  # passlint: ignore[PASS005] fixture: pragma attaches to the decorated def\n"
+        "    return x\n"
+    )
+    p = tmp_path / "deco.py"
+    p.write_text(src)
+    report = analyze_file(str(p))
+    assert report.error is None
+    assert not [f for f in report.findings if f.code == "PASS005"], (
+        "pragma on the def line must suppress the decorator-anchored finding"
+    )
+    assert any(f.code == "PASS005" for f, _ in report.suppressed)
+
+
+def test_pragma_on_multiline_statement_last_line(tmp_path):
+    src = (
+        "import jax\n\n\n"
+        "def g(key):\n"
+        "    a = jax.random.uniform(key, (2,))\n"
+        "    b = jax.random.normal(\n"
+        "        key,\n"
+        "        (2,),\n"
+        "    )  # passlint: ignore[PASS001] fixture: pragma on the statement's closing line\n"
+        "    return a + b\n"
+    )
+    p = tmp_path / "multi.py"
+    p.write_text(src)
+    report = analyze_file(str(p))
+    assert report.error is None
+    assert not [f for f in report.findings if f.code == "PASS001"], (
+        "pragma on the closing line must cover the whole statement"
+    )
+    assert any(f.code == "PASS001" for f, _ in report.suppressed)

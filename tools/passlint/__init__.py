@@ -2,15 +2,24 @@
 
 Checks (see docs/static-analysis.md for examples and pragma grammar):
 
-  PASS001  PRNG key reuse along a control-flow path
+  PASS001  PRNG key reuse along a control-flow path (interprocedural:
+           reuse inside a local helper is reported at the call site)
   PASS002  key produced (split/fold_in) but never consumed
   PASS003  host op (np.*, float(), .item()) on a traced value
   PASS004  python if/while/assert on a traced value
   PASS005  jit static-argument recompile hazards
   PASS006  pallas_call arity / block-shape / dtype contract violations
   PASS007  numpy float64 flowing into jnp without an explicit dtype
+  PASS008  pallas index_map / BlockSpec window out of bounds or malformed
+  PASS009  overlapping pallas output blocks / unaliased input-ref stores
+  PASS010  asynchronous-update race: a sweep phase stores neighbor-derived
+           fields without an independent-set (color) mask
 
-Run: `python -m tools.passlint src/repro benchmarks [--format json]`.
+PASS001-004 flow through local function calls via per-function summaries
+(`summaries.py`); results replay from a content-hash cache (`cache.py`).
+
+Run: `python -m tools.passlint src/repro benchmarks [--format json|sarif]
+[--baseline FILE] [--check-fixtures]`.
 """
 from tools.passlint.engine import analyze_file, analyze_source, run_paths
 from tools.passlint.findings import CODES, Finding

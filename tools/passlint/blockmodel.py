@@ -1,0 +1,110 @@
+"""Abstract evaluation of Pallas `BlockSpec.index_map` arithmetic.
+
+An index map is a lambda from grid coordinates to *block indices* (the
+element window of block axis d is `index[d]*block_shape[d] : (index[d]+1) *
+block_shape[d]`). The maps this tree writes are affine — `lambda i, j, k:
+(i, k)`, `(i, 0)`, `(i + 1, 0)` — so each returned component is modeled as
+
+    const + sum(coeff[axis] * program_id(axis))
+
+over the lambda's parameters, or TOP (None) when anything non-affine
+appears. PASS008 uses the model to bound block windows against literal
+`out_shape` dims; PASS009 uses `axes_used` to find grid axes that no
+output component depends on (every program along such an axis writes the
+same block — a write-write race unless the store is guarded).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from tools.passlint.resolve import const_int
+
+
+@dataclasses.dataclass(frozen=True)
+class Affine:
+    """const + sum(coeff * i_axis); coeffs maps grid-axis index -> coeff."""
+
+    const: int
+    coeffs: tuple[tuple[int, int], ...]  # sorted ((axis, coeff), ...)
+
+    @property
+    def axes(self) -> set[int]:
+        return {a for a, c in self.coeffs if c != 0}
+
+    def bounds(self, sizes: list[int | None]) -> tuple[int, int] | None:
+        """(min, max) block index over the grid, when every involved axis
+        has a literal size; else None. Axis values range over [0, size)."""
+        lo = hi = self.const
+        for axis, coeff in self.coeffs:
+            if coeff == 0:
+                continue
+            if axis >= len(sizes) or sizes[axis] is None:
+                return None
+            span = coeff * (sizes[axis] - 1)
+            lo += min(0, span)
+            hi += max(0, span)
+        return lo, hi
+
+
+def _combine(a: Affine | None, b: Affine | None, sign: int) -> Affine | None:
+    if a is None or b is None:
+        return None
+    coeffs = dict(a.coeffs)
+    for axis, c in b.coeffs:
+        coeffs[axis] = coeffs.get(axis, 0) + sign * c
+    return Affine(a.const + sign * b.const, tuple(sorted(coeffs.items())))
+
+
+def _scale(a: Affine | None, k: int) -> Affine | None:
+    if a is None:
+        return None
+    return Affine(a.const * k, tuple(sorted((ax, c * k) for ax, c in a.coeffs)))
+
+
+def eval_affine(node: ast.AST, axis_of: dict[str, int]) -> Affine | None:
+    """Evaluate one index-map component to an Affine, or None (TOP)."""
+    i = const_int(node)
+    if i is not None:
+        return Affine(i, ())
+    if isinstance(node, ast.Name):
+        axis = axis_of.get(node.id)
+        if axis is None:
+            return None  # closure variable: unknown value
+        return Affine(0, ((axis, 1),))
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        return _scale(eval_affine(node.operand, axis_of), -1)
+    if isinstance(node, ast.BinOp):
+        left = eval_affine(node.left, axis_of)
+        right = eval_affine(node.right, axis_of)
+        if isinstance(node.op, ast.Add):
+            return _combine(left, right, +1)
+        if isinstance(node.op, ast.Sub):
+            return _combine(left, right, -1)
+        if isinstance(node.op, ast.Mult):
+            if left is not None and not left.coeffs:
+                return _scale(right, left.const)
+            if right is not None and not right.coeffs:
+                return _scale(left, right.const)
+    return None
+
+
+def index_map_components(lam: ast.Lambda) -> list[ast.expr]:
+    """The component expressions an index-map lambda returns."""
+    body = lam.body
+    if isinstance(body, ast.Tuple):
+        return list(body.elts)
+    return [body]
+
+
+def lambda_axes(lam: ast.Lambda) -> dict[str, int]:
+    """Lambda parameter name -> grid axis index."""
+    args = lam.args
+    names = [a.arg for a in args.posonlyargs + args.args]
+    return {n: i for i, n in enumerate(names)}
+
+
+def eval_index_map(lam: ast.Lambda) -> list[Affine | None]:
+    """Affine model of every component of an index-map lambda."""
+    axis_of = lambda_axes(lam)
+    return [eval_affine(c, axis_of) for c in index_map_components(lam)]

@@ -1,0 +1,120 @@
+"""Content-hash incremental cache: re-analyze only changed modules.
+
+The cache is one JSON file mapping each analyzed path to the SHA-256 of
+its source plus the serialized `FileReport`. A lookup hits only when both
+the file content *and the analyzer itself* are unchanged — the cache
+version is a digest over every `tools/passlint/*.py` source, so editing
+any check invalidates everything (stale findings from an older analyzer
+are worse than a cold cache). Corrupt or version-mismatched cache files
+are silently treated as empty.
+
+CI keys an `actions/cache` entry on this file, so the lint job's warm-run
+cost is proportional to the diff, not the tree.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+
+from tools.passlint.findings import Finding
+from tools.passlint.pragmas import Pragma
+
+CACHE_VERSION = 1
+DEFAULT_CACHE_PATH = ".passlint-cache.json"
+
+
+def content_hash(source: str) -> str:
+    """SHA-256 of one file's source text."""
+    return hashlib.sha256(source.encode("utf-8")).hexdigest()
+
+
+def analyzer_fingerprint() -> str:
+    """Digest over the analyzer's own sources: any edit to a check
+    invalidates every cached report."""
+    pkg = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256(str(CACHE_VERSION).encode())
+    for name in sorted(os.listdir(pkg)):
+        if not name.endswith(".py"):
+            continue
+        h.update(name.encode())
+        with open(os.path.join(pkg, name), "rb") as fh:
+            h.update(fh.read())
+    return h.hexdigest()
+
+
+def _report_to_dict(report) -> dict:
+    return {
+        "path": report.path,
+        "findings": [[f.line, f.code, f.message] for f in report.findings],
+        "suppressed": [
+            [f.line, f.code, f.message, p.line, list(p.codes), p.reason]
+            for f, p in report.suppressed
+        ],
+        "error": report.error,
+    }
+
+
+def _report_from_dict(d: dict):
+    from tools.passlint.engine import FileReport  # late: engine imports us
+
+    path = d["path"]
+    findings = [Finding(path, ln, code, msg) for ln, code, msg in d["findings"]]
+    suppressed = [
+        (Finding(path, ln, code, msg), Pragma(pln, tuple(pcodes), reason))
+        for ln, code, msg, pln, pcodes, reason in d["suppressed"]
+    ]
+    return FileReport(path, findings, suppressed, error=d.get("error"),
+                      cached=True)
+
+
+class Cache:
+    """Load-once / save-once view of the cache file."""
+
+    def __init__(self, path: str, entries: dict[str, dict], fingerprint: str):
+        self.path = path
+        self.entries = entries
+        self.fingerprint = fingerprint
+        self.dirty = False
+
+    @classmethod
+    def load(cls, path: str) -> "Cache":
+        fingerprint = analyzer_fingerprint()
+        entries: dict[str, dict] = {}
+        try:
+            with open(path, encoding="utf-8") as fh:
+                data = json.load(fh)
+            if data.get("analyzer") == fingerprint:
+                entries = data.get("entries", {})
+        except (OSError, ValueError):
+            pass
+        return cls(path, entries, fingerprint)
+
+    def get(self, path: str, digest: str):
+        """The cached FileReport for (path, content hash), else None."""
+        entry = self.entries.get(os.path.abspath(path))
+        if entry is None or entry.get("hash") != digest:
+            return None
+        try:
+            return _report_from_dict(entry["report"])
+        except (KeyError, TypeError, ValueError):
+            return None
+
+    def put(self, path: str, digest: str, report) -> None:
+        self.entries[os.path.abspath(path)] = {
+            "hash": digest,
+            "report": _report_to_dict(report),
+        }
+        self.dirty = True
+
+    def save(self) -> None:
+        if not self.dirty:
+            return
+        data = {"analyzer": self.fingerprint, "entries": self.entries}
+        tmp = self.path + ".tmp"
+        try:
+            with open(tmp, "w", encoding="utf-8") as fh:
+                json.dump(data, fh)
+            os.replace(tmp, self.path)
+        except OSError:
+            pass  # a read-only checkout just runs cold

@@ -1,0 +1,140 @@
+"""Module-level call graph over locally-defined functions.
+
+The interprocedural passes (summary-based key flow, cross-function taint,
+sweep mixing summaries) all need the same two facts about a module:
+
+  * which bare names refer to function definitions in this module, and
+  * which of those functions call which others.
+
+`CallGraph.build` collects both, and `topo_order()` returns the defs
+callee-first (reverse topological over the condensation), so a summary
+computation that walks the order sees every callee's summary before the
+caller's. Strongly connected components (mutual recursion) are returned in
+a single group; summary builders fall back to their generic conservative
+rule inside a cycle.
+
+Scope is deliberately module-local: a bare `helper(...)` call resolves to a
+local `def helper` when one exists; dotted calls, imported names, and
+methods stay opaque (the per-check generic rules apply to them unchanged).
+When a module defines the same name twice, the FIRST definition wins
+everywhere — matching how `pallas_contract` and `taint` already resolve
+kernels/callbacks — so summaries and call sites agree on one body.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.passlint.resolve import Resolver
+
+
+def local_defs(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    """Bare name -> FunctionDef for every function in the module (nested
+    included; first definition of a name wins)."""
+    defs: dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, node)
+    return defs
+
+
+def callee_name(call: ast.Call, resolver: Resolver,
+                defs: dict[str, ast.FunctionDef]) -> str | None:
+    """The local-def name a call targets, else None.
+
+    Matches bare `helper(...)` calls whose name both resolves to itself
+    (i.e. is not an import alias shadowing the def) and names a local def.
+    """
+    if not isinstance(call.func, ast.Name):
+        return None
+    name = call.func.id
+    if name not in defs:
+        return None
+    if resolver.resolve(call.func) != name:
+        return None  # an import alias shadows the local def name
+    return name
+
+
+class CallGraph:
+    """Local-function call graph with an SCC-aware bottom-up order."""
+
+    def __init__(self, defs: dict[str, ast.FunctionDef],
+                 edges: dict[str, set[str]]):
+        self.defs = defs
+        self.edges = edges  # caller name -> set of local callee names
+
+    @classmethod
+    def build(cls, tree: ast.Module, resolver: Resolver) -> "CallGraph":
+        defs = local_defs(tree)
+        edges: dict[str, set[str]] = {name: set() for name in defs}
+        for name, fn in defs.items():
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    callee = callee_name(node, resolver, defs)
+                    if callee is not None:
+                        edges[name].add(callee)
+                # bare-name references too (callbacks: lax.scan(step, ...));
+                # self-edges stay so topo_order can mark direct recursion
+                elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load) \
+                        and node.id in defs:
+                    edges[name].add(node.id)
+        return cls(defs, edges)
+
+    def sccs(self) -> list[list[str]]:
+        """Strongly connected components, callee-first (Tarjan, iterative)."""
+        index: dict[str, int] = {}
+        low: dict[str, int] = {}
+        on_stack: set[str] = set()
+        stack: list[str] = []
+        out: list[list[str]] = []
+        counter = [0]
+
+        def strongconnect(root: str):
+            work = [(root, iter(sorted(self.edges.get(root, ()))))]
+            index[root] = low[root] = counter[0]
+            counter[0] += 1
+            stack.append(root)
+            on_stack.add(root)
+            while work:
+                v, it = work[-1]
+                advanced = False
+                for w in it:
+                    if w not in index:
+                        index[w] = low[w] = counter[0]
+                        counter[0] += 1
+                        stack.append(w)
+                        on_stack.add(w)
+                        work.append((w, iter(sorted(self.edges.get(w, ())))))
+                        advanced = True
+                        break
+                    if w in on_stack:
+                        low[v] = min(low[v], index[w])
+                if advanced:
+                    continue
+                work.pop()
+                if work:
+                    parent = work[-1][0]
+                    low[parent] = min(low[parent], low[v])
+                if low[v] == index[v]:
+                    comp = []
+                    while True:
+                        w = stack.pop()
+                        on_stack.discard(w)
+                        comp.append(w)
+                        if w == v:
+                            break
+                    out.append(comp)
+
+        for name in sorted(self.defs):
+            if name not in index:
+                strongconnect(name)
+        return out
+
+    def topo_order(self) -> list[tuple[str, bool]]:
+        """(name, in_cycle) callee-first; in_cycle covers self/mutual
+        recursion, where summaries must fall back to generic rules."""
+        order: list[tuple[str, bool]] = []
+        for comp in self.sccs():
+            cyclic = len(comp) > 1 or comp[0] in self.edges.get(comp[0], ())
+            for name in comp:
+                order.append((name, cyclic))
+        return order

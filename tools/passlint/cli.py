@@ -1,23 +1,36 @@
 """Command-line interface: `python -m tools.passlint <paths...>`.
 
 Exit status: 0 when no unsuppressed findings (and no analysis errors),
-1 otherwise. `--format json` emits a machine-readable report;
-`--summary-md FILE` appends a markdown table (for CI job summaries).
+1 otherwise. `--format json` emits a machine-readable report, `--format
+sarif` a SARIF 2.1.0 log for GitHub code scanning; `--summary-md FILE`
+appends a markdown table (for CI job summaries).
+
+Adoption/CI helpers: `--baseline FILE` fails only on findings not in the
+recorded baseline (write one with `--write-baseline`), `--cache FILE` /
+`--no-cache` control the content-hash incremental cache, and
+`--check-fixtures` self-tests the analyzer against the `expect[CODE]`
+markers in `tests/fixtures/passlint/` without needing pytest.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import re
 import sys
 
-from tools.passlint.engine import FileReport, run_paths
-from tools.passlint.findings import CODES
+from tools.passlint.cache import DEFAULT_CACHE_PATH
+from tools.passlint.engine import FileReport, analyze_file, run_paths
+from tools.passlint.findings import CODES, Finding
+
+_NUM_RE = re.compile(r"\d+")
 
 
 def _text_report(reports: list[FileReport], show_suppressed: bool) -> str:
     lines: list[str] = []
     n_active = 0
     n_suppressed = 0
+    n_cached = sum(1 for r in reports if r.cached)
     for r in reports:
         if r.error:
             lines.append(f"{r.path}: analysis error: {r.error}")
@@ -30,9 +43,10 @@ def _text_report(reports: list[FileReport], show_suppressed: bool) -> str:
         if show_suppressed:
             for f, p in r.suppressed:
                 lines.append(f"{f.render()}  [suppressed: {p.reason}]")
+    cached = f", {n_cached} from cache" if n_cached else ""
     lines.append(
         f"passlint: {n_active} finding(s), {n_suppressed} suppressed, "
-        f"{len(reports)} file(s) checked"
+        f"{len(reports)} file(s) checked{cached}"
     )
     return "\n".join(lines)
 
@@ -49,9 +63,59 @@ def _json_report(reports: list[FileReport]) -> str:
                 {"path": r.path, "error": r.error} for r in reports if r.error
             ],
             "files_checked": len(reports),
+            "files_from_cache": sum(1 for r in reports if r.cached),
         },
         indent=2,
     )
+
+
+def _sarif_report(reports: list[FileReport]) -> str:
+    """SARIF 2.1.0 — the schema GitHub code scanning ingests."""
+    rules = [
+        {
+            "id": code,
+            "shortDescription": {"text": title},
+            "help": {"text": hint},
+            "defaultConfiguration": {"level": "error"},
+        }
+        for code, (title, hint) in sorted(CODES.items())
+    ]
+    results = [
+        {
+            "ruleId": f.code,
+            "level": "error",
+            "message": {"text": f.message},
+            "locations": [
+                {
+                    "physicalLocation": {
+                        "artifactLocation": {"uri": f.path.replace(os.sep, "/")},
+                        "region": {"startLine": f.line},
+                    }
+                }
+            ],
+        }
+        for r in reports
+        for f in r.findings
+    ]
+    log = {
+        "$schema": "https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+        "master/Schemata/sarif-schema-2.1.0.json",
+        "version": "2.1.0",
+        "runs": [
+            {
+                "tool": {
+                    "driver": {
+                        "name": "passlint",
+                        "informationUri":
+                            "https://github.com/repo/docs/static-analysis.md",
+                        "rules": rules,
+                    }
+                },
+                "results": results,
+            }
+        ],
+    }
+    return json.dumps(log, indent=2)
 
 
 def _markdown_summary(reports: list[FileReport]) -> str:
@@ -60,8 +124,10 @@ def _markdown_summary(reports: list[FileReport]) -> str:
     out = ["## passlint", ""]
     if not rows and not errors:
         n_sup = sum(len(r.suppressed) for r in reports)
+        n_cached = sum(1 for r in reports if r.cached)
         out.append(
-            f"No findings ({len(reports)} files checked, {n_sup} suppressed)."
+            f"No findings ({len(reports)} files checked, {n_sup} suppressed, "
+            f"{n_cached} from cache)."
         )
         return "\n".join(out) + "\n"
     if rows:
@@ -75,26 +141,164 @@ def _markdown_summary(reports: list[FileReport]) -> str:
     return "\n".join(out) + "\n"
 
 
+# -- baseline ---------------------------------------------------------------
+
+def _baseline_key(path: str, f: Finding) -> tuple[str, str, str]:
+    """Match on (relative-ish path, code, digit-normalized message) so
+    line drift from unrelated edits does not resurrect old findings."""
+    return (path.replace(os.sep, "/"), f.code, _NUM_RE.sub("N", f.message))
+
+
+def _load_baseline(path: str) -> set[tuple[str, str, str]]:
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    return {
+        (e["path"], e["code"], _NUM_RE.sub("N", e["message"]))
+        for e in data.get("findings", [])
+    }
+
+
+def _write_baseline(path: str, reports: list[FileReport]) -> None:
+    data = {
+        "comment": "passlint baseline: known findings tolerated by --baseline. "
+        "Burn these down; new findings still fail.",
+        "findings": [
+            {"path": r.path.replace(os.sep, "/"), "code": f.code,
+             "message": f.message}
+            for r in reports for f in r.findings
+        ],
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(data, fh, indent=2)
+        fh.write("\n")
+
+
+def _apply_baseline(reports: list[FileReport], baseline: set) -> int:
+    """Strip baselined findings from the reports; returns how many were
+    tolerated."""
+    n = 0
+    for r in reports:
+        keep = []
+        for f in r.findings:
+            if _baseline_key(r.path, f) in baseline:
+                n += 1
+            else:
+                keep.append(f)
+        r.findings = keep
+    return n
+
+
+# -- fixture self-test ------------------------------------------------------
+
+_EXPECT_RE = re.compile(r"expect\[(PASS\d{3})\]")
+
+
+def _fixtures_dir() -> str:
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    return os.path.join(repo, "tests", "fixtures", "passlint")
+
+
+def check_fixtures(fixtures_dir: str | None = None) -> int:
+    """Assert every marker fixture's findings are exactly its `expect[CODE]`
+    set — a pytest-free guard against fixture/analyzer drift. Returns the
+    number of mismatching fixture files (0 = pass)."""
+    fixtures_dir = fixtures_dir or _fixtures_dir()
+    failures = 0
+    checked = 0
+    for name in sorted(os.listdir(fixtures_dir)):
+        if not name.endswith(".py"):
+            continue
+        path = os.path.join(fixtures_dir, name)
+        expected = set()
+        with open(path, encoding="utf-8") as fh:
+            for i, line in enumerate(fh, 1):
+                if "#" in line:
+                    for m in _EXPECT_RE.finditer(line.split("#", 1)[1]):
+                        expected.add((i, m.group(1)))
+        if not expected:
+            continue  # marker-less fixtures (pragma corpus) have their own test
+        checked += 1
+        report = analyze_file(path)
+        got = {(f.line, f.code) for f in report.findings}
+        missed = sorted(expected - got)
+        spurious = sorted(got - expected)
+        if report.error or missed or spurious:
+            failures += 1
+            print(f"FIXTURE MISMATCH {name}:")
+            if report.error:
+                print(f"  analysis error: {report.error}")
+            for line, code in missed:
+                print(f"  missed expected finding {code} at line {line}")
+            for line, code in spurious:
+                print(f"  false positive {code} at line {line}")
+    print(f"passlint --check-fixtures: {checked} fixture(s) checked, "
+          f"{failures} mismatch(es)")
+    return failures
+
+
 def main(argv: list[str] | None = None) -> int:
     """Entry point; returns the process exit status."""
     ap = argparse.ArgumentParser(
         prog="python -m tools.passlint",
         description="JAX/Pallas-aware static analysis for this repo "
-        "(PRNG key discipline, tracer safety, jit/pallas contracts).",
+        "(PRNG key discipline, tracer safety, jit/pallas contracts, "
+        "asynchronous-sweep races).",
     )
-    ap.add_argument("paths", nargs="+", help="files or directories to check")
-    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("paths", nargs="*", help="files or directories to check")
+    ap.add_argument("--format", choices=("text", "json", "sarif"), default="text")
     ap.add_argument("--show-suppressed", action="store_true",
                     help="also list pragma-suppressed findings (text format)")
     ap.add_argument("--summary-md", metavar="FILE",
                     help="append a markdown summary (e.g. $GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--baseline", metavar="FILE",
+                    help="fail only on findings not recorded in this baseline")
+    ap.add_argument("--write-baseline", metavar="FILE",
+                    help="record current findings as the new baseline and exit 0")
+    ap.add_argument("--cache", metavar="FILE", default=None,
+                    help="incremental cache file "
+                    f"(default: {DEFAULT_CACHE_PATH}; see --no-cache)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="analyze everything fresh, touch no cache file")
+    ap.add_argument("--check-fixtures", action="store_true",
+                    help="self-test the analyzer against the expect[CODE] "
+                    "fixture corpus and exit")
     args = ap.parse_args(argv)
 
-    reports = run_paths(args.paths)
+    if args.check_fixtures:
+        return 1 if check_fixtures() else 0
+    if not args.paths:
+        ap.error("paths are required (unless --check-fixtures)")
+
+    cache_path = None if args.no_cache else (args.cache or DEFAULT_CACHE_PATH)
+    reports = run_paths(args.paths, cache_path=cache_path)
+
+    if args.write_baseline:
+        _write_baseline(args.write_baseline, reports)
+        n = sum(len(r.findings) for r in reports)
+        print(f"passlint: wrote baseline with {n} finding(s) to "
+              f"{args.write_baseline}")
+        return 0
+
+    n_baselined = 0
+    if args.baseline:
+        try:
+            baseline = _load_baseline(args.baseline)
+        except (OSError, ValueError, KeyError) as e:
+            print(f"passlint: cannot read baseline {args.baseline}: {e}",
+                  file=sys.stderr)
+            return 1
+        n_baselined = _apply_baseline(reports, baseline)
+
     if args.format == "json":
         print(_json_report(reports))
+    elif args.format == "sarif":
+        print(_sarif_report(reports))
     else:
         print(_text_report(reports, args.show_suppressed))
+        if n_baselined:
+            print(f"passlint: {n_baselined} baselined finding(s) tolerated "
+                  f"(burn them down: see {args.baseline})")
     if args.summary_md:
         with open(args.summary_md, "a", encoding="utf-8") as fh:
             fh.write(_markdown_summary(reports))

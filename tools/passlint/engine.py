@@ -1,13 +1,28 @@
-"""Drive all passlint checks over files and apply pragma suppressions."""
+"""Drive all passlint checks over files and apply pragma suppressions.
+
+Per file: parse once, build the module context (call graph + key/taint
+summaries — `summaries.py`), run every check, and apply pragmas with
+statement-group matching. `run_paths` optionally threads a content-hash
+cache (`cache.py`) through, marking replayed reports with `cached=True`.
+"""
 from __future__ import annotations
 
 import ast
 import dataclasses
 import os
 
-from tools.passlint import f64flow, jit_static, keyflow, pallas_contract, taint
+from tools.passlint import (
+    f64flow,
+    jit_static,
+    keyflow,
+    pallas_contract,
+    race,
+    summaries,
+    taint,
+)
+from tools.passlint.cache import Cache, content_hash
 from tools.passlint.findings import Finding, sort_findings
-from tools.passlint.pragmas import Pragma, apply_pragmas, parse_pragmas
+from tools.passlint.pragmas import Pragma, apply_pragmas, line_groups, parse_pragmas
 from tools.passlint.resolve import Resolver
 
 
@@ -19,34 +34,45 @@ class FileReport:
     findings: list[Finding]            # active (unsuppressed)
     suppressed: list[tuple[Finding, Pragma]]
     error: str | None = None           # syntax / decode failure
+    cached: bool = False               # replayed from the incremental cache
 
 
 def analyze_source(source: str, path: str) -> FileReport:
-    """Parse once, run every check, apply pragmas."""
+    """Parse once, build summaries, run every check, apply pragmas."""
     try:
         tree = ast.parse(source, filename=path)
     except SyntaxError as e:
         return FileReport(path, [], [], error=f"syntax error: {e.msg} (line {e.lineno})")
     resolver = Resolver(tree)
+    ctx = summaries.build(tree, resolver, path)
     findings: list[Finding] = []
-    findings += keyflow.check_functions(tree, resolver, path)
-    findings += taint.check_module(tree, resolver, path)
+    findings += keyflow.check_functions(tree, resolver, path, ctx=ctx)
+    findings += taint.check_module(tree, resolver, path, ctx=ctx)
     findings += jit_static.check_module(tree, resolver, path)
     findings += pallas_contract.check_module(tree, resolver, path)
+    findings += race.check_module(tree, resolver, path, ctx)
     findings += f64flow.check_module(tree, resolver, path)
     pragmas, pragma_problems = parse_pragmas(source, path)
-    active, suppressed = apply_pragmas(findings, pragmas)
+    active, suppressed = apply_pragmas(findings, pragmas, line_groups(tree))
     return FileReport(path, sort_findings(active + pragma_problems), suppressed)
 
 
-def analyze_file(path: str) -> FileReport:
-    """Read and analyze one file."""
+def analyze_file(path: str, cache: Cache | None = None) -> FileReport:
+    """Read and analyze one file, via the cache when possible."""
     try:
         with open(path, encoding="utf-8") as fh:
             source = fh.read()
     except (OSError, UnicodeDecodeError) as e:
         return FileReport(path, [], [], error=str(e))
-    return analyze_source(source, path)
+    if cache is not None:
+        digest = content_hash(source)
+        hit = cache.get(path, digest)
+        if hit is not None:
+            return hit
+    report = analyze_source(source, path)
+    if cache is not None:
+        cache.put(path, digest, report)
+    return report
 
 
 def collect_files(paths: list[str]) -> list[str]:
@@ -65,6 +91,15 @@ def collect_files(paths: list[str]) -> list[str]:
     return sorted(out)
 
 
-def run_paths(paths: list[str]) -> list[FileReport]:
-    """Analyze every .py file under the given paths."""
-    return [analyze_file(p) for p in collect_files(paths)]
+def run_paths(paths: list[str], cache_path: str | None = None) -> list[FileReport]:
+    """Analyze every .py file under the given paths.
+
+    With `cache_path`, unchanged files (same content hash, same analyzer
+    fingerprint) replay their stored report with `cached=True`, and the
+    cache file is rewritten when anything new was analyzed.
+    """
+    cache = Cache.load(cache_path) if cache_path else None
+    reports = [analyze_file(p, cache=cache) for p in collect_files(paths)]
+    if cache is not None:
+        cache.save()
+    return reports

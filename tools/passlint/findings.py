@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 
 # code -> (title, fix hint). PASS000 is the meta-code for malformed
-# suppressions; PASS001-007 are the analysis checks.
+# suppressions; PASS001-010 are the analysis checks.
 CODES: dict[str, tuple[str, str]] = {
     "PASS000": (
         "malformed pragma",
@@ -57,6 +57,26 @@ CODES: dict[str, tuple[str, str]] = {
         "give the numpy intermediate an explicit 32-bit dtype (or .astype) "
         "before it reaches jnp; with x64 disabled the implicit downcast "
         "hides precision assumptions",
+    ),
+    "PASS008": (
+        "pallas block window out of bounds",
+        "index_map must take one parameter per grid axis, return one block "
+        "index per block dim, and keep every program's element window "
+        "(index*block : (index+1)*block) inside the array shape",
+    ),
+    "PASS009": (
+        "pallas overlapping / aliasing writes",
+        "make the output index_map depend on every grid axis (or guard the "
+        "final store with pl.when on that axis's program_id / accumulate "
+        "into the output), and declare input_output_aliases for any input "
+        "ref the kernel writes",
+    ),
+    "PASS010": (
+        "asynchronous-update race in a sweep",
+        "guard each phase's store with that phase's independent-set mask "
+        "(jnp.where(colors[c] ..., proposal, s)) — concurrently updated "
+        "sites must not be neighbors, or the sweep samples the wrong "
+        "distribution (chromatic-independence contract)",
     ),
 }
 

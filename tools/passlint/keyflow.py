@@ -21,6 +21,16 @@ reset each pass (fresh per iteration).
 PASS002 fires for a produced key that is never read again anywhere in the
 function — lost entropy, usually a consumer wired to the wrong key.
 Targets prefixed with `_` are exempt (explicitly discarded).
+
+Interprocedural (v2): when the engine supplies a `ModuleContext`
+(`summaries.py`), calls to local functions use that callee's *key summary*
+instead of the generic consume-once rule: a helper that only derives
+(`fold_in`) does not consume the caller's key, a helper that returns a key
+produces a tracked key at the call site, and a helper that internally
+consumes one parameter twice turns a single call into a PASS001 at the
+call site — the reuse is invisible to any per-function view. The same
+probe machinery runs this class in `probe` mode (all positional parameters
+seeded as distinct keys, reporting disabled) to *compute* those summaries.
 """
 from __future__ import annotations
 
@@ -64,11 +74,14 @@ class KeyFlow:
     """Interpret one function body for key reuse (PASS001) and dead keys
     (PASS002)."""
 
-    def __init__(self, fn: ast.FunctionDef, resolver: Resolver, path: str):
+    def __init__(self, fn: ast.FunctionDef, resolver: Resolver, path: str,
+                 ctx=None, probe: bool = False):
         self.fn = fn
         self.resolver = resolver
         self.path = path
-        self.findings: list[Finding] = []
+        self.ctx = ctx            # summaries.ModuleContext | None
+        self.probe = probe        # summary-computation mode: seed all params,
+        self.findings: list[Finding] = []  # report nothing
         self._seen: set[tuple[int, str, str]] = set()
         # state: env path -> key id; arrays: paths holding stacks of keys;
         # info: key id -> (consume count, first consumption line)
@@ -76,6 +89,8 @@ class KeyFlow:
         self.arrays: set[str] = set()
         self.info: dict[int, tuple[int, Optional[int]]] = {}
         self._next_id = 0
+        # key id -> line of its second consumption (for call-site messages)
+        self.reuse_line: dict[int, int] = {}
         # (name, def stmt first/last line, in-loop) of produced keys, for
         # PASS002
         self.produced: list[tuple[str, int, int, bool]] = []
@@ -83,6 +98,9 @@ class KeyFlow:
         # set by return/raise/break/continue: the current path is dead, so
         # its state must not merge into the continuation
         self.terminated = False
+        # probe outputs: param name -> seeded key id; strongest Return kind
+        self.param_ids: dict[str, int] = {}
+        self.return_kind: Optional[str] = None
 
     # -- state plumbing ----------------------------------------------------
 
@@ -143,12 +161,15 @@ class KeyFlow:
         cnt, first = self.info[kid]
         cnt += 1
         if cnt >= 2:
+            self.reuse_line.setdefault(kid, line)
             self._report(line, "PASS001",
                          f"PRNG key '{path}' consumed again on this "
                          f"control-flow path (first consumed at line {first})")
         self.info[kid] = (cnt, first if first is not None else line)
 
     def _report(self, line: int, code: str, msg: str):
+        if self.probe:
+            return  # summary computation: collect counts, emit nothing
         sig = (line, code, msg)
         if sig not in self._seen:
             self._seen.add(sig)
@@ -199,9 +220,59 @@ class KeyFlow:
             for kw in call.keywords:
                 self._expr(kw.value)
             return
+        summ = self._local_summary(resolved)
+        if summ is not None:
+            self._summary_call(call, summ, resolved)
+            return
         # generic call: a key passed to any other callable is consumed once
         for a in list(call.args) + [kw.value for kw in call.keywords]:
             self._escape(a)
+
+    # -- interprocedural (summaries) ---------------------------------------
+
+    def _local_summary(self, resolved: Optional[str]):
+        """The callee's key summary, when it is a local function that
+        (transitively) touches jax.random; else None (generic rule)."""
+        if self.ctx is None or resolved is None:
+            return None
+        s = self.ctx.key.get(resolved)
+        if s is not None and s.touches_random:
+            return s
+        return None
+
+    def _summary_call(self, call: ast.Call, summ, name: str):
+        """Consume key arguments per the callee's summary instead of the
+        generic consume-once rule."""
+        if any(isinstance(a, ast.Starred) for a in call.args):
+            for a in list(call.args) + [kw.value for kw in call.keywords]:
+                self._escape(a)  # *args defeats parameter mapping
+            return
+        pairs: list[tuple[Optional[str], ast.expr]] = []
+        for i, a in enumerate(call.args):
+            pname = summ.param_names[i] if i < len(summ.param_names) else None
+            pairs.append((pname, a))
+        for kw in call.keywords:
+            pairs.append((kw.arg, kw.value))  # None for **kwargs
+        for pname, arg in pairs:
+            p = path_of(arg)
+            tracked = p is not None and self._lookup_peek(p)
+            if not tracked:
+                self._expr(arg)
+                continue
+            cnt = summ.consumes.get(pname, 1) if pname is not None else 1
+            if cnt <= 0:
+                continue  # callee only derives (fold_in/clone) — no consumption
+            if cnt >= 2 and pname not in summ.keyish:
+                # the reuse happens inside the callee, against a parameter
+                # whose name gives the per-function heuristic nothing to go
+                # on — report it here, where the key actually enters
+                lines = summ.reuse_lines.get(pname)
+                where = f" (lines {lines[0]} and {lines[1]} of the callee)" \
+                    if lines else ""
+                self._report(arg.lineno, "PASS001",
+                             f"PRNG key '{p}' is passed to '{name}', which "
+                             f"consumes it {cnt} times internally{where}")
+            self._consume(p, arg.lineno)
 
     def _escape(self, e):
         """Argument position of a non-jax.random call: consume key paths."""
@@ -233,6 +304,9 @@ class KeyFlow:
                     r.rsplit(".", 1)[1] in ("key", "PRNGKey", "fold_in", "clone",
                                             "wrap_key_data"):
                 return "key"
+            summ = self._local_summary(r)
+            if summ is not None and summ.returns_key is not None:
+                return summ.returns_key  # 'key' | 'split' from the callee
             return None
         p = path_of(value)
         if p is not None:
@@ -326,6 +400,11 @@ class KeyFlow:
         elif isinstance(st, ast.Expr):
             self._expr(st.value)
         elif isinstance(st, ast.Return):
+            if st.value is not None and self.probe:
+                kind = self._classify_rhs(st.value)
+                rank = {None: 0, "alias": 1, "key": 1, "alias_array": 2, "split": 2}
+                if rank.get(kind, 0) > rank.get(self.return_kind, 0):
+                    self.return_kind = "split" if rank[kind] == 2 else "key"
             if st.value is not None and path_of(st.value) is None:
                 self._expr(st.value)
             self.terminated = True
@@ -412,12 +491,19 @@ class KeyFlow:
         """Analyze the function; returns PASS001 + PASS002 findings."""
         args = self.fn.args
         for a in list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs):
-            if is_keyish(a.arg):
+            if self.probe:
+                # summary probe: every parameter is a distinct key, so the
+                # per-parameter consumption counts fall out of self.info
+                kid = self._fresh()
+                self.env[a.arg] = kid
+                self.param_ids[a.arg] = kid
+            elif is_keyish(a.arg):
                 self.env[a.arg] = self._fresh()
             elif is_keyish_plural(a.arg):
                 self.arrays.add(a.arg)
         self.exec_block(self.fn.body)
-        self._dead_keys()
+        if not self.probe:
+            self._dead_keys()
         return self.findings
 
     def _dead_keys(self):
@@ -452,16 +538,33 @@ def _touches_jax_random(fn: ast.AST, resolver: Resolver) -> bool:
     return False
 
 
-def check_functions(tree: ast.Module, resolver: Resolver, path: str) -> list[Finding]:
+def _key_relevant(fn: ast.AST, resolver: Resolver, ctx) -> bool:
+    """Analyze this function? Directly random-touching, or (with a module
+    context) calling a local function that transitively touches random."""
+    if _touches_jax_random(fn, resolver):
+        return True
+    if ctx is None:
+        return False
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            r = resolver.resolve(node.func)
+            s = ctx.key.get(r) if r is not None else None
+            if s is not None and s.touches_random:
+                return True
+    return False
+
+
+def check_functions(tree: ast.Module, resolver: Resolver, path: str,
+                    ctx=None) -> list[Finding]:
     """Run the key-flow analysis over every function in a module.
 
-    Functions that never call jax.random are skipped: name heuristics
-    ('k', 'kv_k', ...) otherwise misread attention q/k/v tensors and
-    pytree keys as PRNG keys.
+    Functions with no (transitive) path into jax.random are skipped: name
+    heuristics ('k', 'kv_k', ...) otherwise misread attention q/k/v tensors
+    and pytree keys as PRNG keys.
     """
     findings: list[Finding] = []
     for node in ast.walk(tree):
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
-                and _touches_jax_random(node, resolver):
-            findings += KeyFlow(node, resolver, path).run()
+                and _key_relevant(node, resolver, ctx):
+            findings += KeyFlow(node, resolver, path, ctx=ctx).run()
     return findings

@@ -17,6 +17,23 @@ with its operands, four contracts are decidable without running anything:
     kernel stores `out_ref[...] = (...).astype(<literal jnp dtype>)`, the
     two must match (a mismatch silently casts on the way out).
 
+**PASS008** (memory model, bounds) abstractly evaluates `index_map`
+arithmetic with `blockmodel.py`'s affine domain: an index map whose arity
+differs from the grid rank, whose component count differs from the block
+rank, or whose block window provably lands outside a literal `out_shape`
+is reported.
+
+**PASS009** (memory model, write-write) flags two aliasing hazards: a grid
+axis of literal size > 1 that no `out_specs` index-map component depends
+on while the kernel overwrites that output without ever reading
+`pl.program_id` for the axis (every program along the axis writes the same
+block — last-writer-wins), and a kernel that stores into an *input* ref
+with no `input_output_aliases` entry for it (the compiler is free to keep
+the input read-only; the write is silently lost). Accumulator kernels that
+read their output ref, and the grid-sequential TPU idiom of a
+`pl.program_id`-guarded final store (`@pl.when(k == nk - 1)`), are
+recognized and not flagged.
+
 Shapes and dtypes that are computed (names, `.shape` unpacks, `s.dtype`)
 are skipped — the checks fire only on literals, keeping them exact.
 """
@@ -25,9 +42,11 @@ from __future__ import annotations
 import ast
 from typing import Optional
 
+from tools.passlint import blockmodel
 from tools.passlint.findings import Finding
 from tools.passlint.resolve import (
     Resolver,
+    const_int,
     const_int_tuple,
     keyword_arg,
 )
@@ -131,6 +150,216 @@ def _dtype_name(dt: str) -> str:
     return dt.rsplit(".", 1)[1]
 
 
+# -- PASS008/PASS009 helpers (memory model) --------------------------------
+
+def _grid_info(call: ast.Call) -> tuple[Optional[int], list[Optional[int]]]:
+    """(grid rank | None, per-axis literal sizes) from the grid= keyword."""
+    grid = keyword_arg(call, "grid")
+    if grid is None:
+        return None, []
+    i = const_int(grid)
+    if i is not None:
+        return 1, [i]
+    if isinstance(grid, (ast.Tuple, ast.List)):
+        return len(grid.elts), [const_int(e) for e in grid.elts]
+    return None, []
+
+
+def _index_map(spec: ast.AST, resolver: Resolver) -> Optional[ast.Lambda]:
+    """The index_map lambda of a BlockSpec(...) node, else None."""
+    if not isinstance(spec, ast.Call):
+        return None
+    if resolver.resolve(spec.func) not in BLOCKSPEC_NAMES:
+        return None
+    im = spec.args[1] if len(spec.args) > 1 else keyword_arg(spec, "index_map")
+    return im if isinstance(im, ast.Lambda) else None
+
+
+def _spec_list(node: Optional[ast.AST]) -> list[ast.AST]:
+    if node is None:
+        return []
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    return [node]
+
+
+def _reads_program_id_axis(kernel: ast.FunctionDef, resolver: Resolver,
+                           axis: int) -> bool:
+    """Does the kernel read pl.program_id for this axis (literal or
+    unknown arg)? Such kernels pin axis-dependent behavior explicitly —
+    the `@pl.when(k == nk - 1)` final-store idiom."""
+    for node in ast.walk(kernel):
+        if isinstance(node, ast.Call) and resolver.resolve(node.func) == \
+                "jax.experimental.pallas.program_id":
+            arg = node.args[0] if node.args else keyword_arg(node, "axis")
+            if arg is None:
+                return True
+            lit = const_int(arg)
+            if lit is None or lit == axis:
+                return True
+    return False
+
+
+def _param_stores(kernel: ast.FunctionDef, param: str) -> list[ast.AST]:
+    """Assign/AugAssign statements whose target subscripts `param`."""
+    out = []
+    for node in ast.walk(kernel):
+        if not isinstance(node, (ast.Assign, ast.AugAssign)):
+            continue
+        targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+        if any(isinstance(t, ast.Subscript) and isinstance(t.value, ast.Name)
+               and t.value.id == param for t in targets):
+            out.append(node)
+    return out
+
+
+def _param_subscript_reads(kernel: ast.FunctionDef, param: str) -> bool:
+    """Does the kernel load `param[...]` anywhere (accumulator idiom)?"""
+    for node in ast.walk(kernel):
+        if isinstance(node, ast.Subscript) and isinstance(node.ctx, ast.Load) \
+                and isinstance(node.value, ast.Name) and node.value.id == param:
+            return True
+    return False
+
+
+def _aliased_inputs(call: ast.Call) -> Optional[set[int]]:
+    """Input indices covered by a literal input_output_aliases dict; None
+    when the keyword is absent, or when it is present but not a literal
+    (assume the author knows — skip the check)."""
+    node = keyword_arg(call, "input_output_aliases")
+    if node is None:
+        return set()
+    if isinstance(node, ast.Dict):
+        idxs = [const_int(k) for k in node.keys if k is not None]
+        if all(i is not None for i in idxs):
+            return set(idxs)  # type: ignore[arg-type]
+    return None
+
+
+def _check_memory_model(call: ast.Call, kernel: Optional[ast.FunctionDef],
+                        bound: int, n_in: Optional[int],
+                        resolver: Resolver, path: str) -> list[Finding]:
+    """PASS008 (index-map bounds) + PASS009 (write-write hazards) for one
+    pallas_call site."""
+    findings: list[Finding] = []
+    line = call.lineno
+    rank, sizes = _grid_info(call)
+    in_specs = _spec_list(keyword_arg(call, "in_specs"))
+    out_specs = _spec_list(keyword_arg(call, "out_specs"))
+    out_shapes = _spec_list(keyword_arg(call, "out_shape"))
+
+    # PASS008: lambda arity vs grid rank; component count vs block rank
+    for role, spec in [("in_specs", s) for s in in_specs] + \
+                      [("out_specs", s) for s in out_specs]:
+        lam = _index_map(spec, resolver)
+        if lam is None:
+            continue
+        n_lam = len(lam.args.posonlyargs) + len(lam.args.args)
+        if rank is not None and n_lam != rank:
+            findings.append(Finding(
+                path, lam.lineno, "PASS008",
+                f"{role} index_map takes {n_lam} parameter(s) but the grid "
+                f"has {rank} axis/axes — the map must take one block index "
+                "per grid axis",
+            ))
+            continue
+        block = _block_shape(spec, resolver)
+        comps = blockmodel.index_map_components(lam)
+        if block is not None and len(comps) != len(block):
+            findings.append(Finding(
+                path, lam.lineno, "PASS008",
+                f"{role} index_map returns {len(comps)} component(s) for a "
+                f"rank-{len(block)} block {block}",
+            ))
+
+    # PASS008: literal out-of-bounds block windows on the output
+    if len(out_specs) == 1 and len(out_shapes) == 1:
+        lam = _index_map(out_specs[0], resolver)
+        block = _block_shape(out_specs[0], resolver)
+        dims, _ = _shape_dtype(out_shapes[0], resolver)
+        if lam is not None and block is not None and dims is not None \
+                and len(block) == len(dims) \
+                and len(blockmodel.index_map_components(lam)) == len(block):
+            for d, aff in enumerate(blockmodel.eval_index_map(lam)):
+                if aff is None:
+                    continue
+                b = aff.bounds(sizes)
+                if b is None:
+                    continue
+                lo, hi = b
+                if lo < 0 or (hi + 1) * block[d] > dims[d]:
+                    findings.append(Finding(
+                        path, lam.lineno, "PASS008",
+                        f"out_specs index_map axis {d} spans block indices "
+                        f"[{lo}, {hi}] with block size {block[d]} — element "
+                        f"window [{lo * block[d]}, {(hi + 1) * block[d]}) "
+                        f"falls outside out_shape dim {dims[d]}",
+                    ))
+
+    # PASS009: a grid axis no output component depends on, with an
+    # unguarded pure overwrite — every program on that axis writes the
+    # same block
+    if kernel is not None and n_in is not None and kernel.args.vararg is None:
+        params = [a.arg for a in kernel.args.posonlyargs + kernel.args.args]
+        params = params[bound:] if bound else params
+        for k, (spec, _shape) in enumerate(zip(out_specs, out_shapes)):
+            if n_in + k >= len(params):
+                break
+            out_param = params[n_in + k]
+            lam = _index_map(spec, resolver)
+            if lam is None:
+                continue
+            used: set[int] = set()
+            decided = True
+            for aff in blockmodel.eval_index_map(lam):
+                if aff is None:
+                    decided = False
+                    break
+                used |= aff.axes
+            if not decided:
+                continue
+            stores = _param_stores(kernel, out_param)
+            pure_overwrite = stores and all(isinstance(s, ast.Assign)
+                                            for s in stores) \
+                and not _param_subscript_reads(kernel, out_param)
+            if not pure_overwrite:
+                continue
+            for axis, size in enumerate(sizes):
+                if axis in used or size is None or size <= 1:
+                    continue
+                if _reads_program_id_axis(kernel, resolver, axis):
+                    continue
+                findings.append(Finding(
+                    path, line, "PASS009",
+                    f"grid axis {axis} (size {size}) does not appear in the "
+                    f"out_specs index_map, but kernel '{kernel.name}' "
+                    f"overwrites '{out_param}' unconditionally — all "
+                    f"{size} programs along the axis write the same block "
+                    "(write-write race / last-writer-wins)",
+                ))
+
+    # PASS009: stores into input refs without input_output_aliases
+    if kernel is not None and n_in is not None and kernel.args.vararg is None:
+        params = [a.arg for a in kernel.args.posonlyargs + kernel.args.args]
+        params = params[bound:] if bound else params
+        aliased = _aliased_inputs(call)
+        if aliased is not None:
+            for idx, in_param in enumerate(params[:n_in]):
+                if idx in aliased:
+                    continue
+                stores = _param_stores(kernel, in_param)
+                if stores:
+                    findings.append(Finding(
+                        path, line, "PASS009",
+                        f"kernel '{kernel.name}' stores into input ref "
+                        f"'{in_param}' (line {stores[0].lineno}) but this "
+                        f"pallas_call declares no input_output_aliases "
+                        f"entry for input {idx} — the write aliases "
+                        "read-only memory",
+                    ))
+    return findings
+
+
 def check_module(tree: ast.Module, resolver: Resolver, path: str) -> list[Finding]:
     """PASS006 over every pallas_call site in a module."""
     findings: list[Finding] = []
@@ -186,6 +415,9 @@ def check_module(tree: ast.Module, resolver: Resolver, path: str) -> list[Findin
                     f"({n_in} in_specs + {n_out} outputs + {n_scratch} "
                     "scratch)",
                 ))
+                # the param<->ref binding is unreliable past this point;
+                # suppress checks that depend on knowing which ref is which
+                kernel = None
 
         # literal block divisibility on the output
         if out_specs is not None and out_shape is not None \
@@ -215,4 +447,6 @@ def check_module(tree: ast.Module, resolver: Resolver, path: str) -> list[Findin
                                 f"{_dtype_name(out_dt)} — the result is "
                                 "silently cast",
                             ))
+
+        findings += _check_memory_model(call, kernel, bound, n_in, resolver, path)
     return findings

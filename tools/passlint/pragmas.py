@@ -7,12 +7,18 @@ Grammar (one per comment; the reason is mandatory):
 
 A pragma suppresses matching findings on its own physical line (trailing
 comment) or — when the line holds nothing but the comment — on the next
-non-blank, non-comment line. A pragma with no reason text is itself
-reported as PASS000 and suppresses nothing, so every suppression in the
-tree carries a written justification.
+non-blank, non-comment line. Statements that span lines are matched as a
+*group*: a pragma anywhere on a multi-line statement covers findings
+reported on any of its lines, and a pragma on (or above) a `def` covers
+findings reported at its decorators — `functools.partial(jax.jit, ...)`
+findings land on the decorator's lineno, where a def-line pragma used to
+miss them. A pragma with no reason text is itself reported as PASS000 and
+suppresses nothing, so every suppression in the tree carries a written
+justification.
 """
 from __future__ import annotations
 
+import ast
 import dataclasses
 import re
 import tokenize
@@ -96,15 +102,50 @@ def _applied_line(lines: list[str], comment_line: int) -> int:
     return comment_line
 
 
+def line_groups(tree) -> dict[int, int]:
+    """Map each line of a multi-line statement to its group anchor line.
+
+    Two kinds of groups: the *header* of a function/class definition (first
+    decorator line through the line before the body — so a pragma on the
+    `def` line reaches findings at a decorator's lineno), and the full span
+    of simple statements (a pragma trailing the last line of a wrapped call
+    reaches the finding at its first line). Lines not in any group map to
+    themselves implicitly (callers use `.get(line, line)`).
+    """
+    groups: dict[int, int] = {}
+    simple = (ast.Assign, ast.AnnAssign, ast.AugAssign, ast.Expr, ast.Return,
+              ast.Raise, ast.Assert, ast.Delete, ast.Import, ast.ImportFrom)
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            start = min([d.lineno for d in node.decorator_list] + [node.lineno])
+            end = (node.body[0].lineno - 1) if node.body else node.lineno
+            for ln in range(start, end + 1):
+                groups.setdefault(ln, start)
+        elif isinstance(node, simple):
+            end = node.end_lineno or node.lineno
+            for ln in range(node.lineno, end + 1):
+                groups.setdefault(ln, node.lineno)
+    return groups
+
+
 def apply_pragmas(
-    findings: list[Finding], pragmas: dict[int, list[Pragma]]
+    findings: list[Finding], pragmas: dict[int, list[Pragma]],
+    groups: dict[int, int] | None = None,
 ) -> tuple[list[Finding], list[tuple[Finding, Pragma]]]:
-    """Split findings into (active, suppressed-with-their-pragma)."""
+    """Split findings into (active, suppressed-with-their-pragma).
+
+    A pragma matches a finding on the same line, or — given the module's
+    `line_groups` — anywhere within the same statement/def-header group.
+    """
+    groups = groups or {}
+    by_anchor: dict[int, list[Pragma]] = {}
+    for line, plist in pragmas.items():
+        by_anchor.setdefault(groups.get(line, line), []).extend(plist)
     active: list[Finding] = []
     suppressed: list[tuple[Finding, Pragma]] = []
     for f in findings:
         hit = None
-        for p in pragmas.get(f.line, []):
+        for p in by_anchor.get(groups.get(f.line, f.line), []):
             if f.code in p.codes:
                 hit = p
                 break

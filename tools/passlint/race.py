@@ -1,0 +1,393 @@
+"""PASS010: the chromatic-independence contract for asynchronous sweeps.
+
+The paper's asynchrony guarantee — fine-grained parallel spin updates are
+exact only when concurrently-updated sites are *independent* — is what the
+chromatic/colored Gibbs sweeps implement: each phase computes fields from
+the full state but commits the proposal only on that phase's independent
+set (`jnp.where(colors[c] ... , proposal, s)`). Dropping the mask turns
+the sweep into a synchronous (racy) update whose stationary distribution
+is wrong, and nothing crashes: it just samples the wrong thing.
+
+This pass statically models a sweep as a loop over phases carrying a state
+array and assigns each value a *site-mixing* level:
+
+    CLEAN (0)    not derived from the carried state
+    DERIVED (1)  elementwise in the state — same site, same slot
+    MIXED (2)    combines values across sites (shift / gather / matmul /
+                 reduction / unknown call): a "neighbor field" of the state
+
+A store `s = expr` inside the phase loop where `expr` is MIXED in `s` is a
+same-phase read-your-neighbors-write-yourself update — a race — unless it
+is guarded: `jnp.where(cond, proposal, s)` where `cond` is CLEAN of the
+state and (transitively) selects on a phase-indexed independent-set mask —
+a subscript `m[c]` of a mask-like operand (name matching ``mask``/
+``color``) by the phase loop variable. `uniforms[c] < p` is not a mask:
+it thins randomly, it does not make the updated sites independent.
+
+Scope is deliberate: Pallas kernels and functions with "sweep" in their
+name (the kernels in `lattice_gibbs.py` / `sparse_gather.py` and the ref
+oracles in `ref.py`). Host training loops that legitimately rewrite whole
+state pytrees never enter the analysis. Local helper calls use mixing
+summaries computed callee-first over the call graph, so `_fields` →
+`_shift` → `jnp.pad` is seen as mixing two levels down.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Optional
+
+from tools.passlint.findings import Finding
+from tools.passlint.resolve import Resolver, const_int, keyword_arg, path_of
+
+CLEAN, DERIVED, MIXED = 0, 1, 2
+
+# canonical callables that combine values across sites (axes): shifts,
+# gathers, contractions, reductions, reshuffles
+MIX_CALLS = {
+    "jax.numpy.take", "jax.numpy.take_along_axis", "jax.numpy.roll",
+    "jax.numpy.pad", "jax.numpy.concatenate", "jax.numpy.stack",
+    "jax.numpy.flip", "jax.numpy.dot", "jax.numpy.matmul",
+    "jax.numpy.einsum", "jax.numpy.tensordot", "jax.numpy.sum",
+    "jax.numpy.mean", "jax.numpy.prod", "jax.numpy.max", "jax.numpy.min",
+    "jax.numpy.cumsum", "jax.numpy.cumprod", "jax.numpy.sort",
+    "jax.numpy.argsort", "jax.numpy.transpose", "jax.numpy.swapaxes",
+    "jax.numpy.moveaxis", "jax.numpy.repeat", "jax.numpy.tile",
+    "jax.numpy.convolve", "jax.numpy.correlate",
+    "jax.lax.slice", "jax.lax.slice_in_dim", "jax.lax.dynamic_slice",
+    "jax.lax.dynamic_slice_in_dim", "jax.lax.gather",
+    "jax.lax.conv_general_dilated", "jax.lax.reduce_window",
+    "jax.nn.softmax", "jax.nn.logsumexp", "jax.scipy.special.logsumexp",
+}
+# prefixes whose other members are elementwise enough to preserve level
+KNOWN_ELEMENTWISE_PREFIXES = ("jax.numpy.", "jax.nn.", "jax.lax.",
+                              "jax.scipy.", "jax.random.")
+SAFE_METHODS = {"astype", "copy", "clip", "reshape", "ravel", "squeeze"}
+MASK_NAME_RE = re.compile(r"mask|color", re.IGNORECASE)
+
+
+class MixSummary:
+    """How a local helper's return level depends on each parameter."""
+
+    def __init__(self, param_names: list[str], mixes: set[str],
+                 passthrough: set[str]):
+        self.param_names = param_names
+        self.mixes = mixes              # params whose sites get combined
+        self.passthrough = passthrough  # params returned elementwise
+
+
+class _Eval:
+    """Site-mixing abstract evaluation over one function body."""
+
+    def __init__(self, resolver: Resolver, mix_summaries: dict[str, MixSummary],
+                 loop_var: Optional[str] = None):
+        self.resolver = resolver
+        self.mix = mix_summaries
+        self.loop_var = loop_var
+        self.env: dict[str, int] = {}
+
+    # -- expression levels -------------------------------------------------
+
+    def level(self, e) -> int:
+        if e is None or isinstance(e, (ast.Constant, ast.Lambda)):
+            return CLEAN
+        if isinstance(e, ast.Name):
+            return self.env.get(e.id, CLEAN)
+        if isinstance(e, ast.Attribute):
+            return self.level(e.value)
+        if isinstance(e, ast.Subscript):
+            base = self.level(e.value)
+            if base == CLEAN:
+                return CLEAN
+            return MIXED if self._gathering_index(e.slice) else base
+        if isinstance(e, ast.Call):
+            return self._call_level(e)
+        if isinstance(e, ast.BinOp):
+            return max(self.level(e.left), self.level(e.right))
+        if isinstance(e, ast.UnaryOp):
+            return self.level(e.operand)
+        if isinstance(e, ast.Compare):
+            return max([self.level(e.left)] + [self.level(c) for c in e.comparators])
+        if isinstance(e, ast.BoolOp):
+            return max(self.level(v) for v in e.values)
+        if isinstance(e, ast.IfExp):
+            return max(self.level(e.test), self.level(e.body), self.level(e.orelse))
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            return max((self.level(x) for x in e.elts), default=CLEAN)
+        if isinstance(e, ast.Starred):
+            return self.level(e.value)
+        return CLEAN
+
+    def _gathering_index(self, idx) -> bool:
+        """Is a subscript index a cross-site gather (array index), as
+        opposed to scalar/slice selection or broadcasting?"""
+        if isinstance(idx, ast.Tuple):
+            return any(self._gathering_index(x) for x in idx.elts)
+        if idx is None or isinstance(idx, ast.Slice):
+            return False
+        if isinstance(idx, ast.Constant):
+            return False  # s[0], s[None]
+        if isinstance(idx, ast.UnaryOp) and isinstance(idx.operand, ast.Constant):
+            return False
+        if isinstance(idx, ast.Name):
+            # the phase loop variable is a scalar; other names are arrays
+            # until proven otherwise (s[nbr_idx] is a gather)
+            return idx.id != self.loop_var
+        return True
+
+    def _call_level(self, call: ast.Call) -> int:
+        r = self.resolver.resolve(call.func)
+        args = list(call.args) + [kw.value for kw in call.keywords]
+        arg_levels = [self.level(a) for a in args]
+        peak = max(arg_levels, default=CLEAN)
+        if r in MIX_CALLS:
+            return MIXED if peak >= DERIVED else CLEAN
+        if r is not None and r in self.mix:
+            return self._summary_level(call, self.mix[r])
+        if r is not None and r.startswith(KNOWN_ELEMENTWISE_PREFIXES):
+            return peak
+        if r in ("float", "int", "bool", "abs", "len", "range", "min", "max"):
+            return peak
+        if isinstance(call.func, ast.Attribute):
+            obj = self.level(call.func.value)
+            if call.func.attr in SAFE_METHODS:
+                return max(peak, obj)
+            if obj >= DERIVED or peak >= DERIVED:
+                return MIXED  # .sum(), .T-ish methods: assume cross-site
+            return CLEAN
+        # unknown callable: assume it may combine sites
+        return MIXED if peak >= DERIVED else CLEAN
+
+    def _summary_level(self, call: ast.Call, summ: MixSummary) -> int:
+        if any(isinstance(a, ast.Starred) for a in call.args):
+            peak = max((self.level(a) for a in call.args), default=CLEAN)
+            return MIXED if peak >= DERIVED else CLEAN
+        out = CLEAN
+        for i, a in enumerate(call.args):
+            pname = summ.param_names[i] if i < len(summ.param_names) else None
+            out = max(out, self._summary_param(pname, a, summ))
+        for kw in call.keywords:
+            out = max(out, self._summary_param(kw.arg, kw.value, summ))
+        return out
+
+    def _summary_param(self, pname: Optional[str], arg, summ: MixSummary) -> int:
+        lvl = self.level(arg)
+        if lvl == CLEAN:
+            return CLEAN
+        if pname is None:
+            return MIXED
+        if pname in summ.mixes:
+            return MIXED
+        if pname in summ.passthrough:
+            return lvl
+        return CLEAN  # parameter does not reach the return value
+
+    # -- linear statement execution ---------------------------------------
+
+    def exec_block(self, stmts, on_store=None):
+        for st in stmts:
+            self._stmt(st, on_store)
+
+    def _stmt(self, st, on_store):
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return
+        if isinstance(st, ast.Assign):
+            lvl = self.level(st.value)
+            for t in st.targets:
+                if isinstance(t, ast.Name):
+                    if on_store is not None:
+                        on_store(t.id, st, lvl)
+                    self.env[t.id] = lvl
+                elif isinstance(t, (ast.Tuple, ast.List)):
+                    for elt in t.elts:
+                        if isinstance(elt, ast.Name):
+                            self.env[elt.id] = lvl
+        elif isinstance(st, ast.AnnAssign) and st.value is not None:
+            if isinstance(st.target, ast.Name):
+                lvl = self.level(st.value)
+                if on_store is not None:
+                    on_store(st.target.id, st, lvl)
+                self.env[st.target.id] = lvl
+        elif isinstance(st, ast.AugAssign):
+            if isinstance(st.target, ast.Name):
+                lvl = max(self.level(st.value), self.env.get(st.target.id, CLEAN))
+                self.env[st.target.id] = lvl
+        elif isinstance(st, ast.If):
+            self.exec_block(st.body, on_store)
+            self.exec_block(st.orelse, on_store)
+        elif isinstance(st, (ast.For, ast.AsyncFor)):
+            for _ in range(2):
+                self.exec_block(st.body, on_store)
+            self.exec_block(st.orelse, on_store)
+        elif isinstance(st, ast.While):
+            for _ in range(2):
+                self.exec_block(st.body, on_store)
+            self.exec_block(st.orelse, on_store)
+        elif isinstance(st, (ast.With, ast.AsyncWith)):
+            self.exec_block(st.body, on_store)
+        elif isinstance(st, ast.Try):
+            self.exec_block(st.body, on_store)
+            for h in st.handlers:
+                self.exec_block(h.body, on_store)
+            self.exec_block(st.orelse, on_store)
+            self.exec_block(st.finalbody, on_store)
+
+
+def build_mix_summaries(ctx) -> dict[str, MixSummary]:
+    """Per-local-function mixing summaries, callee-first over the call
+    graph; cycle members get the conservative mix-everything summary."""
+    out: dict[str, MixSummary] = {}
+    for name, in_cycle in ctx.graph.topo_order():
+        fn = ctx.graph.defs[name]
+        params = [a.arg for a in fn.args.posonlyargs + fn.args.args
+                  + fn.args.kwonlyargs]
+        pos = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+        if in_cycle:
+            out[name] = MixSummary(pos, set(params), set())
+            continue
+        mixes: set[str] = set()
+        passthrough: set[str] = set()
+        returns = [n.value for n in _own_returns(fn) if n.value is not None]
+        for p in params:
+            ev = _Eval(ctx.resolver, out)
+            ev.env[p] = DERIVED
+            ev.exec_block(fn.body)
+            lvl = max((ev.level(r) for r in returns), default=CLEAN)
+            if lvl >= MIXED:
+                mixes.add(p)
+            elif lvl == DERIVED:
+                passthrough.add(p)
+        out[name] = MixSummary(pos, mixes, passthrough)
+    return out
+
+
+def _own_returns(fn: ast.FunctionDef):
+    """Return statements of fn itself (not of nested defs)."""
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Lambda)):
+            continue
+        if isinstance(node, ast.Return):
+            yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _sweep_scope(tree: ast.Module, resolver: Resolver, ctx) -> list[ast.FunctionDef]:
+    """Functions PASS010 analyzes: pallas kernels + '*sweep*' names."""
+    kernels: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if resolver.resolve(node.func) != "jax.experimental.pallas.pallas_call":
+            continue
+        k = node.args[0] if node.args else keyword_arg(node, "kernel")
+        while isinstance(k, ast.Call):  # functools.partial(kernel, ...)
+            k = k.args[0] if k.args else None
+        if isinstance(k, ast.Name):
+            kernels.add(k.id)
+    out, seen = [], set()
+    for name, fn in ctx.graph.defs.items():
+        if (name in kernels or "sweep" in name.lower()) and id(fn) not in seen:
+            seen.add(id(fn))
+            out.append(fn)
+    return out
+
+
+def _collect_defs_env(fn: ast.FunctionDef) -> dict[str, list[ast.expr]]:
+    """name -> every expression ever assigned to it in fn (guard tracing)."""
+    env: dict[str, list[ast.expr]] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    env.setdefault(t.id, []).append(node.value)
+    return env
+
+
+def _mentions_phase_mask(expr, loop_var: str, defs_env, depth: int = 0,
+                         seen: Optional[set] = None) -> bool:
+    """Does the guard condition (transitively through local assignments)
+    select on `masklike[loop_var]`?"""
+    if depth > 6 or expr is None:
+        return False
+    seen = seen if seen is not None else set()
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Subscript):
+            base = path_of(node.value)
+            base_name = base.split(".")[0].split("[")[0] if base else None
+            idx_names = {n.id for n in ast.walk(node.slice)
+                         if isinstance(n, ast.Name)}
+            if base_name and MASK_NAME_RE.search(base_name) \
+                    and loop_var in idx_names:
+                return True
+        if isinstance(node, ast.Name) and node.id not in seen:
+            seen.add(node.id)
+            for d in defs_env.get(node.id, []):
+                if _mentions_phase_mask(d, loop_var, defs_env, depth + 1, seen):
+                    return True
+    return False
+
+
+def _guarded_store(value, var: str, loop_var: str, eval_: _Eval,
+                   defs_env) -> bool:
+    """Is `var = value` a properly masked phase update? Requires
+    jnp.where(cond, ..., var) keeping non-selected sites, with a CLEAN,
+    phase-mask-selecting condition."""
+    if not isinstance(value, ast.Call):
+        return False
+    r = eval_.resolver.resolve(value.func)
+    if r != "jax.numpy.where" or len(value.args) != 3:
+        return False
+    cond, a, b = value.args
+    if path_of(a) != var and path_of(b) != var:
+        return False  # neither branch keeps the previous state
+    if eval_.level(cond) >= MIXED:
+        return False  # "mask" is itself a neighbor-field function: circular
+    return _mentions_phase_mask(cond, loop_var, defs_env)
+
+
+def check_module(tree: ast.Module, resolver: Resolver, path: str,
+                 ctx) -> list[Finding]:
+    """PASS010 over every sweep-shaped function in a module."""
+    findings: list[Finding] = []
+    mix = build_mix_summaries(ctx)
+    for fn in _sweep_scope(tree, resolver, ctx):
+        defs_env = _collect_defs_env(fn)
+        for loop in ast.walk(fn):
+            if not isinstance(loop, (ast.For,)) or \
+                    not isinstance(loop.target, ast.Name):
+                continue
+            loop_var = loop.target.id
+            candidates = sorted({
+                t.id
+                for node in ast.walk(loop) if isinstance(node, ast.Assign)
+                for t in node.targets if isinstance(t, ast.Name)
+            })
+            reported: set[tuple[int, str]] = set()
+            for var in candidates:
+                ev = _Eval(resolver, mix, loop_var=loop_var)
+                ev.env[var] = DERIVED
+
+                def on_store(name, st, lvl, var=var, ev=ev):
+                    if name != var or lvl < MIXED:
+                        return
+                    if _guarded_store(st.value, var, loop_var, ev, defs_env):
+                        return
+                    key = (st.lineno, var)
+                    if key in reported:
+                        return
+                    reported.add(key)
+                    findings.append(Finding(
+                        path, st.lineno, "PASS010",
+                        f"phase loop over '{loop_var}': '{var}' is "
+                        f"overwritten from its own cross-site fields with "
+                        f"no independent-set (color) mask guarding the "
+                        "store — concurrent same-phase site updates race "
+                        "(chromatic-independence contract)",
+                    ))
+
+                for _ in range(2):
+                    ev.exec_block(loop.body, on_store)
+    return findings

@@ -1,0 +1,134 @@
+"""Per-function dataflow summaries for the interprocedural passes.
+
+Built once per module by `engine.analyze_source` and handed to the checks
+as a `ModuleContext`:
+
+  * **key summaries** — how a local function treats each parameter when a
+    PRNG key is passed there: how many times it is consumed (0 for a
+    fold_in-only deriver, 2+ for an internal reuse), and whether the
+    function returns a key (single or a `split` stack). Computed by running
+    the PASS001 abstract interpreter in *probe* mode (all positional
+    parameters seeded as distinct keys, reporting off) over the call graph
+    callee-first, so nested helpers are already summarized when their
+    callers are probed. Only functions that transitively touch
+    `jax.random` get a usable summary — everything else keeps the generic
+    consume-once rule, so attention q/k/v tensors never masquerade as keys.
+
+  * **taint (return) summaries** — which parameters' taint reaches a
+    function's return value, with the same sanitizer set as the PASS003/4
+    pass. `state_shape(problem)` returning only `.shape` metadata comes
+    back clean; an identity-ish helper taints exactly when its argument
+    does.
+
+Functions in call-graph cycles (recursion) keep generic summaries — the
+probe would need a fixpoint there, and the tree has no recursive key or
+taint plumbing to justify one.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from tools.passlint.callgraph import CallGraph
+from tools.passlint.resolve import Resolver
+
+
+@dataclasses.dataclass
+class KeySummary:
+    """Key behavior of one local function (see module docstring)."""
+
+    param_names: list[str]                      # positional (posonly + args)
+    consumes: dict[str, int]                    # param -> consumption count
+    reuse_lines: dict[str, tuple[int, int]]     # param -> (first, second) line
+    returns_key: str | None                     # 'key' | 'split' | None
+    touches_random: bool                        # directly or via local callees
+    keyish: set[str]                            # params the name heuristic covers
+
+
+@dataclasses.dataclass
+class TaintSummary:
+    """Which parameters' taint reaches the function's return value."""
+
+    param_names: list[str]
+    returns_taint_from: set[str]
+
+
+@dataclasses.dataclass
+class ModuleContext:
+    """Everything the interprocedural checks share for one module."""
+
+    tree: ast.Module
+    resolver: Resolver
+    graph: CallGraph
+    key: dict[str, KeySummary]
+    taint: dict[str, TaintSummary]
+
+
+def _positional_names(fn: ast.FunctionDef) -> list[str]:
+    return [a.arg for a in fn.args.posonlyargs + fn.args.args]
+
+
+def _all_param_names(fn: ast.FunctionDef) -> list[str]:
+    return _positional_names(fn) + [a.arg for a in fn.args.kwonlyargs]
+
+
+def build(tree: ast.Module, resolver: Resolver, path: str) -> ModuleContext:
+    """Build the call graph and both summary tables for one module."""
+    # imported late: keyflow/taint take a ModuleContext parameter, so a
+    # top-level import would be circular
+    from tools.passlint import keyflow, taint
+
+    graph = CallGraph.build(tree, resolver)
+    ctx = ModuleContext(tree, resolver, graph, key={}, taint={})
+    order = graph.topo_order()
+
+    # -- transitive "touches jax.random" (syntactic, then via callees) -----
+    touches: dict[str, bool] = {
+        name: keyflow._touches_jax_random(fn, resolver)
+        for name, fn in graph.defs.items()
+    }
+    changed = True
+    while changed:
+        changed = False
+        for name, callees in graph.edges.items():
+            if not touches[name] and any(touches.get(c, False) for c in callees):
+                touches[name] = True
+                changed = True
+
+    # -- key summaries, callee-first ---------------------------------------
+    for name, in_cycle in order:
+        fn = graph.defs[name]
+        params = _all_param_names(fn)
+        keyish = {p for p in params
+                  if keyflow.is_keyish(p) or keyflow.is_keyish_plural(p)}
+        if in_cycle or not touches[name]:
+            ctx.key[name] = KeySummary(_positional_names(fn), {}, {}, None,
+                                       touches[name], keyish)
+            continue
+        probe = keyflow.KeyFlow(fn, resolver, path, ctx=ctx, probe=True)
+        probe.run()
+        consumes: dict[str, int] = {}
+        reuse: dict[str, tuple[int, int]] = {}
+        for pname, kid in probe.param_ids.items():
+            cnt, first = probe.info.get(kid, (0, None))
+            consumes[pname] = cnt
+            second = probe.reuse_line.get(kid)
+            if cnt >= 2 and first is not None and second is not None:
+                reuse[pname] = (first, second)
+        ctx.key[name] = KeySummary(_positional_names(fn), consumes, reuse,
+                                   probe.return_kind, True, keyish)
+
+    # -- taint return summaries, callee-first ------------------------------
+    for name, in_cycle in order:
+        fn = graph.defs[name]
+        if in_cycle:
+            continue  # no summary: callers fall back to the generic rule
+        from_params: set[str] = set()
+        for pname in _all_param_names(fn):
+            tp = taint.TaintPass(fn, {pname}, resolver, path, ctx=ctx, quiet=True)
+            tp.run()
+            if tp.return_tainted:
+                from_params.add(pname)
+        ctx.taint[name] = TaintSummary(_positional_names(fn), from_params)
+
+    return ctx

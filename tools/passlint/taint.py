@@ -22,9 +22,17 @@ PASS003 = host op (`np.*`, `float()`, `int()`, `bool()`, `.item()`,
 `.tolist()`) applied to a tainted value. PASS004 = python `if` / `while` /
 `assert` / ternary / `for`-iteration on a tainted value.
 
-Known limits (by design, to stay at near-zero false positives): calls are
-not followed interprocedurally, closures are not tainted, and lambda
-callbacks are skipped.
+Interprocedural (v2): with a `ModuleContext` (`summaries.py`) the pass
+follows calls between local functions. A worklist propagates taint from
+traced functions into the parameters of the local helpers they pass traced
+values to (so a tracer escaping `sampler_api._run_core` into a helper is
+tracked end to end), and *return summaries* (`returns_taint_from`) make
+local calls precise: a helper that returns only static metadata sanitizes,
+a helper that pipes a parameter through taints exactly when that argument
+is tainted.
+
+Known limits (by design, to stay at near-zero false positives): closures
+are not tainted and lambda callbacks are skipped.
 """
 from __future__ import annotations
 
@@ -166,15 +174,24 @@ class TaintPass:
     """Forward taint of traced parameters through one function body."""
 
     def __init__(self, fn: ast.FunctionDef, tainted: set[str],
-                 resolver: Resolver, path: str):
+                 resolver: Resolver, path: str, ctx=None, quiet: bool = False):
         self.fn = fn
         self.tainted = set(tainted)
         self.resolver = resolver
         self.path = path
+        self.ctx = ctx            # summaries.ModuleContext | None
+        self.quiet = quiet        # propagation/summary pass: no findings
         self.findings: list[Finding] = []
         self._seen: set[tuple[int, str, str]] = set()
+        # (local callee name, parameter name) pairs that received a tainted
+        # argument — consumed by the module-level propagation worklist
+        self.calls_out: set[tuple[str, str]] = set()
+        # does any `return` expression carry taint? (for return summaries)
+        self.return_tainted = False
 
     def _report(self, line: int, code: str, msg: str):
+        if self.quiet:
+            return
         sig = (line, code, msg)
         if sig not in self._seen:
             self._seen.add(sig)
@@ -198,6 +215,10 @@ class TaintPass:
             r = self.resolver.resolve(e.func)
             if r in SANITIZER_CALLS:
                 return False
+            ts = self.ctx.taint.get(r) if self.ctx is not None and r is not None \
+                else None
+            if ts is not None:
+                return self._summary_return_tainted(e, ts)
             args = list(e.args) + [kw.value for kw in e.keywords]
             if isinstance(e.func, ast.Attribute) and self.is_tainted(e.func.value):
                 return True
@@ -235,6 +256,24 @@ class TaintPass:
             return False
         return False
 
+    def _summary_return_tainted(self, call: ast.Call, ts) -> bool:
+        """Taint of a local call, per the callee's return summary: tainted
+        exactly when a `returns_taint_from` parameter gets a tainted arg."""
+        if any(isinstance(a, ast.Starred) for a in call.args):
+            return any(self.is_tainted(a) for a in
+                       list(call.args) + [kw.value for kw in call.keywords])
+        for i, a in enumerate(call.args):
+            pname = ts.param_names[i] if i < len(ts.param_names) else None
+            if pname in ts.returns_taint_from and self.is_tainted(a):
+                return True
+        for kw in call.keywords:
+            if kw.arg is None:  # **kwargs defeats the mapping — be generic
+                if self.is_tainted(kw.value):
+                    return True
+            elif kw.arg in ts.returns_taint_from and self.is_tainted(kw.value):
+                return True
+        return False
+
     # -- PASS003 sinks -----------------------------------------------------
 
     def _scan_sinks(self, e):
@@ -247,6 +286,7 @@ class TaintPass:
             if not isinstance(node, ast.Call):
                 continue
             r = self.resolver.resolve(node.func)
+            self._record_call_out(node, r)
             args = list(node.args) + [kw.value for kw in node.keywords]
             if r is not None and (r.startswith("numpy.") or r == "numpy"):
                 if any(self.is_tainted(a) for a in args):
@@ -264,6 +304,23 @@ class TaintPass:
                     self._report(node.lineno, "PASS003",
                                  f"'.{node.func.attr}()' on a traced value "
                                  "inside a jitted/traced function")
+
+    def _record_call_out(self, node: ast.Call, r: str | None):
+        """Note tainted arguments flowing into local callees (for the
+        module-level propagation worklist)."""
+        if self.ctx is None or r is None or r not in self.ctx.graph.defs:
+            return
+        callee = self.ctx.graph.defs[r]
+        if any(isinstance(a, ast.Starred) for a in node.args):
+            return
+        pos = [a.arg for a in callee.args.posonlyargs + callee.args.args]
+        for i, a in enumerate(node.args):
+            if i < len(pos) and self.is_tainted(a):
+                self.calls_out.add((r, pos[i]))
+        kw_ok = set(pos) | {a.arg for a in callee.args.kwonlyargs}
+        for kw in node.keywords:
+            if kw.arg in kw_ok and self.is_tainted(kw.value):
+                self.calls_out.add((r, kw.arg))
 
     # -- statements --------------------------------------------------------
 
@@ -304,6 +361,8 @@ class TaintPass:
             self._scan_sinks(st.value)
         elif isinstance(st, ast.Return):
             self._scan_sinks(st.value)
+            if st.value is not None and self.is_tainted(st.value):
+                self.return_tainted = True
         elif isinstance(st, ast.If):
             self._scan_sinks(st.test)
             if self.is_tainted(st.test):
@@ -361,9 +420,35 @@ class TaintPass:
         return self.findings
 
 
-def check_module(tree: ast.Module, resolver: Resolver, path: str) -> list[Finding]:
-    """PASS003/PASS004 over every traced function in a module."""
+def check_module(tree: ast.Module, resolver: Resolver, path: str,
+                 ctx=None) -> list[Finding]:
+    """PASS003/PASS004 over every traced function in a module.
+
+    With a ModuleContext, a worklist first propagates taint from traced
+    functions into the local helpers they pass traced values to (monotone:
+    parameter taint sets only grow, so it terminates), then every reached
+    function is analyzed once with its final taint set.
+    """
+    taint_sets: dict[ast.FunctionDef, set[str]] = {
+        fn: set(names) for fn, names in find_traced_functions(tree, resolver).items()
+    }
+    if ctx is not None:
+        defs = ctx.graph.defs
+        work = list(taint_sets)
+        while work:
+            fn = work.pop()
+            tp = TaintPass(fn, taint_sets[fn], resolver, path, ctx=ctx, quiet=True)
+            tp.run()
+            for callee_name, pname in tp.calls_out:
+                callee = defs.get(callee_name)
+                if callee is None:
+                    continue
+                cur = taint_sets.setdefault(callee, set())
+                if pname not in cur:
+                    cur.add(pname)
+                    if callee not in work:
+                        work.append(callee)
     findings: list[Finding] = []
-    for fn, tainted in find_traced_functions(tree, resolver).items():
-        findings += TaintPass(fn, tainted, resolver, path).run()
+    for fn, tainted in taint_sets.items():
+        findings += TaintPass(fn, tainted, resolver, path, ctx=ctx).run()
     return findings
