@@ -1,0 +1,59 @@
+"""Subprocess worker for one isolated benchmark entry.
+
+`benchmarks.runner` runs full-suite entries through this module when
+subprocess isolation is on: a hang is killed by the parent's wall-clock
+timeout, a crash (segfault, OOM kill, unhandled exception) takes down only
+this process, and the parent records `status: timeout` / `status: error`
+and keeps going — a nightly run always commits whatever it measured.
+
+Wire format (file paths on argv, JSON payloads):
+
+    python -m benchmarks.entry_worker <spec.json> <record.json>
+
+where spec.json is `{"id": ..., "entry": <suites.entry_to_dict(...)>}` and
+the worker writes the `runner.run_entry` record dict to record.json. Any
+nonzero exit (or a missing/undecodable record file) means the entry failed.
+
+Test seam: the BENCH_FAULT_INJECT env var maps entry ids to a failure mode
+("hang" | "crash"). It is honored BEFORE the heavy jax/benchmark imports so
+harness tests can exercise timeout/retry handling in milliseconds.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+
+def _maybe_inject(entry_id: str) -> None:
+    """Honor the BENCH_FAULT_INJECT test seam (no-op outside tests)."""
+    raw = os.environ.get("BENCH_FAULT_INJECT")
+    if not raw:
+        return
+    mode = json.loads(raw).get(entry_id)
+    if mode == "hang":
+        while True:  # parent's timeout kills us
+            time.sleep(60)
+    if mode == "crash":
+        raise RuntimeError(f"injected crash for {entry_id} (BENCH_FAULT_INJECT)")
+
+
+def main(argv: list[str]) -> int:
+    """Run one entry spec file and write its record file."""
+    spec_path, record_path = argv
+    with open(spec_path) as f:
+        spec = json.load(f)
+    _maybe_inject(spec["id"])
+
+    from benchmarks import runner, suites  # heavy imports after the seam
+
+    entry = suites.entry_from_dict(spec["entry"])
+    record = runner.run_entry(entry)
+    with open(record_path, "w") as f:
+        json.dump(record, f, allow_nan=False)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

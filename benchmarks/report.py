@@ -10,10 +10,17 @@ Schema (version 2):
       "schema_version": 2,
       "tag": "...", "suite": "smoke", "created_unix": 1e9,
       "host": {"platform": ..., "python": ..., "jax": ..., "backend": ...},
-      "records": [ {<runner.run_entry record>}, ... ]
+      "statuses": {"ok": 12, "timeout": 1, ...},
+      "records": [ {<runner.run_entry record>}, ... ],
+      "robustness": {<benchmarks.robustness section>}   # optional
     }
 
-The baseline holds the same header plus per-id throughput numbers only.
+Every record carries `status`: "ok" | "timeout" | "error" | "skipped"
+(see `benchmarks.runner`); non-ok records keep identity fields plus an
+`error` message and are EXCLUDED from baselines, gating, and the nightly
+rollup (`ok_records`) — a partial run stays schema-valid and commits
+whatever it measured. The baseline holds the same header plus per-id
+throughput numbers only.
 Regression policy: CI fails when the *geometric mean* over per-record
 `chain_steps_per_s` ratios (new/baseline) drops below `1 - threshold`
 (default 30%). Per-record ratios are reported for diagnosis but do not gate
@@ -69,8 +76,51 @@ def host_info() -> dict:
     }
 
 
+def ok_records(report_or_records) -> list[dict]:
+    """The measured records only (`status` "ok", or absent — pre-status
+    reports never recorded failures, so every record in one is a
+    measurement). Baselines, gating, and the nightly rollup all consume
+    this view; timeout/error/skipped records stay in the full report."""
+    records = (
+        report_or_records.get("records", [])
+        if isinstance(report_or_records, dict) else report_or_records
+    )
+    return [r for r in records if r.get("status", "ok") == "ok"]
+
+
+def status_counts(records: list[dict]) -> dict:
+    """{"ok": n, "timeout": n, ...} — only statuses that occur."""
+    counts: dict = {}
+    for r in records:
+        status = r.get("status", "ok")
+        counts[status] = counts.get(status, 0) + 1
+    return counts
+
+
+def _atomic_write_json(path: str, obj) -> None:
+    """Write strict JSON via a same-directory tmp file + `os.replace`.
+
+    A reader (or a later append) can never observe a truncated file: the
+    replace is atomic on POSIX and Windows, and an interrupted write leaves
+    the previous contents untouched (the orphaned tmp file is re-created,
+    then replaced, by the next successful write).
+    """
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "w") as f:
+            # allow_nan=False: reports must be strict RFC-8259 JSON (no
+            # Infinity/NaN tokens) so jq/JS consumers of CI artifacts parse.
+            json.dump(obj, f, indent=1, sort_keys=True, allow_nan=False)
+            f.write("\n")
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
 def make_report(
-    tag: str, suite: str, records: list[dict], scaling: "dict | None" = None
+    tag: str, suite: str, records: list[dict], scaling: "dict | None" = None,
+    robustness: "dict | None" = None,
 ) -> dict:
     """Assemble a schema-v2 report dict (see the module docstring).
 
@@ -78,6 +128,8 @@ def make_report(
     `benchmarks.scaling.scaling_section` — carried verbatim under the
     report's "scaling" key (absent when the run did not sweep it); the
     section versions itself via its own "schema_version" field.
+    `robustness` is the analogous fault-severity section produced by
+    `benchmarks.robustness.robustness_section` (see docs/robustness.md).
     """
     report = {
         "schema_version": SCHEMA_VERSION,
@@ -86,10 +138,13 @@ def make_report(
         "created_unix": time.time(),
         "created": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
         "host": host_info(),
+        "statuses": status_counts(records),
         "records": records,
     }
     if scaling is not None:
         report["scaling"] = scaling
+    if robustness is not None:
+        report["robustness"] = robustness
     return report
 
 
@@ -107,13 +162,9 @@ def report_path(tag: str, out_dir: str = REPO_ROOT) -> str:
 
 
 def write_report(report: dict, out_dir: str = REPO_ROOT) -> str:
-    """Write a report as strict JSON; returns the path."""
+    """Write a report as strict JSON (atomically); returns the path."""
     path = report_path(report["tag"], out_dir)
-    with open(path, "w") as f:
-        # allow_nan=False: reports must be strict RFC-8259 JSON (no
-        # Infinity/NaN tokens) so jq/JS consumers of the CI artifact parse.
-        json.dump(report, f, indent=1, sort_keys=True, allow_nan=False)
-        f.write("\n")
+    _atomic_write_json(path, report)
     return path
 
 
@@ -131,7 +182,11 @@ def load(path: str) -> dict:
 
 
 def to_baseline(report: dict) -> dict:
-    """Slim a full report down to the committed throughput baseline."""
+    """Slim a full report down to the committed throughput baseline.
+
+    Only measured records contribute — a timeout/error entry has no
+    throughput, and freezing its absence into the baseline would just list
+    it as "missing" forever."""
     return {
         "schema_version": SCHEMA_VERSION,
         "tag": report["tag"],
@@ -144,7 +199,7 @@ def to_baseline(report: dict) -> dict:
                 "steps_per_s": r["steps_per_s"],
                 "wall_s": r["wall_s"],
             }
-            for r in report["records"]
+            for r in ok_records(report)
         },
     }
 
@@ -168,7 +223,7 @@ def nightly_record(report: dict) -> dict:
     import numpy as np
 
     per_kernel: dict = {}
-    for rec in report["records"]:
+    for rec in ok_records(report):
         per_kernel.setdefault(rec["kernel"], []).append(rec)
     kernels = {}
     for kernel, recs in sorted(per_kernel.items()):
@@ -188,6 +243,7 @@ def nightly_record(report: dict) -> dict:
             for k in ("platform", "python", "jax", "ci", "commit")
         },
         "n_records": len(report["records"]),
+        "statuses": status_counts(report["records"]),
         "kernels": kernels,
     }
     if "scaling" in report:
@@ -254,9 +310,9 @@ def append_nightly(report: dict, path: str = NIGHTLY_PATH) -> tuple[dict, bool]:
     ):
         return trajectory, False
     trajectory["records"].append(record)
-    with open(path, "w") as f:
-        json.dump(trajectory, f, indent=1, sort_keys=True, allow_nan=False)
-        f.write("\n")
+    # Atomic replace: a scheduled run killed mid-write must never leave a
+    # truncated trajectory behind — the previous complete file survives.
+    _atomic_write_json(path, trajectory)
     return trajectory, True
 
 
@@ -275,14 +331,17 @@ def compare_to_baseline(
     (summary["advisory"] = True) and ok stays True.
     """
     base = baseline["throughput"]
+    measured = ok_records(report)
     ratios, missing, new_ids = {}, [], []
-    for rec in report["records"]:
+    for rec in measured:
         rid = rec["id"]
         if rid in base:
             ratios[rid] = rec["chain_steps_per_s"] / max(base[rid]["chain_steps_per_s"], 1e-12)
         else:
             new_ids.append(rid)
-    report_ids = {r["id"] for r in report["records"]}
+    # A baselined entry that timed out / errored this run shows up as
+    # missing — visible in the summary rather than silently ungated.
+    report_ids = {r["id"] for r in measured}
     missing = sorted(set(base) - report_ids)
 
     if ratios:

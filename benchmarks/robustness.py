@@ -1,0 +1,245 @@
+"""Fault-severity sweep: TTS / hit-rate degradation vs device non-ideality.
+
+The PASS paper reports an ideal device; this sweep produces the figure it
+never shows — how time-to-solution and hit rate degrade as the hardware
+model worsens along two axes:
+
+    quantize_bits   — couplings rounded onto a signed b-bit grid (what
+                      pc-COP exposes as configurable precision),
+    stuck_fraction  — a random fraction of p-bits stuck at a fixed value.
+
+Each axis level re-runs the SAME entry configuration (same PRNG key, same
+schedule) with only the `FaultModel` changed; metrics are computed post-hoc
+against the TRUE problem (recorded energies under quantization are the
+device's own — see `repro.core.faults`), so the degradation measured is
+real solution-quality loss, not bookkeeping drift.
+
+A sanity block pins both axes' ideal limits statistically: at
+`quantize_bits=SANITY_BITS` (grid finer than float32's mantissa makes
+meaningful) and at stuck fraction 0 (the stuck code path with an all-False
+mask), a long small-n CTMC run's time-weighted distribution must match the
+exact Boltzmann law by total variation and chi-square — the same gate the
+tier-1 exactness tests use.
+
+Section schema (embedded under "robustness" in BENCH_<tag>.json):
+
+    {
+      "schema_version": 1, "grid": "smoke" | "full",
+      "quantize_bits_levels": [3, 4, 6, 8],
+      "stuck_fraction_levels": [0.0, 0.05, 0.1, 0.2],
+      "instances": [
+        {"instance": ..., "kernel": ..., "n_spins": ...,
+         "ideal": {<metrics>},
+         "axes": {"quantize_bits":   [{"level": 3, <metrics>}, ...],
+                  "stuck_fraction":  [{"level": 0.0, <metrics>}, ...]}},
+        ...
+      ],
+      "sanity": [
+        {"instance": ..., "limit": "quantize_bits=24", "n_events": ...,
+         "tv": ..., "tv_threshold": ..., "chi2": ..., "chi2_threshold": ...,
+         "ok": true}, ...
+      ],
+      "sanity_ok": true
+    }
+
+where <metrics> = {"hit_rate", "tts_model_time", "best_energy",
+"final_gap"} (tts is null when no chain hit the target).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ctmc, ising, problems, sampler_api
+from repro.core.faults import FaultModel, make_stuck
+from benchmarks.suites import stable_seed
+
+ROBUSTNESS_SCHEMA_VERSION = 1
+
+# Severity axes — shared by every grid so levels stay comparable across
+# smoke and nightly reports (the acceptance floor is >= 3 levels each).
+QUANTIZE_BITS_LEVELS = (3, 4, 6, 8)
+STUCK_FRACTION_LEVELS = (0.0, 0.05, 0.1, 0.2)
+
+# b -> infinity stand-in for the sanity check: at 24 bits the quantization
+# grid is finer than float32 coupling entropy, so the quantized problem is
+# the problem (any residual rounding is far below the statistical gates).
+SANITY_BITS = 24
+
+# Sanity-gate thresholds (the exactness-test conventions: TV on the full
+# 2^n distribution; chi-square at a generous multiple of df = 2^n - 1, as
+# dwell-time weighting inflates the variance over multinomial).
+SANITY_TV_MAX = 0.05
+SANITY_CHI2_MULT = 10.0
+
+# Sweep instances per grid: one dense SK and one sparse 3-regular max-cut
+# (the acceptance pair), sized so the smoke grid finishes in CPU minutes.
+SWEEP_SPECS = {
+    "smoke": [
+        dict(problem="sk", size=32, seed=0, kernel="ctmc",
+             n_steps=3000, n_chains=8, sample_every=20, rel_gap=0.05),
+        dict(problem="maxcut3r", size=64, seed=0, kernel="colored_gibbs",
+             n_steps=600, n_chains=8, sample_every=10, rel_gap=0.05),
+    ],
+    "full": [
+        dict(problem="sk", size=64, seed=0, kernel="ctmc",
+             n_steps=12000, n_chains=16, sample_every=50, rel_gap=0.05),
+        dict(problem="maxcut3r", size=128, seed=0, kernel="colored_gibbs",
+             n_steps=2000, n_chains=16, sample_every=20, rel_gap=0.05),
+    ],
+}
+
+# Sanity instances: small enough to enumerate 2^n exactly, run as a long
+# constant-beta CTMC (the statistically exact kernel) per limit.
+SANITY_SPECS = {
+    "smoke": [
+        dict(problem="sk", size=5, seed=0, n_events=60_000),
+        dict(problem="maxcut3r", size=8, seed=0, n_events=60_000),
+    ],
+    "full": [
+        dict(problem="sk", size=8, seed=0, n_events=120_000),
+        dict(problem="maxcut3r", size=10, seed=0, n_events=120_000),
+    ],
+}
+
+
+def _true_metrics(zoo: problems.ZooProblem, res, rel_gap: float) -> dict:
+    """Post-hoc hit-rate/TTS/best-energy of recorded samples under the TRUE
+    problem (faulted runs record the device's quantized energies)."""
+    problem = zoo.problem
+    target = zoo.target_energy(rel_gap)
+    samples = np.asarray(res.samples)
+    times = np.asarray(res.times)
+    if times.ndim == 1:  # single chain: add the chain axis
+        samples, times = samples[None], times[None]
+    n_chains, n_samples = times.shape
+    flat = jnp.asarray(samples.reshape((n_chains * n_samples,) + samples.shape[2:]))
+    e = np.asarray(jax.vmap(problem.energy)(flat)).reshape(n_chains, n_samples)
+    hits = e <= target
+    hit_any = hits.any(axis=1)
+    first = np.argmax(hits, axis=1)  # 0 where no hit; masked below
+    t_hit = times[np.arange(n_chains), first]
+    tts = float(np.median(t_hit[hit_any])) if hit_any.any() else None
+    return {
+        "hit_rate": float(hit_any.mean()),
+        "tts_model_time": tts,
+        "best_energy": float(e.min()),
+        "final_gap": float(e.min() - zoo.ref_energy),
+    }
+
+
+def _sweep_instance(spec: dict, log=print) -> dict:
+    """Run one instance's ideal run plus both severity axes."""
+    zoo = problems.get_problem(spec["problem"], spec["size"], spec["seed"])
+    kernel = sampler_api.get_kernel(spec["kernel"])
+    key = jax.random.key(
+        stable_seed(f"robustness/{zoo.instance}/{spec['kernel']}")
+    )
+
+    def measure(faults):
+        """One run under `faults`, measured against the true problem."""
+        res = sampler_api.run(
+            zoo.problem, kernel, key,
+            n_steps=spec["n_steps"], n_chains=spec["n_chains"],
+            sample_every=spec["sample_every"],
+            schedule=sampler_api.geometric(0.5, 2.5),
+            faults=faults,
+        )
+        return _true_metrics(zoo, res, spec["rel_gap"])
+
+    ideal = measure(None)
+    log(f"  {zoo.instance}/{spec['kernel']} ideal: "
+        f"hit_rate={ideal['hit_rate']:.2f} tts={ideal['tts_model_time']}")
+    axes: dict = {"quantize_bits": [], "stuck_fraction": []}
+    for bits in QUANTIZE_BITS_LEVELS:
+        m = measure(FaultModel(quantize_bits=bits))
+        m["level"] = bits
+        axes["quantize_bits"].append(m)
+        log(f"    quantize_bits={bits}: hit_rate={m['hit_rate']:.2f}")
+    for fraction in STUCK_FRACTION_LEVELS:
+        mask, values = make_stuck(
+            jax.random.key(stable_seed(f"{zoo.instance}/stuck@{fraction}")),
+            zoo.problem, fraction,
+        )
+        m = measure(FaultModel(stuck_mask=mask, stuck_values=values))
+        m["level"] = fraction
+        axes["stuck_fraction"].append(m)
+        log(f"    stuck_fraction={fraction}: hit_rate={m['hit_rate']:.2f}")
+    return {
+        "instance": zoo.instance,
+        "kernel": spec["kernel"],
+        "n_spins": zoo.n,
+        "ideal": ideal,
+        "axes": axes,
+    }
+
+
+def _sanity_limit(zoo: problems.ZooProblem, faults, limit: str,
+                  n_events: int) -> dict:
+    """One ideal-limit fidelity check: long CTMC run under `faults`, TV and
+    chi-square of its time-weighted distribution vs the exact Boltzmann."""
+    problem = zoo.problem
+    dense = problem if isinstance(problem, ising.DenseIsing) else problem.to_dense()
+    _, p_exact = ising.enumerate_boltzmann(dense)
+    p = np.asarray(p_exact, np.float64)
+    res = sampler_api.run(
+        problem, "ctmc",
+        jax.random.key(stable_seed(f"robustness-sanity/{zoo.instance}/{limit}")),
+        n_steps=n_events, sample_every=1, faults=faults,
+    )
+    w = np.asarray(
+        ctmc.time_weighted_distribution(ctmc.CTMCRun.from_result(res), zoo.n),
+        np.float64,
+    )
+    tv = float(0.5 * np.abs(w - p).sum())
+    chi2 = float(n_events * ((w - p) ** 2 / p).sum())
+    chi2_max = SANITY_CHI2_MULT * (2.0 ** zoo.n - 1)
+    return {
+        "instance": zoo.instance,
+        "limit": limit,
+        "n_events": n_events,
+        "tv": tv,
+        "tv_threshold": SANITY_TV_MAX,
+        "chi2": chi2,
+        "chi2_threshold": chi2_max,
+        "ok": bool(tv < SANITY_TV_MAX and chi2 < chi2_max),
+    }
+
+
+def _sanity_checks(specs: list[dict], log=print) -> list[dict]:
+    """Both ideal limits (b -> inf, stuck fraction 0) on every sanity spec."""
+    out = []
+    for spec in specs:
+        zoo = problems.get_problem(spec["problem"], spec["size"], spec["seed"])
+        mask, values = make_stuck(
+            jax.random.key(stable_seed(f"{zoo.instance}/stuck@0")), zoo.problem, 0.0
+        )
+        for limit, faults in (
+            (f"quantize_bits={SANITY_BITS}", FaultModel(quantize_bits=SANITY_BITS)),
+            ("stuck_fraction=0.0",
+             FaultModel(stuck_mask=mask, stuck_values=values)),
+        ):
+            rec = _sanity_limit(zoo, faults, limit, spec["n_events"])
+            out.append(rec)
+            log(f"  sanity {zoo.instance} {limit}: tv={rec['tv']:.4f} "
+                f"chi2={rec['chi2']:.0f} -> {'ok' if rec['ok'] else 'FAIL'}")
+    return out
+
+
+def robustness_section(grid: str = "smoke", log=print) -> dict:
+    """Run the sweep + sanity checks; return the schema'd report section."""
+    if grid not in SWEEP_SPECS:
+        raise KeyError(f"unknown robustness grid {grid!r}; have {sorted(SWEEP_SPECS)}")
+    log(f"robustness sweep grid={grid}")
+    instances = [_sweep_instance(spec, log) for spec in SWEEP_SPECS[grid]]
+    sanity = _sanity_checks(SANITY_SPECS[grid], log)
+    return {
+        "schema_version": ROBUSTNESS_SCHEMA_VERSION,
+        "grid": grid,
+        "quantize_bits_levels": list(QUANTIZE_BITS_LEVELS),
+        "stuck_fraction_levels": list(STUCK_FRACTION_LEVELS),
+        "instances": instances,
+        "sanity": sanity,
+        "sanity_ok": all(rec["ok"] for rec in sanity),
+    }

@@ -30,6 +30,18 @@
         --append-nightly, a trimmed exponent/p-value rollup in the
         trajectory record). Grids: "smoke" (PR-sized) or "full" (nightly).
 
+    PYTHONPATH=src python -m benchmarks.run --smoke --robustness smoke
+        Also run the fault-severity robustness sweep (benchmarks/
+        robustness.py: TTS/hit-rate vs quantization bits and stuck-spin
+        fraction, plus ideal-limit distribution sanity checks) and embed
+        its section in the report.
+
+    PYTHONPATH=src python -m benchmarks.run --suite full --isolate --timeout 1800
+        Crash-safe mode: each entry runs in its own worker subprocess with
+        a per-entry wall-clock budget; hangs/crashes become per-record
+        status "timeout"/"error" and the report still commits everything
+        measured (see benchmarks/runner.py).
+
     PYTHONPATH=src python -m benchmarks.run --figures [--only fig3a] [--fast]
         The legacy per-paper-figure benchmarks (CSV to stdout).
 """
@@ -41,6 +53,7 @@ import sys
 import time
 
 from benchmarks import report as report_mod
+from benchmarks import robustness as robustness_mod
 from benchmarks import runner, scaling, suites
 from benchmarks.figures import run_figures
 
@@ -75,6 +88,19 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--scaling", default=None, choices=sorted(scaling.SCALING_SPECS),
                     help="also run the async-vs-sync TTS scaling sweep on this "
                          "grid and embed its section in the report")
+    ap.add_argument("--robustness", default=None,
+                    choices=sorted(robustness_mod.SWEEP_SPECS),
+                    help="also run the fault-severity robustness sweep on this "
+                         "grid and embed its section in the report")
+    ap.add_argument("--isolate", action="store_true",
+                    help="run each entry in a worker subprocess (crashes "
+                         "become per-record status 'error')")
+    ap.add_argument("--timeout", type=float, default=None, metavar="SECONDS",
+                    help="per-entry wall-clock budget (requires --isolate; "
+                         "hangs become status 'timeout')")
+    ap.add_argument("--retries", type=int, default=runner.DEFAULT_RETRIES,
+                    help="retries (with backoff) for transient entry errors "
+                         f"(default {runner.DEFAULT_RETRIES}; timeouts never retry)")
     ap.add_argument("--figures", action="store_true",
                     help="run the paper-figure benchmarks instead of a suite")
     ap.add_argument("--only", default=None, help="(--figures) substring filter")
@@ -86,6 +112,9 @@ def main(argv: list[str] | None = None) -> int:
         return 0
     if args.only or args.fast:
         ap.error("--only/--fast apply to the figure benchmarks; add --figures")
+    if args.timeout is not None and not args.isolate:
+        ap.error("--timeout requires --isolate (an in-process entry cannot "
+                 "be interrupted)")
 
     if args.baseline_from:
         rep = report_mod.load(args.baseline_from)
@@ -109,8 +138,14 @@ def main(argv: list[str] | None = None) -> int:
 
     print(f"suite={suite_name} entries={len(entries)} tag={tag}", flush=True)
     t0 = time.perf_counter()
-    records = runner.run_suite(entries, log=lambda m: print(m, flush=True))
+    records = runner.run_suite(
+        entries, log=lambda m: print(m, flush=True),
+        timeout_s=args.timeout, isolate=args.isolate, retries=args.retries,
+    )
     print(f"suite wall time: {time.perf_counter() - t0:.1f}s")
+    statuses = report_mod.status_counts(records)
+    if set(statuses) - {"ok"}:
+        print(f"entry statuses: {statuses}")
 
     scaling_section = None
     if args.scaling:
@@ -121,7 +156,18 @@ def main(argv: list[str] | None = None) -> int:
         )
         print(f"scaling wall time: {time.perf_counter() - t0:.1f}s")
 
-    rep = report_mod.make_report(tag, suite_name, records, scaling=scaling_section)
+    robustness_section = None
+    if args.robustness:
+        t0 = time.perf_counter()
+        robustness_section = robustness_mod.robustness_section(
+            args.robustness, log=lambda m: print(m, flush=True)
+        )
+        print(f"robustness wall time: {time.perf_counter() - t0:.1f}s")
+
+    rep = report_mod.make_report(
+        tag, suite_name, records, scaling=scaling_section,
+        robustness=robustness_section,
+    )
     path = report_mod.write_report(rep, args.out)
     print(f"wrote {path}")
 

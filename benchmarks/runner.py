@@ -6,9 +6,31 @@ estimate plus the median steady-state wall clock over `TIMING_REPEATS`
 warm end-to-end `run()` calls), first-hit time-to-solution
 against the reference target, and a downsampled best-so-far energy-gap
 trajectory in model time.
+
+`run_suite` degrades gracefully instead of dying wholesale: every entry
+yields a record whose `status` is one of
+
+    "ok"      — measured; all metric fields present.
+    "timeout" — exceeded the per-entry wall-clock budget (subprocess
+                isolation only — an in-process hang cannot be interrupted);
+                recorded immediately, no retry (deterministic hangs are not
+                transient, and retrying would double the wasted wall time).
+    "error"   — raised/crashed; retried once with backoff first (shared CI
+                runners do throw transient OOM/flake), then recorded with
+                the error message.
+    "skipped" — never attempted (the operator interrupted the suite);
+                recorded so the report accounts for every entry.
+
+Non-ok records keep the identity fields and carry `error` instead of
+metrics; `benchmarks.report` filters on status for baselines/gating.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
 from typing import Optional
 
@@ -16,7 +38,7 @@ import jax
 import numpy as np
 
 from repro.core import problems, sampler_api
-from benchmarks.suites import SuiteEntry
+from benchmarks.suites import SuiteEntry, entry_to_dict
 
 # Max points kept in each record's energy-gap trajectory.
 TRAJECTORY_POINTS = 40
@@ -60,6 +82,7 @@ def run_entry(entry: SuiteEntry, zoo: Optional[problems.ZooProblem] = None) -> d
     if zoo is None:
         zoo = entry.make_problem()
     target = zoo.target_energy(entry.rel_gap)
+    faults = entry.make_faults(zoo.problem)
 
     def timed():
         """One timed end-to-end run() call -> (result, wall seconds)."""
@@ -76,6 +99,7 @@ def run_entry(entry: SuiteEntry, zoo: Optional[problems.ZooProblem] = None) -> d
                 first_hit=target,
                 backend=entry.backend,
                 unroll=entry.unroll,
+                faults=faults,
             )
         )
         return res, max(time.perf_counter() - t0, 1e-9)
@@ -114,6 +138,7 @@ def run_entry(entry: SuiteEntry, zoo: Optional[problems.ZooProblem] = None) -> d
 
     return {
         "id": entry.id,
+        "status": "ok",
         "problem": entry.problem,
         "instance": zoo.instance,
         "size": entry.size,
@@ -122,6 +147,7 @@ def run_entry(entry: SuiteEntry, zoo: Optional[problems.ZooProblem] = None) -> d
         "kernel": entry.kernel,
         "kernel_args": dict(entry.kernel_args),
         "problem_args": dict(entry.problem_args),
+        "faults": faults.describe() if faults is not None else None,
         "backend": entry.backend,
         "unroll": entry.unroll,
         "schedule": list(entry.schedule) if entry.schedule else None,
@@ -146,19 +172,180 @@ def run_entry(entry: SuiteEntry, zoo: Optional[problems.ZooProblem] = None) -> d
     }
 
 
-def run_suite(entries: list[SuiteEntry], log=print) -> list[dict]:
-    """Run a whole suite, reusing zoo instances across same-problem entries."""
-    cache: dict[tuple, problems.ZooProblem] = {}
-    records = []
-    for i, entry in enumerate(entries):
-        pkey = (entry.problem, entry.size, entry.seed, entry.problem_args)
-        if pkey not in cache:
-            cache[pkey] = entry.make_problem()
-        rec = run_entry(entry, cache[pkey])
-        records.append(rec)
-        log(
-            f"[{i + 1}/{len(entries)}] {rec['id']}: "
-            f"{rec['chain_steps_per_s']:.0f} chain-steps/s, "
-            f"gap={rec['final_gap']:.3f}, hit_rate={rec['hit_rate']:.2f}"
+class EntryTimeout(Exception):
+    """An isolated entry exceeded its wall-clock budget (and was killed)."""
+
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SRC_DIR = os.path.join(REPO_ROOT, "src")
+
+# Retry-with-backoff policy for status "error" (see the module docstring:
+# timeouts are never retried).
+DEFAULT_RETRIES = 1
+DEFAULT_BACKOFF_S = 2.0
+
+# Tail of a failed worker's stderr kept in the record (enough for the
+# traceback that matters without bloating the report).
+STDERR_TAIL_CHARS = 2000
+
+
+def error_record(entry: SuiteEntry, status: str, error: Optional[str]) -> dict:
+    """A schema-valid record for an entry that produced no measurement.
+
+    Identity fields only — metric fields are absent, `status` says why and
+    `error` carries the message (None for "skipped"). Report consumers
+    (baseline, gate, nightly rollup) filter on status.
+    """
+    return {
+        "id": entry.id,
+        "status": status,
+        "error": error,
+        "problem": entry.problem,
+        "size": entry.size,
+        "seed": entry.seed,
+        "kernel": entry.kernel,
+        "kernel_args": dict(entry.kernel_args),
+        "problem_args": dict(entry.problem_args),
+        "faults": dict(entry.faults) if entry.faults else None,
+        "backend": entry.backend,
+        "unroll": entry.unroll,
+        "n_steps": entry.n_steps,
+        "n_chains": entry.n_chains,
+    }
+
+
+def _run_entry_subprocess(entry: SuiteEntry, timeout_s: Optional[float]) -> dict:
+    """Run one entry in a `benchmarks.entry_worker` child process.
+
+    Raises EntryTimeout when the child exceeds `timeout_s` (it is killed),
+    RuntimeError (with the stderr tail) when it exits nonzero or writes no
+    record.
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (SRC_DIR, env.get("PYTHONPATH")) if p
+    )
+    with tempfile.TemporaryDirectory(prefix="bench-entry-") as tmp:
+        spec_path = os.path.join(tmp, "spec.json")
+        record_path = os.path.join(tmp, "record.json")
+        with open(spec_path, "w") as f:
+            json.dump({"id": entry.id, "entry": entry_to_dict(entry)}, f)
+        cmd = [sys.executable, "-m", "benchmarks.entry_worker", spec_path, record_path]
+        try:
+            proc = subprocess.run(
+                cmd, cwd=REPO_ROOT, env=env, timeout=timeout_s,
+                capture_output=True, text=True,
+            )
+        except subprocess.TimeoutExpired:
+            raise EntryTimeout(
+                f"{entry.id}: exceeded per-entry timeout of {timeout_s:.0f}s"
+            ) from None
+        if proc.returncode != 0 or not os.path.exists(record_path):
+            tail = (proc.stderr or "")[-STDERR_TAIL_CHARS:].strip()
+            raise RuntimeError(
+                f"{entry.id}: worker exit code {proc.returncode}"
+                + (f"\n{tail}" if tail else "")
+            )
+        with open(record_path) as f:
+            return json.load(f)
+
+
+def run_entry_safe(
+    entry: SuiteEntry,
+    zoo: Optional[problems.ZooProblem] = None,
+    *,
+    timeout_s: Optional[float] = None,
+    isolate: bool = False,
+    retries: int = DEFAULT_RETRIES,
+    backoff_s: float = DEFAULT_BACKOFF_S,
+    log=print,
+) -> dict:
+    """`run_entry` that always returns a record (status ok|timeout|error).
+
+    Timeouts are recorded immediately; errors are retried `retries` times
+    with linear backoff before an "error" record is written. `zoo` reuse
+    only applies in-process (an isolated child regenerates its problem —
+    that is the price of crash isolation).
+    """
+    last_error = None
+    for attempt in range(1 + max(0, retries)):
+        if attempt:
+            log(f"  retry {attempt}/{retries} for {entry.id} "
+                f"after {backoff_s * attempt:.0f}s: {last_error}")
+            time.sleep(backoff_s * attempt)
+        try:
+            if isolate:
+                rec = _run_entry_subprocess(entry, timeout_s)
+            else:
+                rec = run_entry(entry, zoo)
+            rec["attempts"] = attempt + 1
+            return rec
+        except EntryTimeout as exc:
+            rec = error_record(entry, "timeout", str(exc))
+            rec["attempts"] = attempt + 1
+            return rec
+        except KeyboardInterrupt:
+            raise
+        except Exception as exc:  # noqa: BLE001 — the whole point is survival
+            last_error = f"{type(exc).__name__}: {exc}"
+    rec = error_record(entry, "error", last_error)
+    rec["attempts"] = 1 + max(0, retries)
+    return rec
+
+
+def run_suite(
+    entries: list[SuiteEntry],
+    log=print,
+    *,
+    timeout_s: Optional[float] = None,
+    isolate: bool = False,
+    retries: int = DEFAULT_RETRIES,
+    backoff_s: float = DEFAULT_BACKOFF_S,
+) -> list[dict]:
+    """Run a whole suite; every entry yields a record whatever happens.
+
+    In-process (isolate=False, the default) entries reuse zoo instances
+    across same-problem entries and exceptions become "error" records;
+    isolate=True runs each entry in a worker subprocess so `timeout_s` can
+    kill hangs ("timeout" records) and crashes cannot take the suite down.
+    Ctrl-C marks the remaining entries "skipped" and returns the partial
+    record list instead of discarding everything measured so far.
+    """
+    if timeout_s is not None and not isolate:
+        raise ValueError(
+            "timeout_s requires isolate=True — an in-process entry cannot "
+            "be interrupted from the outside"
         )
+    cache: dict[tuple, problems.ZooProblem] = {}
+    records: list[dict] = []
+    for i, entry in enumerate(entries):
+        try:
+            zoo = None
+            if not isolate:
+                pkey = (entry.problem, entry.size, entry.seed, entry.problem_args)
+                try:
+                    if pkey not in cache:
+                        cache[pkey] = entry.make_problem()
+                    zoo = cache[pkey]
+                except Exception:  # noqa: BLE001 — run_entry retries/records it
+                    zoo = None
+            rec = run_entry_safe(
+                entry, zoo, timeout_s=timeout_s, isolate=isolate,
+                retries=retries, backoff_s=backoff_s, log=log,
+            )
+        except KeyboardInterrupt:
+            log(f"interrupted — marking {len(entries) - i} remaining "
+                "entries skipped")
+            records.extend(error_record(e, "skipped", None) for e in entries[i:])
+            break
+        records.append(rec)
+        if rec["status"] == "ok":
+            log(
+                f"[{i + 1}/{len(entries)}] {rec['id']}: "
+                f"{rec['chain_steps_per_s']:.0f} chain-steps/s, "
+                f"gap={rec['final_gap']:.3f}, hit_rate={rec['hit_rate']:.2f}"
+            )
+        else:
+            log(f"[{i + 1}/{len(entries)}] {rec['id']}: "
+                f"{rec['status'].upper()} — {rec.get('error')}")
     return records

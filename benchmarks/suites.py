@@ -28,6 +28,7 @@ from typing import Optional
 import jax
 
 from repro.core import problems, sampler_api
+from repro.core.faults import FaultModel, make_stuck
 
 DENSE_KERNELS = ("random_scan_gibbs", "ctmc", "tau_leap")
 LATTICE_KERNELS = ("chromatic_gibbs", "tau_leap")
@@ -51,6 +52,13 @@ class SuiteEntry:
     schedule is a plain tuple — ("constant", b) | ("linear", b0, b1) |
     ("geometric", b0, b1) | None — kept JSON-serializable; `resolve_schedule`
     turns it into a sampler_api Schedule.
+
+    faults is a plain tuple of (name, value) items — a JSON-serializable
+    fault spec; `make_faults` turns it into a `repro.core.faults.FaultModel`.
+    Recognized names: "quantize_bits", "field_noise_std", "dropout" (passed
+    through), and "stuck_fraction" (a random stuck mask of that density,
+    drawn from a key derived from the entry id — deterministic per entry).
+    An empty tuple (the default) runs the exact fault-free program.
     """
 
     problem: str
@@ -66,20 +74,43 @@ class SuiteEntry:
     problem_args: tuple = ()  # generator kwargs, e.g. (("dense", True),)
     rel_gap: float = 0.05  # first-hit target: ref + rel_gap * |ref|
     unroll: object = "auto"  # run(unroll=...): event-block size, "auto" | int
+    faults: tuple = ()  # (("quantize_bits", 4), ("stuck_fraction", 0.05))
 
     @property
     def id(self) -> str:
-        """Stable record id: <instance>/<kernel-args>/<backend>[/uN]."""
+        """Stable record id: <instance>/<kernel-args>/<backend>[/uN][/f[...]]."""
         pargs = ",".join(f"{k}={v}" for k, v in self.problem_args)
         prob = f"{self.problem}({pargs})" if pargs else self.problem
         args = ",".join(f"{k}={v}" for k, v in self.kernel_args)
         kern = f"{self.kernel}({args})" if args else self.kernel
         tail = "" if self.unroll == "auto" else f"/u{self.unroll}"
+        if self.faults:
+            fargs = ",".join(f"{k}={v}" for k, v in self.faults)
+            tail += f"/f[{fargs}]"
         return f"{prob}-n{self.size}-s{self.seed}/{kern}/{self.backend}{tail}"
 
     def key(self) -> jax.Array:
         """Deterministic PRNG key derived from the entry id."""
         return jax.random.key(stable_seed(self.id))
+
+    def make_faults(self, problem) -> Optional[FaultModel]:
+        """Fault spec tuple -> FaultModel (None when the spec is empty).
+
+        "stuck_fraction" draws its mask/values from a key derived from the
+        entry id, so the same entry always injects the same stuck sites."""
+        if not self.faults:
+            return None
+        spec = dict(self.faults)
+        fraction = spec.pop("stuck_fraction", None)
+        unknown = set(spec) - {"quantize_bits", "field_noise_std", "dropout"}
+        if unknown:
+            raise ValueError(f"unknown fault spec keys {sorted(unknown)}")
+        mask = values = None
+        if fraction is not None:
+            mask, values = make_stuck(
+                jax.random.key(stable_seed(self.id + "/stuck")), problem, fraction
+            )
+        return FaultModel(stuck_mask=mask, stuck_values=values, **spec)
 
     def make_kernel(self) -> sampler_api.SamplerKernel:
         """Instantiate the entry's kernel."""
@@ -101,6 +132,26 @@ class SuiteEntry:
             "linear": sampler_api.linear,
             "geometric": sampler_api.geometric,
         }[name](*args)
+
+
+def entry_to_dict(entry: SuiteEntry) -> dict:
+    """SuiteEntry -> JSON-ready dict (the subprocess-isolation wire format)."""
+    return dataclasses.asdict(entry)
+
+
+def _pairs(value) -> tuple:
+    """JSON lists-of-pairs back to the hashable tuple-of-tuples form."""
+    return tuple(tuple(item) if isinstance(item, list) else item for item in value)
+
+
+def entry_from_dict(d: dict) -> SuiteEntry:
+    """Inverse of `entry_to_dict` (JSON turns tuples into lists)."""
+    d = dict(d)
+    for field in ("kernel_args", "problem_args", "faults"):
+        d[field] = _pairs(d.get(field, ()))
+    if d.get("schedule") is not None:
+        d["schedule"] = tuple(d["schedule"])
+    return SuiteEntry(**d)
 
 
 def _grid(problem_specs, *, steps_dense, steps_lattice, n_chains, sample_every,
@@ -216,6 +267,16 @@ def smoke_suite() -> list[SuiteEntry]:
         )
         + _ctmc_site_draw_entries(256, n_steps=400, n_chains=4, sample_every=20)
         + _sparse_dense_ctmc_entries(1024, n_steps=400, sample_every=20)
+        # One cheap fault-injection entry so the faults dispatch path (bind,
+        # stuck masking, quantized couplings) is exercised on every PR, not
+        # only in the nightly robustness sweep.
+        + [
+            SuiteEntry(
+                problem="sk", size=32, seed=0, kernel="ctmc", n_steps=400,
+                n_chains=4, sample_every=20,
+                faults=(("quantize_bits", 4), ("stuck_fraction", 0.05)),
+            )
+        ]
     )
 
 

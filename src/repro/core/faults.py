@@ -1,0 +1,285 @@
+"""Composable device-fault models for the PASS sampler reproduction.
+
+PASS is a physical 14nm chip: the paper's energy-to-solution claims depend
+on how the asynchronous Glauber dynamic behaves under real device
+non-idealities, not the ideal sampler our kernels implement. `FaultModel`
+captures the four effects that dominate probabilistic-computing hardware
+reports (stuck p-bits, finite coupling precision, analog field noise,
+dropped asynchronous updates) as one composable configuration threaded
+through `sampler_api.run(..., faults=...)` exactly like `diagnostics=True`:
+`faults=None` (the default) compiles the exact pre-fault program and is
+bit-identical to a run that never heard of this module.
+
+The four faults and their per-kernel semantics:
+
+  stuck spins (`stuck_mask`, `stuck_values`)
+      A stuck p-bit reads a constant value and never updates. On
+      `LatticeIsing` the mask is absorbed into the problem's existing clamp
+      epilogue (`bind()` merges it into `clamp_mask`/`clamp_value`), so the
+      chromatic sweeps and lattice tau-leap handle it through the same
+      frozen-site machinery the chip's clamp bits use. On dense/sparse
+      problems the kernels suppress updates at stuck sites directly:
+      random-scan discards draws that land on one, the CTMC zeroes their
+      flip rates (so the event tree never selects them — rates are masked
+      BEFORE the tree is built, preserving tree-vs-scan parity), tau-leap
+      freezes them, and the colored sweep removes them from every color
+      class. Initial states are forced to the stuck values so incremental
+      energies/fields stay exact.
+
+  coupling quantization (`quantize_bits`)
+      Couplings are rounded once, at `run()` entry, onto the b-bit signed
+      fixed-point grid scaled by the max-|J| (the same convention as
+      `ising.quantize_lattice`): the sampler then runs the quantized
+      problem EXACTLY — dynamics, incremental energies, and the CTMC rate
+      table all see the same couplings, so every statistical-exactness
+      property holds for the quantized problem. Recorded energies are
+      therefore the device's own (quantized) energies; evaluate recorded
+      samples against the true problem off-line for true-energy metrics
+      (`benchmarks.robustness` does).
+
+  field noise (`field_noise_std`)
+      Zero-mean Gaussian noise on the local field each site sees, redrawn
+      every kernel step (every event for the CTMC, every sweep for the
+      Gibbs kernels — one draw shared by a sweep's color phases, applied
+      as a per-step bias perturbation so ref and Pallas sweep paths
+      evaluate the same expression). Noise perturbs only the DECISIONS:
+      recorded/incremental energies remain energies of the actual state
+      under the (possibly quantized) couplings. For the CTMC the noisy
+      rates are computed before the event tree is built, and the sparse
+      incremental path degrades to a per-event rebuild (every leaf changes
+      under fresh noise — the O(deg) repair has nothing to reuse).
+
+  update dropout (`dropout`)
+      Each site's update is independently dropped with this probability at
+      every step — the TPU analogue of the chip losing asynchronous update
+      pulses. A dropped CTMC event still advances model time (the device
+      waited; the flip was lost); a dropped Gibbs/tau-leap update keeps the
+      previous spin value.
+
+All four compose; each is off by default. `quantize_bits` /
+`field_noise_std` / `dropout` are static (pytree metadata — a new severity
+is a new compile, like `diagnostics`), the stuck arrays are data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ising import DenseIsing, LatticeIsing
+from repro.core.sparse import SparseIsing
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("stuck_mask", "stuck_values"),
+    meta_fields=("quantize_bits", "field_noise_std", "dropout"),
+)
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """A composable hardware-fault configuration (see the module docstring).
+
+    Attributes:
+      stuck_mask: optional bool array in the problem's natural shape —
+        True where the p-bit is stuck.
+      stuck_values: ±1 array, same shape — the value each stuck site reads
+        (required iff `stuck_mask` is given).
+      quantize_bits: optional int >= 2 — couplings are rounded onto the
+        signed b-bit fixed-point grid once at `run()` entry.
+      field_noise_std: std-dev of the zero-mean Gaussian field noise
+        redrawn each kernel step (0 = off).
+      dropout: per-site per-step probability that an update is dropped
+        (in [0, 1]; 0 = off).
+    """
+
+    stuck_mask: Optional[jax.Array] = None
+    stuck_values: Optional[jax.Array] = None
+    quantize_bits: Optional[int] = None
+    field_noise_std: float = 0.0
+    dropout: float = 0.0
+
+    @property
+    def is_noop(self) -> bool:
+        """True when every fault is off — `bind()` then returns residual None."""
+        return (
+            self.stuck_mask is None
+            and self.quantize_bits is None
+            and self.field_noise_std == 0.0
+            and self.dropout == 0.0
+        )
+
+    @property
+    def noisy(self) -> bool:
+        """True when field noise is on (static — safe to branch on)."""
+        return self.field_noise_std > 0.0
+
+    @property
+    def drops(self) -> bool:
+        """True when update dropout is on (static — safe to branch on)."""
+        return self.dropout > 0.0
+
+    def describe(self) -> dict:
+        """JSON-ready summary of the configuration (for benchmark records)."""
+        out: dict = {}
+        if self.stuck_mask is not None:
+            out["stuck_sites"] = int(np.asarray(self.stuck_mask).sum())
+        if self.quantize_bits is not None:
+            out["quantize_bits"] = int(self.quantize_bits)
+        if self.field_noise_std:
+            out["field_noise_std"] = float(self.field_noise_std)
+        if self.dropout:
+            out["dropout"] = float(self.dropout)
+        return out
+
+    def validate(self, problem) -> None:
+        """Raise ValueError on a configuration that cannot mean anything.
+
+        Host-side (called once by `run()` before tracing): shape mismatch
+        against the problem's natural spin shape, stuck values off the ±1
+        grid, a mask without values (or vice versa), out-of-range
+        severities.
+        """
+        if self.quantize_bits is not None:
+            if not isinstance(self.quantize_bits, int) or self.quantize_bits < 2:
+                raise ValueError(
+                    f"quantize_bits must be an int >= 2, got {self.quantize_bits!r}"
+                )
+        if not np.isfinite(self.field_noise_std) or self.field_noise_std < 0.0:
+            raise ValueError(
+                f"field_noise_std must be finite and >= 0, got {self.field_noise_std!r}"
+            )
+        if not 0.0 <= self.dropout <= 1.0:
+            raise ValueError(f"dropout must be in [0, 1], got {self.dropout!r}")
+        if (self.stuck_mask is None) != (self.stuck_values is None):
+            raise ValueError(
+                "stuck_mask and stuck_values must be given together "
+                f"(got mask={'set' if self.stuck_mask is not None else 'None'}, "
+                f"values={'set' if self.stuck_values is not None else 'None'})"
+            )
+        if self.stuck_mask is not None:
+            shape = natural_shape(problem)
+            mask = np.asarray(self.stuck_mask)
+            vals = np.asarray(self.stuck_values)
+            if mask.shape != shape or vals.shape != shape:
+                raise ValueError(
+                    f"stuck_mask/stuck_values shape {mask.shape}/{vals.shape} "
+                    f"!= problem's natural shape {shape}"
+                )
+            if mask.dtype != np.bool_:
+                raise ValueError(f"stuck_mask must be boolean, got dtype {mask.dtype}")
+            if not np.all(np.isin(vals[mask], (-1.0, 1.0))):
+                raise ValueError("stuck_values must be ±1 at every stuck site")
+
+    def bind(self, problem) -> tuple:
+        """Apply the static faults to `problem`; return (problem, residual).
+
+        Quantization rewrites the couplings once. On `LatticeIsing` the
+        stuck mask is additionally absorbed into the problem's clamp
+        epilogue (`clamp_mask`/`clamp_value`) — the lattice kernels then
+        need no fault-specific stuck handling at all. The residual
+        `FaultModel` carries only what the kernels must still apply per
+        step; it is None when nothing dynamic remains (the driver then
+        compiles the exact fault-free program on the transformed problem).
+        """
+        prob = problem
+        if self.quantize_bits is not None:
+            prob = quantize_couplings(prob, self.quantize_bits)
+        residual = dataclasses.replace(self, quantize_bits=None)
+        if isinstance(prob, LatticeIsing) and self.stuck_mask is not None:
+            prob = dataclasses.replace(
+                prob,
+                clamp_mask=prob.clamp_mask | self.stuck_mask,
+                clamp_value=jnp.where(
+                    self.stuck_mask,
+                    self.stuck_values.astype(prob.clamp_value.dtype),
+                    prob.clamp_value,
+                ),
+            )
+            residual = dataclasses.replace(
+                residual, stuck_mask=None, stuck_values=None
+            )
+        return prob, (None if residual.is_noop else residual)
+
+    # -- per-step helpers the kernels call (all guarded by static config) --
+
+    def apply_stuck(self, s: jax.Array) -> jax.Array:
+        """Force stuck sites to their stuck values (kernels call at init)."""
+        if self.stuck_mask is None:
+            return s
+        return jnp.where(self.stuck_mask, self.stuck_values.astype(s.dtype), s)
+
+    def stuck_flat(self) -> Optional[jax.Array]:
+        """The stuck mask flattened to (n,) — None when no sites are stuck."""
+        if self.stuck_mask is None:
+            return None
+        return jnp.reshape(self.stuck_mask, (-1,))
+
+    def field_noise(self, key: jax.Array, shape) -> jax.Array:
+        """One fresh draw of the per-site Gaussian field perturbation."""
+        return self.field_noise_std * jax.random.normal(key, shape)
+
+    def keep_mask(self, key: jax.Array, shape) -> jax.Array:
+        """Per-site bool mask of updates that SURVIVE dropout this step."""
+        return jax.random.uniform(key, shape) >= self.dropout
+
+
+def natural_shape(problem) -> tuple:
+    """The problem's natural spin-array shape ((H, W) for lattices, (n,))."""
+    if isinstance(problem, LatticeIsing):
+        return problem.shape
+    return (problem.n,)
+
+
+def quantize_couplings(problem, bits: int):
+    """Round a problem's couplings onto the signed `bits`-bit grid.
+
+    One global scale (max |J|, as in `ising.quantize_lattice`) maps
+    couplings to integer codes in [-(2^(b-1)-1), 2^(b-1)-1]; values are
+    kept ON the grid (dequantized floats) so every sampler stays float
+    while matching what b-bit silicon can represent. Elementwise with a
+    shared scale, so symmetric layouts stay symmetric: both copies of a
+    sparse edge quantize identically, mirror lattice planes stay mirrored,
+    and zero (padding slots, the dense diagonal) stays exactly zero.
+    Biases are untouched — the sweep axis is coupling precision.
+    """
+    if not isinstance(bits, int) or isinstance(bits, bool) or bits < 2:
+        raise ValueError(f"quantize_bits must be an int >= 2, got {bits!r}")
+    qmax = float(2 ** (bits - 1) - 1)
+
+    def grid(x):
+        """Round `x` onto the shared-scale signed integer grid."""
+        scale = jnp.max(jnp.abs(x))
+        scale = jnp.where(scale == 0, 1.0, scale)
+        return jnp.round(x / scale * qmax) * (scale / qmax)
+
+    if isinstance(problem, DenseIsing):
+        return dataclasses.replace(problem, J=grid(problem.J))
+    if isinstance(problem, LatticeIsing):
+        return dataclasses.replace(problem, w=grid(problem.w))
+    if isinstance(problem, SparseIsing):
+        return dataclasses.replace(problem, nbr_w=grid(problem.nbr_w))
+    raise TypeError(f"cannot quantize couplings of {type(problem).__name__}")
+
+
+def make_stuck(
+    key: jax.Array, problem, fraction: float, dtype=jnp.float32
+) -> tuple[jax.Array, jax.Array]:
+    """Draw a (mask, values) stuck-spin pair for `problem`.
+
+    Each site is stuck independently with probability `fraction`; stuck
+    values are fair ±1 coin flips. `fraction=0` returns an all-False mask
+    (still a FAULTED run — it exercises the stuck code path and must
+    recover the ideal sampler's distribution, the limit the robustness
+    sweep's sanity check pins).
+    """
+    if not 0.0 <= fraction <= 1.0:
+        raise ValueError(f"stuck fraction must be in [0, 1], got {fraction!r}")
+    shape = natural_shape(problem)
+    k_mask, k_val = jax.random.split(key)
+    mask = jax.random.uniform(k_mask, shape) < fraction
+    values = (2 * jax.random.bernoulli(k_val, 0.5, shape) - 1).astype(dtype)
+    return mask, values

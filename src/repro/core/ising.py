@@ -93,6 +93,11 @@ class DenseIsing:
             raise ValueError(f"J must be a square matrix, got shape {J.shape}")
         if b.shape != (J.shape[0],):
             raise ValueError(f"b shape {b.shape} does not match J shape {J.shape}")
+        if not np.all(np.isfinite(J)) or not np.all(np.isfinite(b)):
+            raise ValueError(
+                "J/b must be finite: NaN/Inf couplings would silently poison "
+                "every recorded energy and the downstream TTS fits"
+            )
         if not np.allclose(J, J.T, atol=1e-6):
             raise ValueError("J must be symmetric (J == J.T)")
         if not np.allclose(np.diag(J), 0.0, atol=1e-6):

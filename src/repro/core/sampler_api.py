@@ -10,8 +10,12 @@ multi-chain batching, and backend dispatch onto the Pallas kernels.
 
 Kernel protocol (state is a `KernelState` pytree):
 
-    kernel.init(problem, key, s0=None) -> KernelState
-    kernel.step(problem, state, key, beta) -> KernelState
+    kernel.init(problem, key, s0=None, faults=None) -> KernelState
+    kernel.step(problem, state, key, beta, faults=None) -> KernelState
+
+(the driver only passes `faults` when `run(..., faults=...)` is given a
+non-None `repro.core.faults.FaultModel`, so kernels that never heard of
+faults — and the fault-free program — are untouched).
 
 Kernels implemented here, registered by name for config/benchmark selection:
 
@@ -72,8 +76,17 @@ import jax.numpy as jnp
 from repro.core import diagnostics as diag
 from repro.core import event_tree, glauber
 from repro.core.diagnostics import RunDiagnostics  # noqa: F401  (re-export)
+from repro.core.faults import FaultModel  # noqa: F401  (re-export)
 from repro.core.ising import DenseIsing, LatticeIsing, king_color_masks
 from repro.core.sparse import SparseIsing
+
+
+class NonFiniteEnergyError(ValueError):
+    """A problem (or an over-aggressive fault model) has non-finite energy.
+
+    Raised by `run()` before any sampling happens: a NaN/Inf coupling or
+    bias would otherwise silently poison every recorded energy and produce
+    NaN TTS fits downstream (`observables.fit_scaling`)."""
 
 
 def random_init(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
@@ -155,13 +168,23 @@ class KernelState(NamedTuple):
 class SamplerKernel(Protocol):
     """One MCMC/CTMC step rule. Implementations are frozen dataclasses
     registered as pytrees: float/str config is metadata (static under jit),
-    array-valued config (e.g. sigmoid trims) is data."""
+    array-valued config (e.g. sigmoid trims) is data.
 
-    def init(self, problem, key: jax.Array, s0: Optional[jax.Array] = None) -> KernelState:
+    The optional `faults` argument (a `repro.core.faults.FaultModel`
+    residual, pre-bound by the driver) carries the dynamic device faults a
+    step must emulate; the driver only passes it when it is not None, so
+    kernels that predate the fault layer keep working and the fault-free
+    program is byte-identical to the pre-fault one."""
+
+    def init(
+        self, problem, key: jax.Array, s0: Optional[jax.Array] = None, faults=None
+    ) -> KernelState:
         """Build the initial kernel state (random init when s0 is None)."""
         ...
 
-    def step(self, problem, state: KernelState, key: jax.Array, beta: jax.Array) -> KernelState:
+    def step(
+        self, problem, state: KernelState, key: jax.Array, beta: jax.Array, faults=None
+    ) -> KernelState:
         """Advance the chain by one kernel step at inverse temperature beta."""
         ...
 
@@ -247,14 +270,19 @@ class geometric(Schedule):
 ScheduleLike = Union[None, float, jax.Array, Schedule]
 
 
-def _tau_leap_flip(s, h, key, dt, trim, frozen):
+def _tau_leap_flip(s, h, key, dt, trim, frozen, keep=None):
     """One tau-leap update given (beta-scaled) fields h: each spin flips
-    w.p. 1-exp(-dt*lambda_i/lambda0); frozen (clamped/dead) sites never do."""
+    w.p. 1-exp(-dt*lambda_i/lambda0); frozen (clamped/dead/stuck) sites
+    never do, and sites outside `keep` (update dropout) lose their flip
+    AFTER the uniform is drawn — the random stream does not depend on the
+    dropout draw, only the realized flips do."""
     rate = glauber.flip_prob(h, s, trim)
     p_flip = 1.0 - jnp.exp(-dt * rate)
     if frozen is not None:
         p_flip = jnp.where(frozen, 0.0, p_flip)
     flips = jax.random.uniform(key, s.shape) < p_flip
+    if keep is not None:
+        flips = flips & keep
     return jnp.where(flips, -s, s)
 
 
@@ -317,10 +345,12 @@ class RandomScanGibbs:
 
     lambda0: float = 1.0
 
-    def init(self, problem, key, s0=None) -> KernelState:
+    def init(self, problem, key, s0=None, faults=None) -> KernelState:
         """Initial state with incremental fields and energy."""
         if s0 is None:
             s0 = random_init(key, state_shape(problem))
+        if faults is not None:
+            s0 = faults.apply_stuck(s0)
         return KernelState(
             s=s0,
             t=jnp.asarray(0.0, jnp.float32),
@@ -328,13 +358,29 @@ class RandomScanGibbs:
             aux=problem.local_fields(s0),
         )
 
-    def step(self, problem, state, key, beta) -> KernelState:
+    def step(self, problem, state, key, beta, faults=None) -> KernelState:
         """Resample one uniformly random site from its conditional."""
         s, h = state.s, state.aux
         k_site, k_flip = jax.random.split(key)
+        if faults is not None and (faults.noisy or faults.drops):
+            k_flip, k_noise, k_drop = jax.random.split(k_flip, 3)
         i = jax.random.randint(k_site, (), 0, problem.n)
-        p_up = glauber.prob_up(beta * h[i])
+        hi = h[i]
+        if faults is not None and faults.noisy:
+            hi = hi + faults.field_noise(k_noise, ())
+        p_up = glauber.prob_up(beta * hi)
         new_si = jnp.where(jax.random.uniform(k_flip) < p_up, 1.0, -1.0)
+        if faults is not None:
+            # A stuck site or a dropped update keeps the previous value:
+            # delta = 0, so the incremental energy/field stay exact.
+            suppress = None
+            if faults.drops:
+                suppress = jax.random.uniform(k_drop) < faults.dropout
+            stuck = faults.stuck_flat()
+            if stuck is not None:
+                suppress = stuck[i] if suppress is None else (suppress | stuck[i])
+            if suppress is not None:
+                new_si = jnp.where(suppress, s[i], new_si)
         delta = new_si - s[i]
         # dE for changing s_i by delta: delta * h_i (h is the raw, beta-free
         # field including b and the full J row)
@@ -378,8 +424,9 @@ class ChromaticGibbs:
         """Backends valid for this kernel config (trims are ref-only)."""
         return ("ref",) if self.trim is not None else self.backends
 
-    def init(self, problem: LatticeIsing, key, s0=None) -> KernelState:
-        """Initial state on the clamped lattice."""
+    def init(self, problem: LatticeIsing, key, s0=None, faults=None) -> KernelState:
+        """Initial state on the clamped lattice (stuck sites arrive already
+        absorbed into the clamp masks via `FaultModel.bind`)."""
         if self.backend == "pallas" and self.trim is not None:
             raise NotImplementedError(
                 "pallas chromatic gibbs does not support trims"
@@ -389,12 +436,24 @@ class ChromaticGibbs:
         s0 = problem.apply_clamps(s0)
         return KernelState(s=s0, t=jnp.asarray(0.0, jnp.float32), e=None, aux=())
 
-    def step(self, problem: LatticeIsing, state, key, beta) -> KernelState:
-        """One sweep: all 4 king-coloring phases."""
+    def step(self, problem: LatticeIsing, state, key, beta, faults=None) -> KernelState:
+        """One sweep: all 4 king-coloring phases.
+
+        Field noise is one per-step draw applied as a bias perturbation
+        (shared by the 4 phases — both backends then evaluate the same
+        expression); dropped sites are removed from their color class for
+        this sweep; stuck sites were folded into `frozen_mask` by bind."""
         H, W = problem.shape
         colors = king_color_masks(H, W)
         frozen = problem.frozen_mask
         s = state.s
+        eta = keep = None
+        if faults is not None and (faults.noisy or faults.drops):
+            key, k_noise, k_drop = jax.random.split(key, 3)
+            if faults.noisy:
+                eta = faults.field_noise(k_noise, s.shape)
+            if faults.drops:
+                keep = faults.keep_mask(k_drop, s.shape)
         keys = jax.random.split(key, colors.shape[0])
         if self.backend == "pallas":
             # trim is rejected in init(), which every driver path runs first
@@ -403,24 +462,31 @@ class ChromaticGibbs:
             u = jnp.stack(
                 [jax.random.uniform(keys[c], s.shape) for c in range(colors.shape[0])]
             )
+            update = colors if keep is None else colors & keep
             s = ops.lattice_gibbs_sweep(
                 s[None],
                 problem.w,
-                problem.b,
+                problem.b if eta is None else problem.b + eta,
                 u[:, None],
-                colors.astype(s.dtype),
+                update.astype(s.dtype),
                 frozen.astype(s.dtype),
                 problem.frozen_values.astype(s.dtype),
                 beta=beta,
                 mode="kernel",
             )[0]
         else:
+            prob = (
+                problem if eta is None
+                else dataclasses.replace(problem, b=problem.b + eta)
+            )
             for c in range(colors.shape[0]):
-                h = problem.local_fields(s)
+                h = prob.local_fields(s)
                 p_up = glauber.prob_up(beta * h, self.trim)
                 u = jax.random.uniform(keys[c], s.shape)
                 proposal = jnp.where(u < p_up, 1.0, -1.0).astype(s.dtype)
                 upd = colors[c] & (~frozen)
+                if keep is not None:
+                    upd = upd & keep
                 s = jnp.where(upd, proposal, s)
             s = problem.apply_clamps(s)
         return KernelState(s=s, t=state.t + 1.0 / self.lambda0, e=None, aux=())
@@ -456,7 +522,7 @@ class ColoredGibbs:
     lambda0: float = 1.0
     backend: str = "ref"  # "ref" | "pallas"
 
-    def init(self, problem: SparseIsing, key, s0=None) -> KernelState:
+    def init(self, problem: SparseIsing, key, s0=None, faults=None) -> KernelState:
         """Initial state; requires the problem's color_masks."""
         if getattr(problem, "color_masks", None) is None:
             raise ValueError(
@@ -466,12 +532,30 @@ class ColoredGibbs:
             )
         if s0 is None:
             s0 = random_init(key, state_shape(problem))
+        if faults is not None:
+            s0 = faults.apply_stuck(s0)
         return KernelState(s=s0, t=jnp.asarray(0.0, jnp.float32), e=None, aux=())
 
-    def step(self, problem: SparseIsing, state, key, beta) -> KernelState:
-        """One sweep over the graph's color classes."""
+    def step(self, problem: SparseIsing, state, key, beta, faults=None) -> KernelState:
+        """One sweep over the graph's color classes.
+
+        Faults fold into the color masks (stuck/dropped sites leave their
+        color class for this sweep) and into the bias (one per-sweep field-
+        noise draw shared by all phases), identically on both backends."""
         masks = problem.color_masks  # (C, n) bool
         s = state.s
+        eta = keep = None
+        if faults is not None and (faults.noisy or faults.drops):
+            key, k_noise, k_drop = jax.random.split(key, 3)
+            if faults.noisy:
+                eta = faults.field_noise(k_noise, s.shape)
+            if faults.drops:
+                keep = faults.keep_mask(k_drop, s.shape)
+        stuck = faults.stuck_flat() if faults is not None else None
+        if stuck is not None:
+            masks = masks & ~stuck  # (C, n) & (n,) broadcasts per color
+        if keep is not None:
+            masks = masks & keep
         keys = jax.random.split(key, masks.shape[0])
         if self.backend == "pallas":
             from repro.kernels import ops
@@ -483,15 +567,19 @@ class ColoredGibbs:
                 s[None],
                 problem.nbr_idx,
                 problem.nbr_w,
-                problem.b,
+                problem.b if eta is None else problem.b + eta,
                 u[:, None],
                 masks.astype(s.dtype),
                 beta=beta,
                 mode="kernel",
             )[0]
         else:
+            prob = (
+                problem if eta is None
+                else dataclasses.replace(problem, b=problem.b + eta)
+            )
             for c in range(masks.shape[0]):
-                h = problem.local_fields(s)
+                h = prob.local_fields(s)
                 p_up = glauber.prob_up(beta * h)
                 u = jax.random.uniform(keys[c], s.shape)
                 proposal = jnp.where(u < p_up, 1.0, -1.0).astype(s.dtype)
@@ -533,10 +621,12 @@ class TauLeap:
             return ("ref",)
         return self.backends
 
-    def init(self, problem, key, s0=None) -> KernelState:
+    def init(self, problem, key, s0=None, faults=None) -> KernelState:
         """Initial state (int8-quantized weights under pallas)."""
         if s0 is None:
             s0 = random_init(key, state_shape(problem))
+        if faults is not None:
+            s0 = faults.apply_stuck(s0)
         aux = ()
         if isinstance(problem, LatticeIsing):
             if self.backend == "pallas":
@@ -561,31 +651,59 @@ class TauLeap:
             aux = ops.quantize_dense(problem.J)  # (j_i8, scale), once per run
         return KernelState(s=s0, t=jnp.asarray(0.0, jnp.float32), e=None, aux=aux)
 
-    def step(self, problem, state, key, beta) -> KernelState:
-        """One tau-leap of model time dt: independent thinned flips."""
+    def step(self, problem, state, key, beta, faults=None) -> KernelState:
+        """One tau-leap of model time dt: independent thinned flips.
+
+        Field noise perturbs the pre-beta field (h -> h + eta on the ref
+        paths; bias operand b + eta on the fused Pallas path). Stuck and
+        dropped sites keep their spin: the ref paths freeze/filter the
+        flips, the Pallas path warps their uniform to 1.0 (p_flip < 1
+        always, so u = 1.0 can never flip) — the kernel itself is fault-
+        oblivious. Lattice stuck sites arrive pre-absorbed into the clamp
+        masks via `FaultModel.bind`."""
         s = state.s
+        eta = keep = None
+        if faults is not None and (faults.noisy or faults.drops):
+            key, k_noise, k_drop = jax.random.split(key, 3)
+            if faults.noisy:
+                eta = faults.field_noise(k_noise, s.shape)
+            if faults.drops:
+                keep = faults.keep_mask(k_drop, s.shape)
+        stuck = faults.stuck_flat() if faults is not None else None
         if isinstance(problem, LatticeIsing):
-            h = beta * problem.local_fields(s)
-            s = _tau_leap_flip(s, h, key, self.dt, self.trim, problem.frozen_mask)
+            h = problem.local_fields(s)
+            if eta is not None:
+                h = h + eta
+            s = _tau_leap_flip(
+                s, beta * h, key, self.dt, self.trim, problem.frozen_mask, keep
+            )
             s = problem.apply_clamps(s)
         elif self.backend == "pallas":
             from repro.kernels import ops
 
             j_i8, scale = state.aux
             u = jax.random.uniform(key, s.shape)
+            if stuck is not None or keep is not None:
+                block = (
+                    stuck if keep is None
+                    else (~keep if stuck is None else stuck | ~keep)
+                )
+                u = jnp.where(block, 1.0, u)
             # beta scales the field: h_beta = acc*(beta*scale) + beta*b
             s = ops.tau_leap_step(
                 s[None, :],
                 j_i8,
-                beta * problem.b,
+                beta * problem.b if eta is None else beta * (problem.b + eta),
                 beta * scale,
                 u[None, :],
                 jnp.asarray(self.dt, jnp.float32),
                 mode="kernel",
             )[0]
         else:
-            h = beta * problem.local_fields(s)
-            s = _tau_leap_flip(s, h, key, self.dt, self.trim, None)
+            h = problem.local_fields(s)
+            if eta is not None:
+                h = h + eta
+            s = _tau_leap_flip(s, beta * h, key, self.dt, self.trim, stuck, keep)
         return KernelState(
             s=s, t=state.t + self.dt / self.lambda0, e=None, aux=state.aux
         )
@@ -679,10 +797,17 @@ class CTMC:
             return CTMC_TREE_BLOCK_EVENTS
         return 1
 
-    def init(self, problem, key, s0=None) -> KernelState:
-        """Initial state with fields (and the rate tree on the tree path)."""
+    def init(self, problem, key, s0=None, faults=None) -> KernelState:
+        """Initial state with fields (and the rate tree on the tree path).
+
+        Stuck sites are forced to their stuck values and their rates masked
+        to zero BEFORE the tree is built, so the carried tree's invariant
+        (it holds exactly the rates events are drawn from) survives faults
+        — tree-vs-scan parity is a property of the masked rate table."""
         if s0 is None:
             s0 = random_init(key, state_shape(problem))
+        if faults is not None:
+            s0 = faults.apply_stuck(s0)
         h = problem.local_fields(s0)
         if self.resolved_site_draw(problem) == "tree":
             # Tree at beta=1: fixes the aux pytree structure (see the class
@@ -690,6 +815,9 @@ class CTMC:
             # rebuilds at the step's actual beta before every draw; the
             # sparse step carries tree_beta and rebuilds only on change.
             rates = self.lambda0 * glauber.flip_prob(h, s0)
+            stuck = faults.stuck_flat() if faults is not None else None
+            if stuck is not None:
+                rates = jnp.where(stuck, 0.0, rates)
             tree = event_tree.build(rates)
             if isinstance(problem, SparseIsing):
                 aux = (h, tree, jnp.asarray(1.0, jnp.float32))
@@ -701,15 +829,30 @@ class CTMC:
             s=s0, t=jnp.asarray(0.0, jnp.float32), e=problem.energy(s0), aux=aux
         )
 
-    def step(self, problem, state, key, beta) -> KernelState:
-        """One Gillespie event: dwell time + proportional site draw."""
+    def step(self, problem, state, key, beta, faults=None) -> KernelState:
+        """One Gillespie event: dwell time + proportional site draw.
+
+        Faults perturb the RATE TABLE the event is drawn from — noise on
+        the fields, zero rates at stuck sites — before the tree build /
+        categorical, so both draw paths stay exact samplers of the faulted
+        rates. A dropped event still advances model time (the device
+        waited; the flip was lost). The carried h and the incremental
+        energy always track the TRUE fields of the actual state."""
         tree_draw = self.resolved_site_draw(problem) == "tree"
         if tree_draw and isinstance(problem, SparseIsing):
-            return self._sparse_tree_step(problem, state, key, beta)
+            return self._sparse_tree_step(problem, state, key, beta, faults)
         s = state.s
         h = state.aux[0] if tree_draw else state.aux
+        if faults is not None and (faults.noisy or faults.drops):
+            key, k_noise, k_drop = jax.random.split(key, 3)
         k_dt, k_site = jax.random.split(key)
-        rates = self.lambda0 * glauber.flip_prob(beta * h, s)
+        h_eff = h
+        if faults is not None and faults.noisy:
+            h_eff = h + faults.field_noise(k_noise, h.shape)
+        rates = self.lambda0 * glauber.flip_prob(beta * h_eff, s)
+        stuck = faults.stuck_flat() if faults is not None else None
+        if stuck is not None:
+            rates = jnp.where(stuck, 0.0, rates)
         # At large beta every sigma(2 beta h_i s_i) underflows toward 0 in a
         # frozen cold chain. Dividing by the raw sum would give dt=inf (NaN
         # model time), so clamp the denominator and suppress the flip below
@@ -736,6 +879,8 @@ class CTMC:
             total = jnp.sum(rates)
             i = jax.random.categorical(k_site, jnp.log(rates))
         alive = total > RATE_FLOOR
+        if faults is not None and faults.drops:
+            alive = alive & (jax.random.uniform(k_drop, ()) >= faults.dropout)
         dt = jax.random.exponential(k_dt) / jnp.maximum(total, RATE_FLOOR)
         delta = jnp.where(alive, -2.0 * s[i], 0.0)
         e = state.e + delta * h[i]
@@ -744,7 +889,9 @@ class CTMC:
         aux = (h, tree) if tree_draw else h
         return KernelState(s=s, t=state.t + dt, e=e, aux=aux)
 
-    def _sparse_tree_step(self, problem: SparseIsing, state, key, beta) -> KernelState:
+    def _sparse_tree_step(
+        self, problem: SparseIsing, state, key, beta, faults=None
+    ) -> KernelState:
         """One event with O(max_deg * log n) tree maintenance.
 
         The carried tree holds the CURRENT state's rates at tree_beta, so
@@ -755,34 +902,74 @@ class CTMC:
         neighbors changed rate: scatter-add their leaf deltas over the
         root paths in one `update_many`, with padded slots masked to zero
         delta (their index aliases a live leaf, so a degree mask — not the
-        padding weights — keeps them inert here)."""
+        padding weights — keeps them inert here).
+
+        Faults: stuck rates are masked to zero wherever rates are computed
+        (build and repair), so the tree invariant holds for the masked
+        table. Field noise redraws EVERY leaf each event, so the
+        incremental path degrades to a per-event O(n) rebuild — the repair
+        has nothing to reuse — and the carried tree is left stale (the
+        next event rebuilds before drawing anyway). Dropout discards the
+        flip but keeps the dwell time."""
         s = state.s
         h, tree, tree_beta = state.aux
+        noisy = faults is not None and faults.noisy
+        if faults is not None and (noisy or faults.drops):
+            key, k_noise, k_drop = jax.random.split(key, 3)
         k_dt, k_site = jax.random.split(key)
-        tree = jax.lax.cond(
-            beta == tree_beta,
-            lambda t: t,
-            lambda t: event_tree.build(self.lambda0 * glauber.flip_prob(beta * h, s)),
-            tree,
-        )
-        total = event_tree.total(tree)
+        stuck = faults.stuck_flat() if faults is not None else None
+
+        def masked(rates):
+            """Zero the stuck sites' rates (no-op without a stuck mask)."""
+            return rates if stuck is None else jnp.where(stuck, 0.0, rates)
+
+        if noisy:
+            eta = faults.field_noise(k_noise, h.shape)
+            draw_tree = event_tree.build(
+                masked(self.lambda0 * glauber.flip_prob(beta * (h + eta), s))
+            )
+        else:
+            draw_tree = jax.lax.cond(
+                beta == tree_beta,
+                lambda t: t,
+                lambda t: event_tree.build(
+                    masked(self.lambda0 * glauber.flip_prob(beta * h, s))
+                ),
+                tree,
+            )
+        total = event_tree.total(draw_tree)
         i = jnp.minimum(
-            event_tree.descend(tree, jax.random.uniform(k_site)), problem.n - 1
+            event_tree.descend(draw_tree, jax.random.uniform(k_site)), problem.n - 1
         )
         alive = total > RATE_FLOOR
+        if faults is not None and faults.drops:
+            alive = alive & (jax.random.uniform(k_drop, ()) >= faults.dropout)
         dt = jax.random.exponential(k_dt) / jnp.maximum(total, RATE_FLOOR)
         delta = jnp.where(alive, -2.0 * s[i], 0.0)
         e = state.e + delta * h[i]
         nbr = problem.nbr_idx[i]  # (max_deg,) — padded slots point at i
         h = h.at[nbr].add(problem.nbr_w[i] * delta)  # zero at padded slots
         s = s.at[i].add(delta)
+        if noisy:
+            # Fresh noise invalidates every leaf next event: skip the
+            # repair, carry the stale tree (same pytree structure).
+            return KernelState(
+                s=s, t=state.t + dt, e=e,
+                aux=(h, draw_tree, jnp.asarray(beta, jnp.float32)),
+            )
         affected = jnp.concatenate([i[None], nbr])
         live = jnp.concatenate(
             [jnp.ones((1,), bool), jnp.arange(problem.max_deg) < problem.deg[i]]
         )
-        new_rates = self.lambda0 * glauber.flip_prob(beta * h[affected], s[affected])
-        leaf_delta = jnp.where(live, new_rates - event_tree.leaves_at(tree, affected), 0.0)
-        tree = event_tree.update_many(tree, affected, leaf_delta)
+        new_rates = self.lambda0 * glauber.flip_prob(
+            beta * h[affected], s[affected]
+        )
+        if stuck is not None:
+            new_rates = jnp.where(stuck[affected], 0.0, new_rates)
+        leaf_delta = jnp.where(
+            live, new_rates - event_tree.leaves_at(draw_tree, affected), 0.0
+        )
+        tree = event_tree.update_many(draw_tree, affected, leaf_delta)
         return KernelState(
             s=s, t=state.t + dt, e=e, aux=(h, tree, jnp.asarray(beta, jnp.float32))
         )
@@ -882,7 +1069,7 @@ def _resolve_backend(backend: Optional[str], kernel=None, problem=None) -> Optio
 
 def _run_core(
     problem, kernel, key, s0, betas, e_target, *,
-    n_steps, sample_every, track_hit, unroll=1, diagnostics=False,
+    n_steps, sample_every, track_hit, unroll=1, diagnostics=False, faults=None,
 ):
     """Single-chain scan: the one loop every sampler entry point shares.
 
@@ -897,12 +1084,21 @@ def _run_core(
     betas are pre-split identically either way and the False branch builds
     the exact pre-diagnostics program, so turning it off costs nothing and
     changes nothing; turning it on changes only what is RECORDED (kernels
-    without an incremental energy pay one problem.energy per step)."""
+    without an incremental energy pay one problem.energy per step).
+
+    `faults` is a residual `FaultModel` (already `bind()`-applied by
+    `run()`) or None. When None, kernels are called with the SAME 4-arg
+    signatures as before this parameter existed — the fault-free program
+    is byte-identical for any kernel, including user kernels that never
+    heard of faults."""
     if s0 is None:
         key, k_init = jax.random.split(key)
     else:
         k_init = None
-    state = kernel.init(problem, k_init, s0)
+    if faults is None:
+        state = kernel.init(problem, k_init, s0)
+    else:
+        state = kernel.init(problem, k_init, s0, faults)
     keys = jax.random.split(key, n_steps)
 
     e0 = state.e if state.e is not None else problem.energy(state.s)
@@ -916,7 +1112,10 @@ def _run_core(
         else:
             st, t_hit, hit = carry
         k, beta = inp
-        st_new = kernel.step(problem, st, k, beta)
+        if faults is None:
+            st_new = kernel.step(problem, st, k, beta)
+        else:
+            st_new = kernel.step(problem, st, k, beta, faults)
         e = new_hit = None
         if track_hit or diagnostics:
             e = st_new.e if st_new.e is not None else problem.energy(st_new.s)
@@ -992,12 +1191,12 @@ def _run_core(
 )
 def _run_single(
     problem, kernel, key, s0, betas, e_target, n_steps, sample_every, track_hit,
-    unroll, diagnostics,
+    unroll, diagnostics, faults,
 ):
     return _run_core(
         problem, kernel, key, s0, betas, e_target,
         n_steps=n_steps, sample_every=sample_every, track_hit=track_hit, unroll=unroll,
-        diagnostics=diagnostics,
+        diagnostics=diagnostics, faults=faults,
     )
 
 
@@ -1009,14 +1208,16 @@ def _run_single(
 )
 def _run_batched(
     problem, kernel, keys, s0, betas, e_target, n_steps, sample_every, track_hit,
-    n_chains, unroll, diagnostics,
+    n_chains, unroll, diagnostics, faults,
 ):
     def one(key, s0_c, betas_c):
-        """One chain's full scan (vmapped over chains)."""
+        """One chain's full scan (vmapped over chains; `faults` — like
+        `problem` — is chain-invariant, so it rides in as a closure
+        constant rather than a mapped axis)."""
         return _run_core(
             problem, kernel, key, s0_c, betas_c, e_target,
             n_steps=n_steps, sample_every=sample_every, track_hit=track_hit,
-            unroll=unroll, diagnostics=diagnostics,
+            unroll=unroll, diagnostics=diagnostics, faults=faults,
         )
 
     in_axes = (0, None if s0 is None else 0, 0 if betas.ndim == 2 else None)
@@ -1049,6 +1250,7 @@ def run(
     unroll: Union[int, str] = "auto",
     timeit: bool = False,
     diagnostics: bool = False,
+    faults: Optional[FaultModel] = None,
 ) -> RunResult:
     """Run `n_steps` of `kernel` on `problem` — the single sampling driver.
 
@@ -1093,6 +1295,15 @@ def run(
         False (the default) compiles the exact pre-diagnostics program.
         Kernels without an incremental energy (tau_leap, the Gibbs sweeps)
         pay one `problem.energy` per step while it is on.
+      faults: optional `repro.core.faults.FaultModel` — simulate device
+        non-idealities (stuck spins, b-bit coupling quantization, field
+        noise, update dropout; see that module for per-kernel semantics).
+        Validated host-side, then `bind()` is applied once: quantization
+        rewrites the couplings, lattice stuck masks are absorbed into the
+        clamp epilogue, and only the residual dynamic faults reach the
+        kernels. None (the default) compiles the exact fault-free program
+        — results are bit-identical to a run that never passed the
+        argument, for every kernel and backend.
     """
     if isinstance(kernel, str):
         kernel = get_kernel(kernel)
@@ -1100,6 +1311,24 @@ def run(
     resolved = _resolve_backend(backend, kernel, problem)
     if resolved is not None and hasattr(kernel, "backend") and kernel.backend != resolved:
         kernel = dataclasses.replace(kernel, backend=resolved)
+
+    if faults is not None:
+        faults.validate(problem)
+        problem, faults = faults.bind(problem)
+    # Fail loudly on a problem whose couplings/biases cannot produce finite
+    # energies (NaN/Inf snuck past construction, or an over-aggressive
+    # fault model) — otherwise every recorded energy is NaN and the TTS
+    # fits in `observables.fit_scaling` silently degrade. The probe is a
+    # host-side check: when run() is itself being traced (e.g. inside the
+    # jitted tempering loop) the energy is a tracer and the check is
+    # skipped — concreteness is gone, and the caller's own entry into jit
+    # already went through an un-traced run() or can probe explicitly.
+    e_probe = problem.energy(jnp.ones(state_shape(problem)))
+    if not isinstance(e_probe, jax.core.Tracer) and not bool(jnp.isfinite(e_probe)):
+        raise NonFiniteEnergyError(
+            f"problem energy is non-finite (probe energy {float(e_probe)}); "
+            "check the couplings/biases (and any FaultModel) for NaN/Inf"
+        )
 
     betas = resolve_schedule(schedule, n_steps, n_chains)
     track_hit = first_hit is not None
@@ -1109,13 +1338,13 @@ def run(
     if n_chains == 1:
         call = lambda: _run_single(
             problem, kernel, key, s0, betas, e_target, n_steps, sample_every,
-            track_hit, unroll, diagnostics,
+            track_hit, unroll, diagnostics, faults,
         )
     else:
         keys = jax.random.split(key, n_chains)
         call = lambda: _run_batched(
             problem, kernel, keys, s0, betas, e_target, n_steps, sample_every,
-            track_hit, n_chains, unroll, diagnostics,
+            track_hit, n_chains, unroll, diagnostics, faults,
         )
 
     if not timeit:

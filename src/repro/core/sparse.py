@@ -222,6 +222,11 @@ class SparseIsing:
             )
         if idx.min(initial=0) < 0 or idx.max(initial=0) >= n:
             raise ValueError(f"nbr_idx out of range [0, {n})")
+        if not np.all(np.isfinite(w)) or not np.all(np.isfinite(np.asarray(self.b))):
+            raise ValueError(
+                "nbr_w/b must be finite: NaN/Inf couplings would silently "
+                "poison every recorded energy and the downstream TTS fits"
+            )
         slot = np.arange(md)[None, :]
         pad = slot >= deg[:, None]
         if np.any(w[pad] != 0.0):

@@ -28,3 +28,20 @@ def good_shape_is_static(x):
 def good_host_code(x):
     # not jitted: numpy on a plain array is fine
     return np.sum(x)
+
+
+# --- fault-model threading (repro.core.faults) -----------------------------
+
+
+@jax.jit
+def bad_fault_severity_from_tracer(s, keep_mask):
+    # reading an injected-fault statistic back to the host mid-trace
+    rate = float(keep_mask.mean())  # expect[PASS003]
+    return s * rate
+
+
+@jax.jit
+def good_fault_noise_stays_traced(s, noise_std):
+    # severity scales a traced draw; nothing leaves the device
+    eta = noise_std * jnp.ones_like(s)
+    return s + eta

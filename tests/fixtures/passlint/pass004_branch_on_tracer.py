@@ -33,3 +33,22 @@ def good_shape_branch(x):
     if x.ndim == 2:  # shapes are static under trace
         return x.sum(axis=1)
     return x
+
+
+# --- fault-model threading (repro.core.faults) -----------------------------
+
+
+@jax.jit
+def bad_branch_on_stuck_mask(s, stuck_mask):
+    # a traced fault mask cannot steer python control flow mid-scan
+    if stuck_mask.any():  # expect[PASS004]
+        return jnp.where(stuck_mask, 1.0, s)
+    return s
+
+
+def good_static_fault_config_branch(s, field_noise_std=0.0):
+    # host-level severity config: the branch picks which program to trace
+    # (the FaultModel pattern — noisy/drops are pytree metadata, not data)
+    if field_noise_std > 0.0:
+        return jax.jit(lambda x: x + field_noise_std)(s)
+    return s

@@ -531,3 +531,185 @@ def test_committed_pr7_report_has_scaling_section():
         assert any(
             g["pvalue"] is not None for g in rec["gap_vs_sync"].values()
         )
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe harness: fault entries, isolation, timeout/retry, partial reports
+# ---------------------------------------------------------------------------
+
+from benchmarks import robustness as robustness_mod  # noqa: E402
+
+
+def test_entry_dict_roundtrip_is_exact():
+    """The subprocess wire format: entry -> dict -> JSON -> entry must be
+    lossless, including the tuple-of-pairs fields JSON turns into lists."""
+    entry = _tiny_entry(
+        problem_args=(("dense", True),), faults=(("quantize_bits", 4),
+                                                 ("stuck_fraction", 0.1)),
+        unroll=4,
+    )
+    wire = json.loads(json.dumps(suites.entry_to_dict(entry)))
+    assert suites.entry_from_dict(wire) == entry
+    # ...and for the default-everything entry too
+    plain = _tiny_entry()
+    assert suites.entry_from_dict(json.loads(json.dumps(suites.entry_to_dict(plain)))) == plain
+
+
+def test_fault_entries_in_suite_and_id():
+    """The smoke suite measures at least one fault-injected entry, and the
+    fault spec is part of the record identity (a faulted run must never be
+    baselined against the ideal one)."""
+    entries = suites.smoke_suite()
+    faulted = [e for e in entries if e.faults]
+    assert faulted, "smoke suite has no fault-injection entry"
+    assert all("/f[" in e.id for e in faulted)
+    ideal = _tiny_entry()
+    assert ideal.id != _tiny_entry(faults=(("quantize_bits", 4),)).id
+    # make_faults: deterministic stuck draw keyed off the entry id
+    e = faulted[0]
+    zoo = e.make_problem()
+    f1, f2 = e.make_faults(zoo.problem), e.make_faults(zoo.problem)
+    assert f1 is not None
+    np.testing.assert_array_equal(np.asarray(f1.stuck_mask), np.asarray(f2.stuck_mask))
+    assert _tiny_entry().make_faults(zoo.problem) is None
+    with pytest.raises(ValueError, match="unknown fault"):
+        _tiny_entry(faults=(("warp", 9),)).make_faults(zoo.problem)
+
+
+def test_run_entry_records_fault_description():
+    rec = runner.run_entry(_tiny_entry(faults=(("quantize_bits", 4),)))
+    assert rec["status"] == "ok"
+    assert rec["faults"] == {"quantize_bits": 4}
+    assert runner.run_entry(_tiny_entry())["faults"] is None
+    json.dumps(rec)
+
+
+def test_timeout_requires_isolate():
+    with pytest.raises(ValueError, match="isolate"):
+        runner.run_suite([_tiny_entry()], log=lambda m: None, timeout_s=5.0)
+    with pytest.raises(SystemExit):  # the CLI enforces the same invariant
+        run_cli.main(["--smoke", "--timeout", "5"])
+
+
+def test_suite_degrades_on_hang_and_crash(tmp_path, monkeypatch):
+    """The acceptance scenario: a suite with one deliberately hanging entry
+    and one crashing entry completes, records status timeout/error for
+    them (timeout immediately, the crash after one retry), measures the
+    healthy entry, and still writes a schema-valid strict-JSON report."""
+    entries = [
+        _tiny_entry(seed=0),
+        _tiny_entry(seed=1),
+        _tiny_entry(seed=2, faults=(("quantize_bits", 4),)),
+    ]
+    monkeypatch.setenv("BENCH_FAULT_INJECT", json.dumps({
+        entries[0].id: "hang", entries[1].id: "crash",
+    }))
+    logs = []
+    records = runner.run_suite(
+        entries, log=logs.append, timeout_s=60.0, isolate=True,
+        retries=1, backoff_s=0.05,
+    )
+    by_id = {r["id"]: r for r in records}
+    assert by_id[entries[0].id]["status"] == "timeout"
+    assert by_id[entries[0].id]["attempts"] == 1  # hangs are never retried
+    assert "timeout" in by_id[entries[0].id]["error"]
+    assert by_id[entries[1].id]["status"] == "error"
+    assert by_id[entries[1].id]["attempts"] == 2  # one retry with backoff
+    assert "injected crash" in by_id[entries[1].id]["error"]
+    ok = by_id[entries[2].id]
+    assert ok["status"] == "ok" and ok["chain_steps_per_s"] > 0
+    assert ok["faults"] == {"quantize_bits": 4}
+
+    rep = report_mod.make_report("degraded", "smoke", records)
+    assert rep["statuses"] == {"timeout": 1, "error": 1, "ok": 1}
+    path = report_mod.write_report(rep, str(tmp_path))
+    loaded = report_mod.load(path)  # schema-valid, strict JSON
+    assert len(loaded["records"]) == 3
+    # only the measured entry reaches the baseline / nightly rollup
+    assert set(report_mod.to_baseline(loaded)["throughput"]) == {entries[2].id}
+    night = report_mod.nightly_record(loaded)
+    assert night["statuses"] == rep["statuses"]
+    assert set(night["kernels"]) == {"tau_leap"}
+    assert night["kernels"]["tau_leap"]["entries"] == 1
+
+
+def test_status_filtering_in_baseline_gate_and_rollup():
+    """Non-ok records are excluded from gating but visible as missing; a
+    pre-status report (no status field at all) still counts everything."""
+    ok_rec = {"id": "a", "status": "ok", "kernel": "ctmc",
+              "chain_steps_per_s": 100.0, "steps_per_s": 100.0,
+              "wall_s": 1.0, "hit_rate": 1.0}
+    bad_rec = {"id": "b", "status": "timeout", "error": "budget",
+               "kernel": "ctmc"}
+    assert [r["id"] for r in report_mod.ok_records([ok_rec, bad_rec])] == ["a"]
+    assert report_mod.status_counts([ok_rec, bad_rec]) == {"ok": 1, "timeout": 1}
+    legacy = {"id": "c", "chain_steps_per_s": 1.0}  # pre-status schema
+    assert report_mod.ok_records([legacy]) == [legacy]
+
+    baseline = report_mod.to_baseline(
+        report_mod.make_report("base", "smoke", [
+            ok_rec, dict(ok_rec, id="b", status="ok"),
+        ])
+    )
+    baseline["host"]["ci"] = True
+    ok, summary = report_mod.compare_to_baseline(
+        report_mod.make_report("now", "smoke", [ok_rec, bad_rec]),
+        baseline, threshold=0.30,
+    )
+    assert ok  # the timed-out entry does not gate...
+    assert summary["missing_ids"] == ["b"]  # ...but is loudly missing
+
+
+def test_atomic_report_writes_survive_midwrite_failure(tmp_path):
+    """Satellite: a writer that dies mid-write must leave the previous
+    complete file untouched and no tmp debris (tmp + os.replace)."""
+    path = str(tmp_path / "BENCH_nightly.json")
+    rep = _fake_full_report()
+    rep["host"]["commit"] = "sha-a"
+    report_mod.append_nightly(rep, path)
+    before = open(path).read()
+    # NaN is unserializable under allow_nan=False: the dump dies after the
+    # tmp file is partially written — exactly a mid-write crash.
+    with pytest.raises(ValueError):
+        report_mod._atomic_write_json(path, {"x": float("nan")})
+    assert open(path).read() == before
+    import os
+
+    assert os.listdir(tmp_path) == ["BENCH_nightly.json"]  # no tmp debris
+    # the next good write goes through
+    report_mod._atomic_write_json(path, {"ok": True})
+    assert json.loads(open(path).read()) == {"ok": True}
+
+
+def test_report_embeds_robustness_section(tmp_path, monkeypatch):
+    fake = {"schema_version": robustness_mod.ROBUSTNESS_SCHEMA_VERSION,
+            "grid": "tinygrid", "instances": [], "sanity": [], "sanity_ok": True}
+    rep = report_mod.make_report("r", "smoke", [], robustness=fake)
+    assert rep["robustness"]["sanity_ok"] is True
+    assert "robustness" not in report_mod.make_report("r", "smoke", [])
+    # the CLI wires --robustness through to the report
+    monkeypatch.setitem(suites.SUITES, "tiny", lambda: [_tiny_entry()])
+    monkeypatch.setitem(robustness_mod.SWEEP_SPECS, "tinygrid", [])
+    monkeypatch.setattr(
+        robustness_mod, "robustness_section", lambda grid, log=print: dict(fake, grid=grid)
+    )
+    rc = run_cli.main([
+        "--suite", "tiny", "--tag", "rb", "--out", str(tmp_path),
+        "--robustness", "tinygrid",
+    ])
+    assert rc == 0
+    rep = report_mod.load(str(tmp_path / "BENCH_rb.json"))
+    assert rep["robustness"]["grid"] == "tinygrid"
+
+
+def test_robustness_grids_cover_acceptance_axes():
+    """>= 3 levels per severity axis, and every committed grid sweeps one
+    dense SK and one sparse 3-regular max-cut instance."""
+    assert len(robustness_mod.QUANTIZE_BITS_LEVELS) >= 3
+    assert len(robustness_mod.STUCK_FRACTION_LEVELS) >= 3
+    assert 0.0 in robustness_mod.STUCK_FRACTION_LEVELS
+    for grid, specs in robustness_mod.SWEEP_SPECS.items():
+        assert {s["problem"] for s in specs} >= {"sk", "maxcut3r"}, grid
+        assert grid in robustness_mod.SANITY_SPECS
+    with pytest.raises(KeyError, match="grid"):
+        robustness_mod.robustness_section("warp", log=lambda m: None)

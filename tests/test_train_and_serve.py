@@ -186,3 +186,38 @@ def test_serve_matches_manual_decode():
         toks.append(int(jnp.argmax(logits[0])))
         pos += 1
     assert out == toks
+
+
+def test_checkpoint_kill_midwrite_resumes_from_previous(tmp_path, monkeypatch):
+    """Atomicity: a save killed mid-write (before the directory rename, or
+    leaving a step dir with no COMMIT marker) must be invisible — the
+    previous complete checkpoint stays the resume point and restores clean."""
+    tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4), "step": np.int32(1)}
+    d = str(tmp_path)
+    checkpoint.save(d, 1, tree, n_shards=2)
+    assert checkpoint.latest_step(d) == 1
+
+    # Crash mode 1: killed before the atomic rename — only tmp debris exists.
+    import os as os_mod
+
+    real_replace = os_mod.replace
+
+    def killed(src, dst):
+        raise KeyboardInterrupt("simulated kill mid-save")
+
+    monkeypatch.setattr(os_mod, "replace", killed)
+    with pytest.raises(KeyboardInterrupt):
+        checkpoint.save(d, 2, {"w": tree["w"] * 2, "step": np.int32(2)}, n_shards=2)
+    monkeypatch.setattr(os_mod, "replace", real_replace)
+    assert checkpoint.latest_step(d) == 1  # step 2 never became visible
+
+    # Crash mode 2: a step dir missing its COMMIT marker (half-copied by an
+    # external tool) must be ignored by latest_step.
+    half = os.path.join(d, "step_000000003")
+    os.makedirs(half)
+    with open(os.path.join(half, "manifest.json"), "w") as f:
+        f.write("{}")
+    assert checkpoint.latest_step(d) == 1
+
+    restored = checkpoint.restore(d, checkpoint.latest_step(d), tree)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), tree["w"])
